@@ -1,0 +1,49 @@
+"""FedADP ablations (beyond-paper, DESIGN.md §2):
+
+  * narrow_mode: paper Alg. 3 (lossy mass redistribution) vs the
+    function-preserving fold inverse of Alg. 2,
+  * filler: zero (paper — uncovered regions pull the average toward the
+    identity filler) vs global (FedADP-U — the server keeps its values).
+
+Run via FEDADP_BENCH_ONLY=ablations; included in the default set only
+when FEDADP_BENCH_FULL=1 (it repeats the table1 protocol 4x).
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.configs.vgg_family import scaled, vgg
+from repro.core import VGGFamily
+from repro.data import EASY, MEDIUM, ClientSampler, image_classification, iid_partition
+from repro.fl import FLRunConfig, Simulator
+
+VARIANTS = (
+    ("paper-zero", "paper", "zero"),        # the paper's FedADP
+    ("fold-zero", "fold", "zero"),
+    ("paper-global", "paper", "global"),    # FedADP-U
+    ("fold-global", "fold", "global"),
+)
+
+
+def main(csv: List[str]):
+    full = os.environ.get("FEDADP_BENCH_FULL") == "1"
+    rounds = 16 if full else 6
+    n = 2400 if full else 1200
+    archs = ["vgg13", "vgg15", "vgg16-wider", "vgg19"] * 2
+    cfgs = [scaled(vgg(a), 0.125, 64) for a in archs]
+    task = MEDIUM
+    data = image_classification(task, n, seed=3)
+    test = image_classification(task, 500, seed=777)
+    parts = iid_partition(n, len(cfgs), seed=3)
+    for name, narrow, filler in VARIANTS:
+        samplers = [ClientSampler(data, p, round_fraction=0.3, batch_size=32,
+                                  seed=i) for i, p in enumerate(parts)]
+        rc = FLRunConfig(method="fedadp", rounds=rounds, local_epochs=1,
+                         lr=0.05, momentum=0.9, narrow_mode=narrow,
+                         filler=filler, eval_every=max(1, rounds // 3))
+        res = Simulator(VGGFamily(), cfgs, samplers, rc, test).run()
+        csv.append(f"ablation/fedadp/{name},{res['wall_s']*1e6:.0f},"
+                   f"acc={res['final_acc']:.4f}|hist="
+                   + "|".join(f"{a:.3f}" for a in res["history"]))
+    return csv

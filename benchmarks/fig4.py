@@ -1,0 +1,40 @@
+"""Fig. 4 proxy: convergence curves of the four methods.
+
+The paper's Fig. 4 claim: FedADP and FlexiFed converge at similar speed,
+both far faster than Clustered-FL / Standalone. We measure rounds-to-
+threshold on the synthetic easy task and report the curves.
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from benchmarks.table1 import run_task
+from repro.data import EASY
+
+
+def rounds_to(history, frac_of_best):
+    best = max(h for m in history.values() for h in m)
+    thr = frac_of_best * best
+    out = {}
+    for m, h in history.items():
+        hit = next((i for i, a in enumerate(h) if a >= thr), None)
+        out[m] = hit if hit is not None else len(h)
+    return out
+
+
+def main(csv: List[str]):
+    full = os.environ.get("FEDADP_BENCH_FULL") == "1"
+    kw = (dict(n_clients=12, rounds=24, n_train=3000, local_epochs=2) if full
+          else dict(n_clients=6, rounds=8, n_train=1000, local_epochs=1))
+    res = run_task(EASY, seed=1, **kw)
+    hist = {m: res[m]["history"] for m in res}
+    r90 = rounds_to(hist, 0.9)
+    for m, h in hist.items():
+        csv.append(f"fig4/curve/{m},0,history=" +
+                   "|".join(f"{a:.3f}" for a in h))
+    for m, r in r90.items():
+        csv.append(f"fig4/rounds_to_90pct/{m},0,rounds={r}")
+    return csv

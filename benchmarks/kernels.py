@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode, correctness-path) and
+the jnp oracle. On-CPU numbers time the REFERENCE path (interpret mode is
+a correctness tool, not a perf tool); the derived column reports the
+achieved GB/s of the oracle and the kernel's analytic VMEM working set —
+the quantity that matters on the TPU target.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(csv: List[str]):
+    key = jax.random.PRNGKey(0)
+
+    # fedavg: K=20 clients x 4M params
+    from repro.kernels.fedavg import ref as fref
+    K, N = 20, 4_000_000
+    x = jax.random.normal(key, (K, N), jnp.float32)
+    w = jnp.full((K,), 1.0 / K)
+    f = jax.jit(fref.weighted_sum_ref)
+    us = _time(f, x, w)
+    gbs = K * N * 4 / (us / 1e6) / 1e9
+    csv.append(f"kernel/fedavg_ref_{K}x{N},{us:.0f},GBps={gbs:.1f}")
+    csv.append(f"kernel/fedavg_vmem_block,0,bytes={K*4096*4}")
+
+    # netchange widen: 4096 rows, 14336 -> 21504 cols
+    from repro.core.netchange import dup_mapping
+    from repro.kernels.netchange import ref as nref
+    R, old, new = 4096, 14336 // 8, 21504 // 8
+    xw = jax.random.normal(key, (R, old))
+    m = jnp.asarray(dup_mapping(old, new, tag="b"))
+    sc = jnp.ones((new,), jnp.float32)
+    g = jax.jit(nref.widen_ref)
+    us = _time(g, xw, m, sc)
+    csv.append(f"kernel/netchange_widen_ref_{R}x{old}to{new},{us:.0f},"
+               f"GBps={(R*(old+new)*4)/(us/1e6)/1e9:.1f}")
+
+    # swa decode: the long-context serving shape (scaled)
+    from repro.kernels.swa_attention import ref as sref
+    B, KV, G, hd, S = 1, 8, 2, 128, 16384
+    q = jax.random.normal(key, (B, KV, G, hd))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    vv = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    kp = jnp.arange(S)
+    h = jax.jit(lambda *a: sref.decode_ref(*a, window=1024))
+    us = _time(h, q, kk, vv, kp, jnp.int32(S - 1))
+    cache_gb = 2 * B * S * KV * hd * 4 / 1e9
+    csv.append(f"kernel/swa_decode_ref_S{S},{us:.0f},"
+               f"cache_GBps={cache_gb/(us/1e6):.1f}")
+
+    # Pallas interpret-mode correctness spot checks (tiny, not perf)
+    from repro.kernels.fedavg import ops as fops
+    from repro.kernels.swa_attention import ops as sops
+    xs = jax.random.normal(key, (4, 2048))
+    err = float(jnp.abs(fops.weighted_sum(xs, jnp.full((4,), 0.25))
+                        - fref.weighted_sum_ref(xs, jnp.full((4,), 0.25))).max())
+    csv.append(f"kernel/fedavg_pallas_interpret_err,0,max_abs={err:.2e}")
+    S2 = 512
+    k2 = jax.random.normal(key, (1, S2, 2, 64))
+    q2 = jax.random.normal(key, (1, 4, 64))
+    got = sops.decode_attention(q2, k2, k2, jnp.arange(S2), jnp.int32(400),
+                                window=128)
+    want = sref.decode_ref(q2.reshape(1, 2, 2, 64), k2, k2, jnp.arange(S2),
+                           jnp.int32(400), window=128).reshape(1, 4, 64)
+    csv.append(f"kernel/swa_pallas_interpret_err,0,"
+               f"max_abs={float(jnp.abs(got-want).max()):.2e}")
+    return csv

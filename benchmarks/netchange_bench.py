@@ -1,0 +1,33 @@
+"""NetChange transform cost: the per-round overhead FedADP adds on the
+server (down) and per client (up) — Section III's efficiency story."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from repro.configs.vgg_family import scaled, union_config, vgg, PAPER_COHORT
+from repro.core import vggops
+from repro.models import vgg as V
+
+
+def main(csv: List[str]):
+    key = jax.random.PRNGKey(0)
+    cohort = {a: scaled(vgg(a), 0.25, 256) for a in PAPER_COHORT}
+    gcfg = union_config(list(cohort.values()))
+    gp = V.init_params(key, gcfg)
+    for arch in ("vgg13", "vgg16-wider", "vgg19"):
+        cfg = cohort[arch]
+        t0 = time.perf_counter()
+        cp = vggops.down(gp, gcfg, cfg, mode="paper")
+        jax.block_until_ready(jax.tree.leaves(cp)[0])
+        t_down = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        up = vggops.up(cp, cfg, gcfg)
+        jax.block_until_ready(jax.tree.leaves(up)[0])
+        t_up = (time.perf_counter() - t0) * 1e6
+        n = sum(l.size for l in jax.tree.leaves(cp))
+        csv.append(f"netchange/down/{arch},{t_down:.0f},params={n}")
+        csv.append(f"netchange/up/{arch},{t_up:.0f},params={n}")
+    return csv

@@ -1,0 +1,37 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun_single.json (written by launch/dryrun.py --all
+--json ...) and emits one CSV row per (arch x shape): the three terms,
+the dominant bottleneck, and the useful-compute ratio. If artifacts are
+missing this bench reports SKIP rows (the dry-run is a separate, heavier
+pass — see EXPERIMENTS.md §Dry-run for how it was produced).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "dryrun_single.json")
+
+
+def main(csv: List[str]):
+    if not os.path.exists(ART):
+        csv.append("roofline/artifacts,0,SKIP=run launch.dryrun --all --json")
+        return csv
+    with open(ART) as f:
+        results = json.load(f)
+    for r in results:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] != "OK":
+            csv.append(f"{name},0,{r['status']}={r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        t = r["roofline"]
+        csv.append(
+            f"{name},{t['step_s_lower_bound']*1e6:.0f},"
+            f"dominant={t['dominant']}|compute_s={t['compute_s']:.3e}"
+            f"|memory_s={t['memory_s']:.3e}"
+            f"|collective_s={t['collective_s']:.3e}"
+            f"|useful={t['useful_ratio']:.3f}")
+    return csv

@@ -1,0 +1,37 @@
+"""Quickstart: FedADP in ~40 lines.
+
+Three clients with DIFFERENT VGG architectures jointly train one global
+model on synthetic image classification; compare against standalone local
+training after a few rounds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.vgg_family import scaled, vgg
+from repro.core import VGGFamily
+from repro.data import EASY, ClientSampler, image_classification, iid_partition
+from repro.fl import FLRunConfig, Simulator
+
+
+def main():
+    # heterogeneous cohort: every client runs a different architecture
+    client_cfgs = [scaled(vgg(a), 0.125, 64)
+                   for a in ("vgg13", "vgg16-wider", "vgg19")
+                   for _ in range(2)]
+    data = image_classification(EASY, 1200, seed=0)
+    test = image_classification(EASY, 400, seed=99)
+    parts = iid_partition(1200, len(client_cfgs), seed=0)
+
+    for method in ("fedadp", "standalone"):
+        samplers = [ClientSampler(data, p, round_fraction=0.5, batch_size=32,
+                                  seed=i) for i, p in enumerate(parts)]
+        cfg = FLRunConfig(method=method, rounds=6, local_epochs=2, lr=0.05,
+                          momentum=0.9, eval_every=2)
+        res = Simulator(VGGFamily(), client_cfgs, samplers, cfg, test).run()
+        print(f"{method:11s} accuracy by round: "
+              + "  ".join(f"{a:.3f}" for a in res["history"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Pytree checkpointing: npz payload + structure manifest.
+
+Path-keyed (stable across pytree registration details), dtype-preserving,
+and atomic (write temp + rename). Sufficient for single-host jobs and the
+FL server state; a production multi-host deployment would swap in a
+sharded array-io backend behind the same two calls.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+_VIEW = {2: np.uint16, 1: np.uint8}  # ml_dtypes (bf16/fp8) -> raw view
+
+
+def _to_native(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind in "fiub" and arr.dtype.str.lstrip("<>|=") in (
+            "f2", "f4", "f8", "i1", "i2", "i4", "i8", "u1", "u2", "u4",
+            "u8", "b1"):
+        return arr
+    return arr.view(_VIEW[arr.dtype.itemsize])
+
+
+def _from_native(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    try:
+        want = np.dtype(dtype_str)
+    except TypeError:
+        import ml_dtypes
+        want = np.dtype(getattr(ml_dtypes, dtype_str))
+    if arr.dtype == want:
+        return arr
+    if arr.dtype.itemsize == want.itemsize and arr.dtype.kind == "u":
+        return arr.view(want)
+    return arr.astype(want)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree, *, extra: Dict[str, Any] | None = None):
+    flat = _flatten(tree)
+    manifest = {
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, __manifest__=json.dumps(manifest),
+             **{k.replace("/", "§"): _to_native(v) for k, v in flat.items()})
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like=None):
+    """Load a checkpoint. If ``like`` (a template pytree) is given, values
+    are arranged into its structure; otherwise a nested dict is returned."""
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(str(data["__manifest__"]))
+    flat = {k: _from_native(data[k.replace("/", "§")],
+                            manifest["dtypes"][k])
+            for k in manifest["keys"]}
+    if like is None:
+        nested: Dict[str, Any] = {}
+        for k, v in flat.items():
+            cur = nested
+            parts = k.split("/")
+            for p in parts[:-1]:
+                cur = cur.setdefault(p, {})
+            cur[parts[-1]] = v
+        return nested, manifest["extra"]
+
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(like)
+    out = []
+    for path_, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+    return (jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out), manifest["extra"])

@@ -1,0 +1,47 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned architecture."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    EncoderConfig,
+    FrontendConfig,
+    InputShape,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    active_param_count,
+    param_count,
+    reduced,
+)
+
+ARCH_IDS = (
+    "gemma3-27b",
+    "glm4-9b",
+    "mixtral-8x7b",
+    "xlstm-125m",
+    "command-r-plus-104b",
+    "deepseek-v2-236b",
+    "gemma-7b",
+    "recurrentgemma-9b",
+    "whisper-small",
+    "internvl2-1b",
+)
+
+_MODULES: Dict[str, str] = {a: a.replace("-", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg: ModelConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

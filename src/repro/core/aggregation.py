@@ -1,0 +1,57 @@
+"""Model aggregation (paper Eq. 1-2): weighted FedAvg in the unified space.
+
+Two layouts:
+  * list-of-trees   — server-side aggregation of K client pytrees,
+  * stacked tree    — every leaf has a leading K axis (the unified-space
+                      simulation layout); hot path backed by the Pallas
+                      ``fedavg`` kernel on TPU (jnp fallback elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def client_weights(n_samples: Sequence[int]) -> np.ndarray:
+    """W_k = n_k / n  (paper Eq. 2)."""
+    n = np.asarray(n_samples, np.float64)
+    return (n / n.sum()).astype(np.float32)
+
+
+def fedavg(trees: Sequence, weights) -> object:
+    """omega^{t+1} = sum_k W_k omega_k  (paper Eq. 1)."""
+    w = jnp.asarray(weights)
+    assert len(trees) == w.shape[0]
+
+    def agg(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for i in range(1, len(leaves)):
+            acc = acc + leaves[i].astype(jnp.float32) * w[i]
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(agg, *trees)
+
+
+def fedavg_stacked(stacked, weights, *, use_kernel: bool = False):
+    """Aggregate a stacked tree: every leaf (K, ...) -> (...)."""
+    w = jnp.asarray(weights, jnp.float32)
+
+    if use_kernel:
+        from repro.kernels.fedavg import ops as kops
+
+        def agg(leaf):
+            return kops.weighted_sum(leaf, w).astype(leaf.dtype)
+    else:
+        def agg(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+            out = jnp.einsum("k,kn->n", w, flat)
+            return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree.map(agg, stacked)
+
+
+def stack_trees(trees: Sequence):
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *trees)

@@ -1,0 +1,116 @@
+"""Baselines from the paper's evaluation (Section IV.A.3).
+
+  * Standalone    — purely local training, no aggregation.
+  * Clustered-FL  — clients clustered by identical architecture; FedAvg
+    within each cluster (Sattler et al., model-agnostic clustering keyed
+    here on architecture identity, the setting the paper evaluates).
+  * FlexiFed (Clustered-Common) — the longest common PREFIX of layers
+    (identical shape, scanning the sequential chain from the input) is
+    aggregated across ALL clients; the remaining (personalized) layers are
+    aggregated within same-architecture clusters.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import client_weights, fedavg
+
+
+def _cluster_ids(cfgs) -> Dict[str, List[int]]:
+    out: Dict[str, List[int]] = defaultdict(list)
+    for i, c in enumerate(cfgs):
+        out[c.name].append(i)
+    return dict(out)
+
+
+class Standalone:
+    def __init__(self, client_cfgs, n_samples):
+        self.client_cfgs = list(client_cfgs)
+
+    def round(self, client_params: List, local_train: Callable, round_idx: int):
+        return [local_train(k, p) for k, p in enumerate(client_params)]
+
+
+class ClusteredFL:
+    def __init__(self, client_cfgs, n_samples):
+        self.client_cfgs = list(client_cfgs)
+        self.n_samples = np.asarray(n_samples, np.float64)
+        self.clusters = _cluster_ids(self.client_cfgs)
+
+    def round(self, client_params: List, local_train: Callable, round_idx: int):
+        new = [local_train(k, p) for k, p in enumerate(client_params)]
+        for ids in self.clusters.values():
+            w = client_weights(self.n_samples[ids])
+            agg = fedavg([new[i] for i in ids], w)
+            for i in ids:
+                new[i] = agg
+        return new
+
+
+class FlexiFed:
+    """Clustered-Common strategy. ``chain_fn(cfg, params)`` must return the
+    ordered list of (layer-id, leaf-paths) pairs of the sequential chain."""
+
+    def __init__(self, client_cfgs, n_samples, chain_fn):
+        self.client_cfgs = list(client_cfgs)
+        self.n_samples = np.asarray(n_samples, np.float64)
+        self.clusters = _cluster_ids(self.client_cfgs)
+        self.chain_fn = chain_fn
+
+    def _common_prefix(self, client_params) -> List:
+        chains = [self.chain_fn(cfg, p)
+                  for cfg, p in zip(self.client_cfgs, client_params)]
+        common = []
+        for pos in range(min(len(c) for c in chains)):
+            ids = {c[pos][0] for c in chains}
+            shapes0 = [l.shape for l in jax.tree.leaves(chains[0][pos][1])]
+            same_shape = all(
+                [l.shape for l in jax.tree.leaves(c[pos][1])] == shapes0
+                for c in chains)
+            if len(ids) == 1 and same_shape:
+                common.append(pos)
+            else:
+                break
+        return common
+
+    def round(self, client_params: List, local_train: Callable, round_idx: int):
+        new = [local_train(k, p) for k, p in enumerate(client_params)]
+        chains = [self.chain_fn(cfg, p)
+                  for cfg, p in zip(self.client_cfgs, new)]
+        common = self._common_prefix(new)
+        # aggregate the common prefix across ALL clients
+        w_all = client_weights(self.n_samples)
+        for pos in common:
+            agg = fedavg([chains[i][pos][1] for i in range(len(new))], w_all)
+            for i in range(len(new)):
+                _assign(chains[i][pos][1], agg)
+        # aggregate the personalized remainder within clusters
+        for ids in self.clusters.values():
+            w = client_weights(self.n_samples[ids])
+            for pos in range(len(common), len(chains[ids[0]])):
+                agg = fedavg([chains[i][pos][1] for i in ids], w)
+                for i in ids:
+                    _assign(chains[i][pos][1], agg)
+        return new
+
+
+def _assign(container: Dict, values: Dict):
+    for k, v in values.items():
+        container[k] = v
+
+
+def vgg_chain(cfg, params) -> List:
+    """Sequential chain for the VGG family (layer-id, param-dict)."""
+    out = []
+    for si, ws in enumerate(cfg.stages):
+        for li in range(len(ws)):
+            out.append((("conv", si, li, ws[li]),
+                        params["stages"][f"s{si}"][f"c{li}"]))
+    for fi, wd in enumerate(cfg.classifier):
+        out.append((("fc", fi, wd), params["fc"][f"f{fi}"]))
+    out.append((("out",), params["out"]))
+    return out

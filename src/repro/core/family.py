@@ -1,0 +1,78 @@
+"""Family abstraction: the architecture lattice FedADP operates over.
+
+A *family* knows how to (a) compute the union architecture of a cohort,
+(b) move parameters up (client->global) and down (global->client) with
+NetChange, and (c) init/evaluate members. Two concrete families:
+
+  * VGGFamily          — the paper's own setting (conv chains).
+  * TransformerFamily  — beyond-paper: any assigned architecture config,
+                         variants over depth / FFN width / experts / d_rnn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tfamily, vggops
+from repro.configs.vgg_family import VGGConfig, union_config
+
+
+@dataclass(frozen=True)
+class VGGFamily:
+    def union(self, cfgs: Sequence[VGGConfig]) -> VGGConfig:
+        return union_config(list(cfgs))
+
+    def init(self, key, cfg):
+        from repro.models import vgg
+        return vgg.init_params(key, cfg)
+
+    def up(self, params, from_cfg, to_cfg, *, seed=0):
+        return vggops.up(params, from_cfg, to_cfg, seed=seed)
+
+    def down(self, params, from_cfg, to_cfg, *, seed=0, mode="paper"):
+        return vggops.down(params, from_cfg, to_cfg, seed=seed, mode=mode)
+
+    def loss_and_grad(self, cfg):
+        from repro.models import vgg
+
+        def f(params, batch):
+            return jax.value_and_grad(vgg.loss_fn, has_aux=True)(params, cfg, batch)
+        return f
+
+    def evaluate(self, params, cfg, batch):
+        from repro.models import vgg
+        logits = vgg.apply(params, cfg, batch["x"])
+        return float((logits.argmax(-1) == batch["y"]).mean())
+
+
+@dataclass(frozen=True)
+class TransformerFamily:
+    def union(self, cfgs):
+        return tfamily.union(list(cfgs))
+
+    def init(self, key, cfg):
+        from repro.models import transformer as T
+        return T.init_params(key, cfg)
+
+    def up(self, params, from_cfg, to_cfg, *, seed=0):
+        return tfamily.up(params, from_cfg, to_cfg, seed=seed)
+
+    def down(self, params, from_cfg, to_cfg, *, seed=0, mode="paper"):
+        return tfamily.down(params, from_cfg, to_cfg, seed=seed, mode=mode)
+
+    def loss_and_grad(self, cfg):
+        from repro.launch.steps import lm_loss
+
+        def f(params, batch):
+            (loss, aux), g = jax.value_and_grad(lm_loss, has_aux=True)(
+                params, cfg, batch)
+            return (loss, aux), g
+        return f
+
+    def evaluate(self, params, cfg, batch):
+        from repro.launch.steps import lm_loss
+        loss, _ = lm_loss(params, cfg, batch)
+        return float(loss)

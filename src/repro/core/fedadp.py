@@ -1,0 +1,71 @@
+"""FedADP — Algorithm 1 of the paper.
+
+Round t:
+  1. for each selected client k:   omega_k <- NetChange(omega^t, omega_k)
+     (To-Shallower + To-Narrower: server tailors the global model down)
+  2. local training on client k's data
+  3. omega_k <- NetChange(omega_k, omega^t)
+     (To-Deeper + To-Wider: expand back to the global architecture)
+  4. omega^{t+1} <- sum_k W_k omega_k   (FedAvg, Eq. 1-2)
+
+``narrow_mode`` selects the paper's Alg. 3 ("paper") or the beyond-paper
+function-preserving fold inverse ("fold") — compared in ablations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import client_weights, fedavg
+
+
+@dataclass
+class FedADP:
+    family: Any
+    client_cfgs: Sequence[Any]
+    n_samples: Sequence[int]
+    narrow_mode: str = "paper"
+    base_seed: int = 0
+
+    def __post_init__(self):
+        self.global_cfg = self.family.union(list(self.client_cfgs))
+        self.weights = client_weights(self.n_samples)
+
+    def init_global(self, key):
+        return self.family.init(key, self.global_cfg)
+
+    def _seed(self, round_idx: int, k: int) -> int:
+        # one seed per (round, client): the distribute-fold and collect-widen
+        # mappings of a round are mutual inverses.
+        return (self.base_seed * 1_000_003 + round_idx * 997 + k) % (2**31)
+
+    def distribute(self, global_params, round_idx: int, k: int):
+        """Step 1: NetChange(omega^t, omega_k)."""
+        return self.family.down(global_params, self.global_cfg,
+                                self.client_cfgs[k],
+                                seed=self._seed(round_idx, k),
+                                mode=self.narrow_mode)
+
+    def collect(self, client_params, round_idx: int, k: int):
+        """Step 3: NetChange(omega_k, omega^t)."""
+        return self.family.up(client_params, self.client_cfgs[k],
+                              self.global_cfg,
+                              seed=self._seed(round_idx, k))
+
+    def round(self, global_params, local_train: Callable, round_idx: int,
+              selected: Optional[Sequence[int]] = None):
+        """One FedADP round. ``local_train(k, client_params)`` runs the
+        client-side update and returns new client params."""
+        selected = list(selected if selected is not None
+                        else range(len(self.client_cfgs)))
+        expanded = []
+        for k in selected:
+            ck = self.distribute(global_params, round_idx, k)
+            ck = local_train(k, ck)
+            expanded.append(self.collect(ck, round_idx, k))
+        w = self.weights[np.asarray(selected)]
+        w = w / w.sum()
+        return fedavg(expanded, w)

@@ -1,0 +1,137 @@
+"""NetChange — FedADP's structure-transformation primitives (paper §III.B).
+
+Four transforms move a model between architectures of the same family:
+
+  To-Wider   (Alg. 2)  new neurons duplicate randomly-chosen existing ones;
+                       each duplicate group's OUTGOING weights are divided
+                       by the group size  => function preserving (Net2Net).
+  To-Deeper            insert missing layers initialized to identity
+                       (diagonal 1 / zero elsewhere for plain stacks;
+                       zero-output-projection for pre-norm residual blocks).
+  To-Narrower (Alg. 3) delete neurons beyond N_tar; the summed outgoing
+                       weights of deleted neurons are redistributed evenly
+                       (s / N_tar added to each survivor)  => lossy.
+  To-Shallower         drop the layers the target doesn't have.
+
+Interpretation notes (recorded for faithfulness):
+  * Alg. 2's "value v_i" division is applied to outgoing weights — the
+    Net2Net semantics the paper extends and whose function preservation
+    the paper asserts ("the output of the expanded layer remains
+    unchanged").
+  * Alg. 3's redistribution is applied to outgoing weight rows ("their
+    associated weights are evenly redistributed among the remaining
+    neurons"); incoming columns of deleted neurons are removed.
+
+Beyond paper: ``narrow_fold`` — the exact inverse of To-Wider given the
+expansion mapping (mean incoming copies, sum outgoing splits). Function
+preserving when duplicate groups stayed identical; compared against
+Alg. 3 in ablations (EXPERIMENTS.md).
+
+Mappings are deterministic in (tag, old_width, new_width, seed) so the
+server and clients derive identical expansions without communication.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------- mappings
+
+def dup_mapping(old: int, new: int, *, tag: str = "", seed: int = 0) -> np.ndarray:
+    """Mapping m: [new] -> [old]. First ``old`` slots are the identity; the
+    remaining ``new - old`` duplicate sources are chosen uniformly (Alg. 2
+    line 6, "randomly select neuron j") from a deterministic stream."""
+    assert new >= old > 0, (old, new)
+    h = int.from_bytes(hashlib.sha256(f"{tag}:{old}:{new}:{seed}".encode())
+                       .digest()[:8], "big")
+    rng = np.random.default_rng(h)
+    extra = rng.integers(0, old, size=new - old)
+    return np.concatenate([np.arange(old), extra]).astype(np.int32)
+
+
+def mapping_counts(mapping: np.ndarray, old: int) -> np.ndarray:
+    return np.bincount(mapping, minlength=old).astype(np.int32)
+
+
+def head_to_unit_mapping(head_map: np.ndarray, unit: int) -> np.ndarray:
+    """Lift a mapping over groups (heads/experts) to element granularity."""
+    return (head_map[:, None] * unit + np.arange(unit)[None, :]).reshape(-1)
+
+
+# -------------------------------------------------------------- To-Wider
+
+def widen_in(w, mapping, axis: int = -1):
+    """Incoming weights: duplicate columns per ``mapping`` (Alg. 2 l.7-8)."""
+    return jnp.take(w, jnp.asarray(mapping), axis=axis)
+
+
+def widen_out(w, mapping, old: int, axis: int = 0):
+    """Outgoing weights: duplicate rows and divide each duplicate group by
+    its size (Alg. 2 l.11-14)."""
+    counts = mapping_counts(np.asarray(mapping), old)
+    scale = (1.0 / counts[np.asarray(mapping)]).astype(np.float32)
+    out = jnp.take(w, jnp.asarray(mapping), axis=axis)
+    shape = [1] * out.ndim
+    shape[axis] = -1
+    return (out * jnp.asarray(scale).reshape(shape).astype(out.dtype))
+
+
+# ------------------------------------------------------------- To-Narrower
+
+def narrow_in(w, n_tar: int, axis: int = -1):
+    """Incoming weights: drop columns of deleted neurons (> N_tar)."""
+    return jax.lax.slice_in_dim(w, 0, n_tar, axis=axis)
+
+
+def narrow_out_paper(w, n_tar: int, axis: int = 0):
+    """Alg. 3: s = sum of deleted rows; survivors += s / N_tar."""
+    kept = jax.lax.slice_in_dim(w, 0, n_tar, axis=axis)
+    dropped = jax.lax.slice_in_dim(w, n_tar, w.shape[axis], axis=axis)
+    s = dropped.sum(axis=axis, keepdims=True)
+    return kept + (s / n_tar).astype(kept.dtype)
+
+
+def narrow_fold_in(w, mapping, old: int, axis: int = -1):
+    """Beyond-paper inverse of ``widen_in``: mean over each duplicate group."""
+    m = jnp.asarray(mapping)
+    counts = jnp.asarray(mapping_counts(np.asarray(mapping), old))
+    w_moved = jnp.moveaxis(w, axis, 0)
+    summed = jax.ops.segment_sum(w_moved, m, num_segments=old)
+    mean = summed / counts.reshape((-1,) + (1,) * (summed.ndim - 1)).astype(w.dtype)
+    return jnp.moveaxis(mean, 0, axis)
+
+
+def narrow_fold_out(w, mapping, old: int, axis: int = 0):
+    """Beyond-paper inverse of ``widen_out``: sum over each duplicate group."""
+    m = jnp.asarray(mapping)
+    w_moved = jnp.moveaxis(w, axis, 0)
+    summed = jax.ops.segment_sum(w_moved, m, num_segments=old)
+    return jnp.moveaxis(summed, 0, axis)
+
+
+# ----------------------------------------------------- To-Deeper (identity)
+
+def identity_conv(channels: int, ksize: int = 3, dtype=jnp.float32):
+    """3x3 conv kernel acting as identity (center tap = channel diagonal).
+    Exact identity after ReLU since preceding activations are >= 0."""
+    w = jnp.zeros((ksize, ksize, channels, channels), dtype)
+    c = ksize // 2
+    return w.at[c, c].set(jnp.eye(channels, dtype=dtype))
+
+
+def identity_fc(width: int, dtype=jnp.float32):
+    return jnp.eye(width, dtype=dtype)
+
+
+def zero_like_output_proj(params, out_proj_keys: Sequence[str]):
+    """Pre-norm residual identity insert: zero the block's output
+    projections so the residual branch contributes nothing."""
+    def fix(path, leaf):
+        names = [getattr(k, "key", None) for k in path]
+        return jnp.zeros_like(leaf) if any(n in out_proj_keys for n in names) else leaf
+    return jax.tree_util.tree_map_with_path(fix, params)

@@ -1,0 +1,185 @@
+"""NetChange wired to the VGG family — the paper's own setting.
+
+A VGG variant is a sequential chain  conv* (pool) ... conv* (pool) fc* out.
+``up()`` transforms client params to the global architecture (To-Deeper +
+To-Wider, Alg. 2); ``down()`` transforms global params to a client
+architecture (To-Shallower + To-Narrower, Alg. 3 — or the beyond-paper
+``fold`` inverse).
+
+Depth alignment is front-aligned per stage: To-Deeper appends identity
+convs at the END of a stage (exact identity under ReLU), To-Shallower
+drops them from the end. Width ops adjust the *next* layer in the chain;
+the conv->fc flatten boundary is handled by grouping fc rows by channel.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vgg_family import VGGConfig
+from repro.core import netchange as nc
+
+
+def _chain(cfg: VGGConfig) -> List[Tuple]:
+    out = []
+    for si, ws in enumerate(cfg.stages):
+        for li in range(len(ws)):
+            out.append(("conv", si, li))
+    for fi in range(len(cfg.classifier)):
+        out.append(("fc", fi))
+    out.append(("out",))
+    return out
+
+
+def _get(params, node):
+    if node[0] == "conv":
+        return params["stages"][f"s{node[1]}"][f"c{node[2]}"]
+    if node[0] == "fc":
+        return params["fc"][f"f{node[1]}"]
+    return params["out"]
+
+
+def _set(params, node, value):
+    if node[0] == "conv":
+        params["stages"][f"s{node[1]}"][f"c{node[2]}"] = value
+    elif node[0] == "fc":
+        params["fc"][f"f{node[1]}"] = value
+    else:
+        params["out"] = value
+
+
+def _width_of(cfg: VGGConfig, node) -> int:
+    if node[0] == "conv":
+        return cfg.stages[node[1]][node[2]]
+    if node[0] == "fc":
+        return cfg.classifier[node[1]]
+    return cfg.n_classes
+
+
+def _spatial_after_convs(cfg: VGGConfig) -> int:
+    return cfg.image_size // (2 ** len(cfg.stages))
+
+
+def _widen_next_in(nxt, nxt_node, mapping, old, cfg, *, fold=False):
+    """Duplicate (or fold) the incoming channels of the next layer."""
+    w = nxt["w"]
+    if nxt_node[0] == "conv":
+        nxt["w"] = (nc.narrow_fold_out(w, mapping, old, axis=2) if fold
+                    else nc.widen_out(w, mapping, old, axis=2))
+        return nxt
+    # fc after flatten: rows are (spatial, channel) pairs, channel fastest
+    sp = _spatial_after_convs(cfg) ** 2
+    w3 = w.reshape(sp, -1, w.shape[1])
+    w3 = (nc.narrow_fold_out(w3, mapping, old, axis=1) if fold
+          else nc.widen_out(w3, mapping, old, axis=1))
+    nxt["w"] = w3.reshape(-1, w.shape[1])
+    return nxt
+
+
+def _narrow_next_in_paper(nxt, nxt_node, n_tar, cfg):
+    w = nxt["w"]
+    if nxt_node[0] == "conv":
+        nxt["w"] = nc.narrow_out_paper(w, n_tar, axis=2)
+        return nxt
+    sp = _spatial_after_convs(cfg) ** 2
+    w3 = w.reshape(sp, -1, w.shape[1])
+    nxt["w"] = nc.narrow_out_paper(w3, n_tar, axis=1).reshape(-1, w.shape[1])
+    return nxt
+
+
+def _copy(params):
+    return jax.tree.map(lambda x: x, params)
+
+
+def up(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0):
+    """Client -> global: To-Deeper then To-Wider (both function preserving)."""
+    params = _copy(params)
+    # --- To-Deeper: append identity convs at the end of each stage
+    for si, ws_to in enumerate(to_cfg.stages):
+        ws_from = from_cfg.stages[si]
+        assert len(ws_to) >= len(ws_from), (si, ws_from, ws_to)
+        ch = ws_from[-1]
+        stage = params["stages"][f"s{si}"]
+        for li in range(len(ws_from), len(ws_to)):
+            stage[f"c{li}"] = {
+                "w": nc.identity_conv(ch, dtype=stage["c0"]["w"].dtype),
+                "b": jnp.zeros((ch,), stage["c0"]["b"].dtype)}
+    mid_cfg_stages = tuple(
+        tuple(list(from_cfg.stages[si]) +
+              [from_cfg.stages[si][-1]] * (len(to_cfg.stages[si]) - len(from_cfg.stages[si])))
+        for si in range(len(to_cfg.stages)))
+
+    # --- To-Wider over the whole chain (Alg. 2)
+    chain = _chain(to_cfg)
+    cur_widths = {**{("conv", si, li): mid_cfg_stages[si][li]
+                     for si in range(len(mid_cfg_stages))
+                     for li in range(len(mid_cfg_stages[si]))},
+                  **{("fc", fi): from_cfg.classifier[fi]
+                     for fi in range(len(from_cfg.classifier))}}
+    for idx, node in enumerate(chain[:-1]):
+        old = cur_widths[node if node[0] != "conv" else ("conv", node[1], node[2])]
+        new = _width_of(to_cfg, node)
+        if new == old:
+            continue
+        tag = "/".join(map(str, node))
+        mapping = nc.dup_mapping(old, new, tag=tag, seed=seed)
+        layer = dict(_get(params, node))
+        out_axis = 3 if node[0] == "conv" else 1
+        layer["w"] = nc.widen_in(layer["w"], mapping, axis=out_axis)
+        layer["b"] = nc.widen_in(layer["b"], mapping, axis=0)
+        _set(params, node, layer)
+        nxt_node = chain[idx + 1]
+        nxt = dict(_get(params, nxt_node))
+        nxt = _widen_next_in(nxt, nxt_node, mapping, old, to_cfg, fold=False)
+        _set(params, nxt_node, nxt)
+    return params
+
+
+def down(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0,
+         mode: str = "paper"):
+    """Global -> client: To-Narrower (Alg. 3 or fold) then To-Shallower."""
+    assert mode in ("paper", "fold")
+    params = _copy(params)
+    # --- To-Narrower over the chain (widths of layers the client keeps)
+    chain = _chain(from_cfg)
+    for idx, node in enumerate(chain[:-1]):
+        if node[0] == "conv":
+            si, li = node[1], node[2]
+            if li >= len(to_cfg.stages[si]):
+                continue                       # layer will be dropped
+            new = to_cfg.stages[si][li]
+        else:
+            new = to_cfg.classifier[node[1]]
+        old = _width_of(from_cfg, node)
+        if new == old:
+            continue
+        assert new < old
+        layer = dict(_get(params, node))
+        out_axis = 3 if node[0] == "conv" else 1
+        # find the next *kept* layer for the incoming adjustment: for VGG
+        # this is simply the next layer in the chain because within-stage
+        # trailing drops keep channel widths compatible.
+        nxt_node = chain[idx + 1]
+        nxt = dict(_get(params, nxt_node))
+        if mode == "paper":
+            layer["w"] = nc.narrow_in(layer["w"], new, axis=out_axis)
+            layer["b"] = nc.narrow_in(layer["b"], new, axis=0)
+            nxt = _narrow_next_in_paper(nxt, nxt_node, new, from_cfg)
+        else:
+            tag = "/".join(map(str, node))
+            mapping = nc.dup_mapping(new, old, tag=tag, seed=seed)
+            layer["w"] = nc.narrow_fold_in(layer["w"], mapping, new, axis=out_axis)
+            layer["b"] = nc.narrow_fold_in(layer["b"], mapping, new, axis=0)
+            nxt = _widen_next_in(nxt, nxt_node, mapping, new, from_cfg, fold=True)
+        _set(params, node, layer)
+        _set(params, nxt_node, nxt)
+
+    # --- To-Shallower: drop trailing convs per stage
+    for si, ws_to in enumerate(to_cfg.stages):
+        stage = params["stages"][f"s{si}"]
+        for li in range(len(ws_to), len(from_cfg.stages[si])):
+            del stage[f"c{li}"]
+    return params

@@ -1,0 +1,6 @@
+from repro.data.federated import (  # noqa: F401
+    ClientSampler, dirichlet_partition, iid_partition)
+from repro.data.pipeline import LMPipeline  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    EASY, HARD, HARDEST, MEDIUM, TABLE1_TASKS, ImageTaskSpec,
+    image_classification, lm_sequences)

@@ -1,0 +1,1 @@
+from repro.fl.simulator import FLRunConfig, Simulator  # noqa: F401

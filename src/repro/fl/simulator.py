@@ -1,0 +1,144 @@
+"""Federated-learning simulator: the paper's protocol end to end.
+
+Methods: fedadp | flexifed | clustered | standalone  (Section IV).
+
+Protocol knobs follow Section IV.A.4: K clients, full participation,
+local epochs E over 20% of the client's data per round, SGD(lr).
+
+Beyond-paper knobs (ablations in EXPERIMENTS.md):
+  * narrow_mode:  "paper" (Alg. 3) | "fold" (function-preserving inverse)
+  * filler:       "zero"  (paper: expanded regions a client doesn't have
+                  carry zeros / identity filler into the average)
+                  | "global" (FedADP-U: the server substitutes its own
+                  current values for uncovered regions — uncovered
+                  parameters are simply not pulled toward the filler)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedADP, ClusteredFL, FlexiFed, Standalone, vgg_chain
+from repro.core.aggregation import client_weights, fedavg
+from repro.data.federated import ClientSampler
+from repro.optim import sgd
+
+
+@dataclass
+class FLRunConfig:
+    method: str = "fedadp"
+    rounds: int = 20
+    local_epochs: int = 2
+    lr: float = 0.01
+    momentum: float = 0.0
+    narrow_mode: str = "paper"
+    filler: str = "zero"
+    seed: int = 0
+    eval_every: int = 1
+
+
+class Simulator:
+    def __init__(self, family, client_cfgs: Sequence, samplers: List[ClientSampler],
+                 run_cfg: FLRunConfig, eval_batch: Dict[str, np.ndarray]):
+        self.family = family
+        self.client_cfgs = list(client_cfgs)
+        self.samplers = samplers
+        self.cfg = run_cfg
+        self.eval_batch = eval_batch
+        self.n_samples = [s.n_samples for s in samplers]
+        self._grad_fns: Dict[str, Callable] = {}
+        self._opt = sgd(run_cfg.lr, run_cfg.momentum)
+
+    # ------------------------------------------------------------ pieces
+    def _grad_fn(self, cfg):
+        if cfg.name not in self._grad_fns:
+            f = self.family.loss_and_grad(cfg)
+            self._grad_fns[cfg.name] = jax.jit(f)
+        return self._grad_fns[cfg.name]
+
+    def _local_train(self, k: int, params):
+        cfg = self.client_cfgs[k]
+        gf = self._grad_fn(cfg)
+        opt_state = self._opt.init(params)
+        step = 0
+        for batch in self.samplers[k].round_batches(self.cfg.local_epochs):
+            (_, _), grads = gf(params, batch)
+            params, opt_state = self._opt.update(grads, opt_state, params, step)
+            step += 1
+        return params
+
+    def _evaluate_clients(self, client_params) -> float:
+        accs = [self.family.evaluate(p, c, self.eval_batch)
+                for p, c in zip(client_params, self.client_cfgs)]
+        return float(np.mean(accs))
+
+    # -------------------------------------------------------------- runs
+    def run(self, key=None) -> Dict[str, Any]:
+        key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
+        method = self.cfg.method
+        hist: List[float] = []
+        t0 = time.time()
+
+        if method == "fedadp":
+            algo = FedADP(self.family, self.client_cfgs, self.n_samples,
+                          narrow_mode=self.cfg.narrow_mode,
+                          base_seed=self.cfg.seed)
+            gparams = algo.init_global(key)
+            for r in range(self.cfg.rounds):
+                if self.cfg.filler == "global":
+                    gparams = self._round_fedadp_globalfill(algo, gparams, r)
+                else:
+                    gparams = algo.round(gparams, self._local_train, r)
+                if (r + 1) % self.cfg.eval_every == 0:
+                    cps = [algo.distribute(gparams, r + 1, k)
+                           for k in range(len(self.client_cfgs))]
+                    hist.append(self._evaluate_clients(cps))
+            final = [algo.distribute(gparams, self.cfg.rounds, k)
+                     for k in range(len(self.client_cfgs))]
+            return self._result(hist, final, t0, global_params=gparams)
+
+        # per-client-parameter methods
+        client_params = [self.family.init(jax.random.fold_in(key, k), c)
+                         for k, c in enumerate(self.client_cfgs)]
+        if method == "standalone":
+            algo = Standalone(self.client_cfgs, self.n_samples)
+        elif method == "clustered":
+            algo = ClusteredFL(self.client_cfgs, self.n_samples)
+        elif method == "flexifed":
+            algo = FlexiFed(self.client_cfgs, self.n_samples, vgg_chain)
+        else:
+            raise ValueError(method)
+        for r in range(self.cfg.rounds):
+            client_params = algo.round(client_params, self._local_train, r)
+            if (r + 1) % self.cfg.eval_every == 0:
+                hist.append(self._evaluate_clients(client_params))
+        return self._result(hist, client_params, t0)
+
+    def _round_fedadp_globalfill(self, algo: FedADP, gparams, r: int):
+        """FedADP-U: uncovered regions keep the server's values instead of
+        the zero/identity filler (beyond-paper; see module docstring)."""
+        expanded, masks = [], []
+        for k in range(len(self.client_cfgs)):
+            ck = algo.distribute(gparams, r, k)
+            ck = self._local_train(k, ck)
+            up_k = algo.collect(ck, r, k)
+            ones = jax.tree.map(jnp.ones_like, ck)
+            mask = jax.tree.map(lambda m: (jnp.abs(m) > 0).astype(jnp.float32),
+                                algo.collect(ones, r, k))
+            filled = jax.tree.map(lambda u, m, g: u * m + g * (1 - m),
+                                  up_k, mask, gparams)
+            expanded.append(filled)
+        w = algo.weights / algo.weights.sum()
+        return fedavg(expanded, w)
+
+    def _result(self, hist, client_params, t0, global_params=None):
+        return {"history": hist,
+                "final_acc": hist[-1] if hist else None,
+                "client_params": client_params,
+                "global_params": global_params,
+                "wall_s": time.time() - t0}

@@ -1,0 +1,1 @@
+from repro.kernels.fedavg import ops, ref  # noqa: F401

@@ -1,0 +1,28 @@
+"""Jitted public wrapper: aggregate arbitrary-shaped stacked tensors."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.fedavg import LANE, weighted_sum_2d
+
+
+def weighted_sum(stacked, w, *, block: int = 4096, interpret: bool = True):
+    """stacked: (K, *shape); w: (K,) -> (*shape,) fp32.
+
+    Pads the flattened parameter axis to a lane multiple, runs the Pallas
+    kernel, and restores the original shape.
+    """
+    K = stacked.shape[0]
+    shape = stacked.shape[1:]
+    n = int(jnp.prod(jnp.asarray(shape))) if shape else 1
+    flat = stacked.reshape(K, n)
+    pad = (-n) % LANE
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    blk = min(block, flat.shape[1])
+    while flat.shape[1] % blk:
+        blk //= 2
+    out = weighted_sum_2d(flat, w, block=max(blk, LANE) if flat.shape[1] >= LANE else flat.shape[1],
+                          interpret=interpret)
+    return out[:n].reshape(shape)

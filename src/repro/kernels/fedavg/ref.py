@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fedavg aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_sum_ref(x, w):
+    """x: (K, N); w: (K,) -> (N,) fp32."""
+    return jnp.einsum("k,kn->n", w.astype(jnp.float32),
+                      x.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.netchange import ops, ref  # noqa: F401

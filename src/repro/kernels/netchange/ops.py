@@ -1,0 +1,43 @@
+"""Jitted wrapper: NetChange To-Wider on arbitrary matrices.
+
+``widen_in`` (duplicate columns, scale=1) and ``widen_out`` (duplicate +
+1/|group| split) both reduce to one kernel call with different scales.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.netchange.widen import widen_2d
+
+BLK = 256
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w)
+
+
+def widen_cols(x, mapping, *, split: bool = False, interpret: bool = True):
+    """x: (R, old) -> (R, new). split=False duplicates (To-Wider incoming);
+    split=True divides each duplicate group by its size (outgoing)."""
+    mapping = np.asarray(mapping, np.int32)
+    old = x.shape[1]
+    if split:
+        counts = np.bincount(mapping, minlength=old)
+        scale = (1.0 / counts[mapping]).astype(np.float32)
+    else:
+        scale = np.ones(mapping.shape, np.float32)
+    new = mapping.shape[0]
+    xp = _pad_to(x, BLK, 1)
+    xp = _pad_to(xp, BLK, 0)
+    # pad the mapping with pointers to a real (zero-padded) column
+    mp = np.concatenate([mapping, np.zeros(((-new) % BLK,), np.int32)])
+    sp = np.concatenate([scale, np.zeros(((-new) % BLK,), np.float32)])
+    out = widen_2d(xp, jnp.asarray(mp), jnp.asarray(sp), interpret=interpret)
+    return out[: x.shape[0], :new]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the To-Wider expansion kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def widen_ref(x, mapping, scale):
+    """x: (R, old); mapping/scale: (new,) -> (R, new) fp32."""
+    return (jnp.take(x.astype(jnp.float32), mapping, axis=1)
+            * scale.astype(jnp.float32)[None, :])

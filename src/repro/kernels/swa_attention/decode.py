@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: flash decode attention vs a (ring) KV cache, with
+causal + sliding-window masking — the long_500k serving hot path.
+
+One grid cell = (batch b, kv head h, kv-sequence tile s). The G = H/KV
+query heads of the group stay VMEM-resident; the kv tiles stream through
+VMEM with an online-softmax accumulator in scratch (m/l/acc persist across
+the sequential innermost grid dimension — TPU grid semantics). Masking is
+position-based, so ring-buffer caches (slot = pos % W) work unchanged: the
+caller passes each slot's absolute position.
+
+TARGET: TPU. Validated via interpret=True against ``ref.decode_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, block_s: int,
+            n_steps: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (Ts, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)                # (Ts, hd)
+    kpos = kpos_ref[0]                                    # (Ts,)
+    qpos = qpos_ref[0, 0]
+
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.dot(q * scale, k.T,
+                     preferred_element_type=jnp.float32)  # (G, Ts)
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window > 0:
+        valid = valid & (qpos - kpos < window)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_steps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_s", "interpret"))
+def swa_decode(q, k, v, key_pos, q_pos, *, window: int = 0,
+               block_s: int = 512, interpret: bool = True):
+    """q: (B, KV, G, hd); k, v: (B, S, KV, hd); key_pos: (S,) int32 absolute
+    slot positions (-1 = unwritten); q_pos: scalar int32.
+    Returns (B, KV, G, hd) fp32."""
+    B, KV, G, hd = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_steps = S // bs
+    grid = (B, KV, n_steps)
+    qpos_arr = jnp.full((1, 1), q_pos, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, block_s=bs,
+                          n_steps=n_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (0, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),      # m
+            pltpu.VMEM((G, 1), jnp.float32),      # l
+            pltpu.VMEM((G, hd), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(qpos_arr, q, k, v, key_pos.reshape(1, S))

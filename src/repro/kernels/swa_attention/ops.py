@@ -1,0 +1,21 @@
+"""Jitted wrapper matching the model-side decode_attention signature."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.decode import swa_decode
+
+
+def decode_attention(q, k_cache, v_cache, key_pos, q_pos, *, window: int = 0,
+                     block_s: int = 512, interpret: bool = True):
+    """q: (B, H, hd); caches: (B, S, KV, hd); key_pos: (S,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd)
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    out = swa_decode(qr, k_cache, v_cache, key_pos, q_pos, window=window,
+                     block_s=max(bs, 1), interpret=interpret)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: banded (sliding-window) flash attention for PREFILL.
+
+Grid (b, kv_head, q_block, rel_kv_block): each q block of size bq visits
+only the ~(window+bq)/bk kv blocks inside its band — the innermost grid
+dim streams them with an online-softmax accumulator in VMEM scratch, so
+HBM traffic is O(S * window / bk) instead of O(S^2).
+
+The kv block index is clamped at the sequence edges; the kernel recomputes
+the unclamped index and masks fully out-of-range blocks so clamping never
+double-counts a block.
+
+TARGET: TPU. Validated via interpret=True against ``ref.prefill_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kv_start_block(qi, window, bq, bk):
+    # first kv block of q-block qi's band (may be negative; clamped later)
+    return (qi * bq - (window - 1)) // bk
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, bq: int, bk: int, n_kv_blocks: int, n_rel: int,
+            causal: bool):
+    qi = pl.program_id(2)
+    r = pl.program_id(3)
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    first = _kv_start_block(qi, window, bq, bk) if window > 0 else 0
+    nominal = first + r
+    in_range = (nominal >= 0) & (nominal <= (qi * bq + bq - 1) // bk)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (G*bq? no: G,bq,hd)
+    G, bq_, hd = q.shape
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (bk, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    clamped = jnp.clip(nominal, 0, n_kv_blocks - 1)
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq_, bk), 0)
+    kpos = clamped * bk + jax.lax.broadcasted_iota(jnp.int32, (bq_, bk), 1)
+    mask = jnp.broadcast_to(in_range, (bq_, bk))
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+
+    scale = hd ** -0.5
+    s = jax.lax.dot_general(q.reshape(G * bq_, hd) * scale, k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(G, bq_, bk)
+    s = jnp.where(mask[None], s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (G, bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    pv = jax.lax.dot_general(p.reshape(G * bq_, bk), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(G, bq_, hd)
+    m_ref[...] = m_new
+
+    @pl.when(r == n_rel - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_kv",
+                                             "causal", "interpret"))
+def swa_prefill(q, k, v, *, window: int, block_q: int = 256,
+                block_kv: int = 256, causal: bool = True,
+                interpret: bool = True):
+    """q: (B, KV, G, S, hd); k, v: (B, S, KV, hd). Returns (B,KV,G,S,hd)
+    fp32. S must divide by the blocks; window > 0."""
+    B, KV, G, S, hd = q.shape
+    bq, bk = min(block_q, S), min(block_kv, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    span = (window - 1) + bq if window > 0 else S
+    n_rel = -(-span // bk) + 1 if window > 0 else nk
+
+    def kv_index(b, h, qi, r):
+        if window > 0:
+            first = _kv_start_block(qi, window, bq, bk)
+            return (b, jnp.clip(first + r, 0, nk - 1), h, 0)
+        return (b, jnp.clip(r, 0, nk - 1), h, 0)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, bq=bq, bk=bk,
+                          n_kv_blocks=nk, n_rel=n_rel, causal=causal),
+        grid=(B, KV, nq, n_rel),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd), lambda b, h, qi, r: (b, h, 0, qi, 0)),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+            pl.BlockSpec((1, bk, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd),
+                               lambda b, h, qi, r: (b, h, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, S, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq, 1), jnp.float32),
+            pltpu.VMEM((G, bq, 1), jnp.float32),
+            pltpu.VMEM((G, bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the sliding-window flash decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_ref(q, k, v, *, window: int, causal: bool = True):
+    """q: (B,KV,G,S,hd); k,v: (B,S,KV,hd) -> (B,KV,G,S,hd) fp32."""
+    hd = q.shape[-1]
+    S = q.shape[3]
+    s = jnp.einsum("bkgqd,bskd->bkgqs", q.astype(jnp.float32) * hd ** -0.5,
+                   k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+
+
+def decode_ref(q, k, v, key_pos, q_pos, *, window: int = 0):
+    """q: (B, KV, G, hd); k, v: (B, S, KV, hd) -> (B, KV, G, hd) fp32."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * hd ** -0.5,
+                   k.astype(jnp.float32))
+    valid = (key_pos >= 0) & (key_pos <= q_pos)
+    if window > 0:
+        valid = valid & (q_pos - key_pos < window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))

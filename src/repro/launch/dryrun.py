@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination against the production mesh, and extract the roofline
+terms from the compiled artifact.
+
+MUST be imported before anything that initializes jax (the device count is
+locked at first backend init) — hence the XLA_FLAGS lines above everything.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch import hlo_analysis, roofline as RL  # noqa: E402
+from repro.launch.mesh import data_axes, make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    make_decode_step, make_prefill_step, make_train_step)
+from repro.optim import adamw  # noqa: E402
+from repro.sharding.ctx import ShardCtx  # noqa: E402
+
+
+def build_step(cfg, shape_name: str, ctx: ShardCtx):
+    kind = INPUT_SHAPES[shape_name].kind
+    if kind == "train":
+        opt = adamw(1e-4)
+        return make_train_step(cfg, opt, ctx=ctx, loss_chunk=512), opt
+    if kind == "prefill":
+        return make_prefill_step(cfg, ctx=ctx,
+                                 cache_len=INPUT_SHAPES[shape_name].seq_len), None
+    return make_decode_step(cfg, ctx=ctx), None
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              ctx_kw: Optional[Dict[str, Any]] = None,
+              compile_: bool = True, profile: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch).with_dtype("bfloat16")
+    shp = INPUT_SHAPES[shape_name]
+    if shp.name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "reason": "full-attention architecture (DESIGN.md §6)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    da = data_axes(mesh)
+    ctx = ShardCtx(mesh=mesh, data_axes=da, model_axis="model", remat=True,
+                   **(ctx_kw or {}))
+    bspec = SP.batch_specs(cfg, shape_name)
+    bshard = SP.data_shardings(cfg, shape_name, mesh, bspec)
+    psds = SP.param_sds(cfg)
+    pshard = SP.param_shardings(cfg, mesh, psds, embed_tp=ctx.embed_tp)
+    step, opt = build_step(cfg, shape_name, ctx)
+    t0 = time.time()
+    with mesh:
+        if shp.kind == "train":
+            osds = SP.opt_sds(cfg, opt, psds)
+            from repro.sharding import rules
+            oshard = rules.named(mesh, rules.param_specs(
+                osds, mesh, da, embed_tp=ctx.embed_tp))
+            jfn = jax.jit(step,
+                          in_shardings=(pshard, oshard,
+                                        NamedSharding(mesh, P()), bshard),
+                          out_shardings=(pshard, oshard,
+                                         NamedSharding(mesh, P())))
+            lowered = jfn.lower(psds, osds,
+                                jax.ShapeDtypeStruct((), jnp.int32), bspec)
+        elif shp.kind == "prefill":
+            jfn = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jfn.lower(psds, bspec)
+        else:
+            jfn = jax.jit(
+                step,
+                in_shardings=(pshard, bshard["token"], bshard["cache"],
+                              bshard["pos"]),
+                out_shardings=(NamedSharding(mesh, P()), bshard["cache"]))
+            lowered = jfn.lower(psds, bspec["token"], bspec["cache"],
+                                bspec["pos"])
+        t_lower = time.time() - t0
+        res: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                               "mesh": "2x16x16" if multi_pod else "16x16",
+                               "status": "LOWERED", "t_lower_s": t_lower}
+        if not compile_:
+            return res
+        t1 = time.time()
+        compiled = lowered.compile()
+        res["t_compile_s"] = time.time() - t1
+        res["status"] = "OK"
+        ca = compiled.cost_analysis() or {}
+        res["raw_flops"] = float(ca.get("flops", -1.0))
+        res["raw_bytes"] = float(ca.get("bytes accessed", -1.0))
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes"):
+                try:
+                    res[k] = int(getattr(ma, k))
+                except Exception:
+                    pass
+        text = compiled.as_text()
+        res["hlo"] = hlo_analysis.analyze(text)
+        if profile:
+            res["profile"] = hlo_analysis.collective_profile(text, top=12)
+        return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--ctx", default="",
+                    help="ShardCtx overrides, e.g. "
+                         "causal_skip=1,embed_tp=1,remat_policy=dots")
+    ap.add_argument("--profile", action="store_true",
+                    help="emit the top collective ops (bytes x trips)")
+    args = ap.parse_args()
+
+    ctx_kw: Dict[str, Any] = {}
+    for kv in filter(None, args.ctx.split(",")):
+        k, _, v = kv.partition("=")
+        if v in ("0", "1", "true", "false", "True", "False"):
+            ctx_kw[k] = v in ("1", "true", "True")
+        elif v.isdigit():
+            ctx_kw[k] = int(v)
+        else:
+            ctx_kw[k] = v
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        pairs.append((args.arch, args.shape))
+
+    results = []
+    for a, s in pairs:
+        try:
+            r = lower_one(a, s, multi_pod=args.multi_pod, ctx_kw=ctx_kw,
+                          compile_=not args.no_compile, profile=args.profile)
+        except Exception as e:  # a failure here is a bug in the system
+            r = {"arch": a, "shape": s, "status": "FAIL",
+                 "error": f"{type(e).__name__}: {e}"}
+        if r["status"] == "OK":
+            cfg = get_config(a)
+            r["roofline"] = RL.terms(cfg, s, r["hlo"],
+                                     512 if args.multi_pod else 256)
+        print(json.dumps(r, default=float))
+        sys.stdout.flush()
+        results.append(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    n_bad = sum(1 for r in results if r["status"] == "FAIL")
+    print(f"# done: {len(results)} pairs, {n_bad} failures", file=sys.stderr)
+    sys.exit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

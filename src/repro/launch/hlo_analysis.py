@@ -1,0 +1,244 @@
+"""Scan-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts ``while`` bodies ONCE (validated in
+tests/test_hlo_analysis.py), which under-reports every scanned layer stack
+by its trip count. This module re-derives the two roofline numerators that
+must be trip-count-exact from the HLO text itself:
+
+  * dot/convolution FLOPs  (the compute term's numerator)
+  * collective bytes       (all-reduce / all-gather / reduce-scatter /
+                            all-to-all / collective-permute)
+
+Method: split the module into computations, build the call graph
+(while/fusion/call/conditional/to_apply edges), extract each while loop's
+trip count from its condition (max integer constant), and accumulate
+direct costs times the product of enclosing trip counts. Shapes in the
+partitioned module are per-device, so all results are per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\(?\s*(\w+)\[([\d,]*)\]")
+_DOT = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\bdot\(([^)]*)\)"
+    r".*?lhs_contracting_dims=\{([\d,]*)\}")
+_CONV = re.compile(r"=\s*(\w+)\[([\d,]*)\][^=]*?\bconvolution\(")
+_COLL = re.compile(
+    r"=\s*\(?\s*(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_CALL = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+_CONST = re.compile(r"constant\((\d+)\)")
+_WHILE = re.compile(r"\bwhile\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_TRIP = re.compile(r"known_trip_count\D+(\d+)")
+
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+@dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    # (op, dtype, dims, bytes) per collective — for the detail profile
+    coll_ops: List[Tuple[str, str, str, float]] = field(default_factory=list)
+    # (callee, multiplier) edges; while bodies get their trip count
+    calls: List[Tuple[str, float]] = field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        s = line.strip()
+        m = _COMP_HDR.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if s.startswith("ENTRY"):
+                entry = cur
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    comps["__entry__"] = comps.get(entry, [])
+    if entry:
+        comps["__entry_name__"] = [entry]  # type: ignore
+    return comps
+
+
+def _dot_flops_line(line: str, symtab: Dict[str, List[int]]) -> float:
+    m = _DOT.search(line)
+    if not m:
+        return 0.0
+    out_elems = _nelems(m.group(2))
+    # contracted size: resolve the lhs operand's shape via the symbol table
+    operands = [o.strip().lstrip("%") for o in m.group(3).split(",")]
+    inline = _SHAPE.findall(m.group(3))
+    if inline:  # dialects with typed operands
+        lhs_dims = [int(x) for x in inline[0][1].split(",") if x.strip()]
+    else:
+        lhs_dims = symtab.get(operands[0], [])
+    cdims = [int(x) for x in m.group(4).split(",") if x.strip()]
+    csize = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            csize *= lhs_dims[c]
+    return 2.0 * out_elems * csize
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps = _split_computations(text)
+    entry_name = comps.pop("__entry_name__", [None])[0]  # type: ignore
+    comps.pop("__entry__", None)
+
+    costs: Dict[str, CompCost] = {}
+    trip: Dict[str, float] = {}
+
+    for name, lines in comps.items():
+        c = CompCost()
+        symtab: Dict[str, List[int]] = {}
+        for ln in lines:
+            dm = _DEF.match(ln)
+            if dm:
+                symtab[dm.group(1)] = [int(x) for x in dm.group(3).split(",")
+                                       if x.strip()]
+        for ln in lines:
+            c.dot_flops += _dot_flops_line(ln, symtab)
+            if "convolution(" in ln:
+                pass  # VGG paths are not dry-run targets; ignored
+            mc = _COLL.search(ln)
+            if mc and "-done(" not in ln:
+                dt, dims, op = mc.group(1), mc.group(2), mc.group(3)
+                b = _nelems(dims) * _DTYPE_BYTES.get(dt, 4) * _COLL_FACTOR[op]
+                c.coll_bytes[op] = c.coll_bytes.get(op, 0.0) + b
+                c.coll_ops.append((op, dt, dims, b))
+            mw = _WHILE.search(ln)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                mt = _TRIP.search(ln)
+                if mt:
+                    tc = float(mt.group(1))
+                else:  # fall back: max integer constant in the condition
+                    tc = 1.0
+                    for cl in comps.get(cond, []):
+                        for k in _CONST.findall(cl):
+                            tc = max(tc, float(k))
+                trip[body] = tc
+                c.calls.append((body, tc))
+                continue
+            for m in _CALL.finditer(ln):
+                if m.group(1):
+                    c.calls.append((m.group(1), 1.0))
+                elif m.group(2):
+                    # conditional: take the max-cost branch (approximated
+                    # by summing — branches in our models are tiny)
+                    for b in m.group(2).split(","):
+                        c.calls.append((b.strip().lstrip("%"), 1.0))
+        costs[name] = c
+
+    memo: Dict[str, Tuple[float, Dict[str, float]]] = {}
+
+    def total(name: str, stack=()) -> Tuple[float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if name not in costs or name in stack:
+            return 0.0, {}
+        c = costs[name]
+        f = c.dot_flops
+        coll = dict(c.coll_bytes)
+        for callee, mult in c.calls:
+            cf, ccoll = total(callee, stack + (name,))
+            f += cf * mult
+            for k, v in ccoll.items():
+                coll[k] = coll.get(k, 0.0) + v * mult
+        memo[name] = (f, coll)
+        return memo[name]
+
+    if entry_name is None:
+        # fall back: the computation with the most lines
+        entry_name = max(comps, key=lambda k: len(comps[k]))
+    f, coll = total(entry_name)
+    out = {"dot_flops": f, "coll_total": sum(coll.values())}
+    for k, v in coll.items():
+        out[f"coll_{k}"] = v
+    return out
+
+
+def collective_profile(text: str, top: int = 20) -> List[Dict]:
+    """Per-op collective profile with effective trip multipliers — the
+    'where do the collective bytes come from' view for §Perf."""
+    comps = _split_computations(text)
+    entry_name = comps.pop("__entry_name__", [None])[0]  # type: ignore
+    comps.pop("__entry__", None)
+
+    costs: Dict[str, CompCost] = {}
+    for name, lines in comps.items():
+        c = CompCost()
+        for ln in lines:
+            mc = _COLL.search(ln)
+            if mc and "-done(" not in ln:
+                op, dt, dims = mc.group(3), mc.group(1), mc.group(2)
+                b = _nelems(dims) * _DTYPE_BYTES.get(dt, 4) * _COLL_FACTOR[op]
+                c.coll_ops.append((op, dt, dims, b))
+            mw = _WHILE.search(ln)
+            if mw:
+                mt = _TRIP.search(ln)
+                tc = float(mt.group(1)) if mt else 1.0
+                c.calls.append((mw.group(2), tc))
+                continue
+            for m in _CALL.finditer(ln):
+                if m.group(1):
+                    c.calls.append((m.group(1), 1.0))
+                elif m.group(2):
+                    for bname in m.group(2).split(","):
+                        c.calls.append((bname.strip().lstrip("%"), 1.0))
+        costs[name] = c
+
+    # multiplier of each computation = product of trip counts on the path
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, stack=()):
+        if name not in costs or name in stack:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, k in costs[name].calls:
+            visit(callee, m * k, stack + (name,))
+
+    if entry_name is None:
+        entry_name = max(comps, key=lambda k: len(comps[k]))
+    visit(entry_name, 1.0)
+
+    rows: List[Dict] = []
+    for name, c in costs.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for op, dt, dims, b in c.coll_ops:
+            rows.append({"op": op, "dtype": dt, "shape": dims,
+                         "bytes_each": b, "mult": m, "total": b * m,
+                         "comp": name})
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:top]

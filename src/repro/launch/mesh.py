@@ -1,0 +1,29 @@
+"""Production meshes (functions, so importing never touches device state).
+
+Single pod: 256 x TPU v5e as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the batch
+(and FSDP) dimension spans ("pod", "data") — DCN-friendly: only
+data-parallel gradient reductions cross the pod boundary.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1D (data) mesh — used by the
+    smoke-scale launchers."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,108 @@
+"""Roofline model for the TPU v5e target (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+  compute_s    = dot_flops_per_device / PEAK_FLOPS
+                 (dot_flops from the scan-aware HLO analysis — matmul FLOPs
+                 dominate; elementwise ops are folded into the memory term)
+  memory_s     = hbm_bytes_per_device / HBM_BW
+                 (analytic traffic model below; cost_analysis' byte counter
+                 shares the while-body undercount, so we model it)
+  collective_s = collective_bytes_per_device / LINK_BW
+                 (scan-aware HLO collective bytes; all-reduce counted 2x)
+
+MODEL_FLOPS (6*N_active*D for training, 2*N_active*tokens for inference)
+gives the useful-compute ratio that catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.configs import INPUT_SHAPES, ModelConfig, active_param_count, param_count
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / ICI link (1-link conservative)
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global useful FLOPs per step (the 6ND / 2ND convention)."""
+    shp = INPUT_SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    if shp.kind == "train":
+        return 6.0 * n_active * shp.global_batch * shp.seq_len
+    if shp.kind == "prefill":
+        return 2.0 * n_active * shp.global_batch * shp.seq_len
+    return 2.0 * n_active * shp.global_batch          # decode: one token
+
+
+def _bytes_per_param_train() -> float:
+    # bf16 param r+w (4) + fp32 master r+w (8) + fp32 m r+w (8)
+    # + fp32 v r+w (8) + bf16 grad w+r (4)
+    return 32.0
+
+
+def hbm_bytes(cfg: ModelConfig, shape_name: str, n_chips: int) -> float:
+    """Per-device HBM traffic per step (analytic, documented model)."""
+    shp = INPUT_SHAPES[shape_name]
+    n_params = param_count(cfg)
+    B, S = shp.global_batch, shp.seq_len
+    D, L = cfg.d_model, cfg.n_layers
+    p_local = n_params / n_chips                       # fully sharded
+    b_local = max(B / max(n_chips // 16, 1), 1)        # data axes extent
+    act_unit = b_local * S * D * 2.0                   # one bf16 activation
+    if shp.kind == "train":
+        # fwd+bwd touch ~8 activation tensors per layer; remat re-runs fwd
+        act = 12.0 * L * act_unit
+        return p_local * _bytes_per_param_train() + act
+    if shp.kind == "prefill":
+        act = 6.0 * L * act_unit
+        cache_w = _cache_bytes(cfg, B, S) / n_chips
+        return p_local * 2.0 + act + cache_w
+    # decode: weights once + the whole cache read per token
+    cache_r = _cache_bytes(cfg, B, S) / n_chips
+    return p_local * 2.0 + cache_r + 4.0 * L * (b_local * D * 2.0)
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    hd = cfg.resolved_head_dim
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind in ("global", "crossdec"):
+            if cfg.mla is not None:
+                total += B * S * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+            else:
+                total += 2 * B * S * cfg.n_kv_heads * hd * 2
+            if kind == "crossdec":
+                total += 2 * B * cfg.encoder.n_ctx * cfg.n_heads * hd * 2
+        elif kind == "local":
+            total += 2 * B * min(cfg.window, S) * cfg.n_kv_heads * hd * 2
+        elif kind == "rglru":
+            total += B * cfg.d_rnn * 4
+        elif kind == "mlstm":
+            H = cfg.ssm.n_heads
+            dm = 2 * cfg.d_model
+            total += B * H * (dm // H) ** 2 * 4
+        elif kind == "slstm":
+            total += 4 * B * cfg.d_model * 4
+    return total
+
+
+def terms(cfg: ModelConfig, shape_name: str, hlo_stats: Dict[str, float],
+          n_chips: int) -> Dict[str, Any]:
+    comp = hlo_stats.get("dot_flops", 0.0) / PEAK_FLOPS
+    mem = hbm_bytes(cfg, shape_name, n_chips) / HBM_BW
+    coll = hlo_stats.get("coll_total", 0.0) / LINK_BW
+    mf = model_flops(cfg, shape_name)
+    dev_flops = hlo_stats.get("dot_flops", 0.0)
+    out = {
+        "compute_s": comp,
+        "memory_s": mem,
+        "collective_s": coll,
+        "model_flops_global": mf,
+        "useful_ratio": (mf / n_chips) / dev_flops if dev_flops else 0.0,
+        "dominant": max((("compute", comp), ("memory", mem),
+                         ("collective", coll)), key=lambda kv: kv[1])[0],
+        "step_s_lower_bound": max(comp, mem, coll),
+    }
+    return out

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation) and
+the matching sharding trees — consumed by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ModelConfig
+from repro.models import transformer as T
+from repro.sharding import rules
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """SDS tree for the data part of a step's inputs."""
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    adt = cfg.dtype
+    if shp.kind in ("train", "prefill"):
+        n_text = S
+        out: Dict[str, Any] = {}
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            n_text = S - cfg.frontend.n_prefix
+            out["aux"] = _sds((B, cfg.frontend.n_prefix, cfg.d_model), adt)
+        if cfg.encoder is not None:
+            out["aux"] = _sds((B, cfg.encoder.n_ctx, cfg.d_model), adt)
+        out["tokens"] = _sds((B, n_text), jnp.int32)
+        if shp.kind == "train":
+            out["labels"] = _sds((B, n_text), jnp.int32)
+        return out
+    # decode: one token vs an S-entry cache
+    return {"token": _sds((B, 1), jnp.int32),
+            "cache": jax.eval_shape(lambda: T.init_cache(cfg, B, S)),
+            "pos": _sds((), jnp.int32)}
+
+
+def param_sds(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_sds(cfg: ModelConfig, optimizer, params_sds):
+    return jax.eval_shape(optimizer.init, params_sds)
+
+
+def data_shardings(cfg: ModelConfig, shape_name: str, mesh,
+                   batch_sds) -> Dict[str, Any]:
+    """NamedSharding tree matching ``batch_specs``."""
+    da = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    shp = INPUT_SHAPES[shape_name]
+    extent = 1
+    for a in da:
+        extent *= mesh.shape[a]
+    shardable = shp.global_batch % extent == 0 and shp.global_batch >= extent
+    dp = da if shardable else None
+
+    def shard_batch_leaf(leaf):
+        spec = [None] * len(leaf.shape)
+        if dp and leaf.shape[0] % extent == 0:
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(mesh, P(*spec))
+
+    out = {}
+    for k, v in batch_sds.items():
+        if k == "cache":
+            specs = rules.cache_specs(v, mesh, da, batch_shardable=shardable)
+            out[k] = rules.named(mesh, specs)
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = jax.tree.map(shard_batch_leaf, v)
+    return out
+
+
+def param_shardings(cfg: ModelConfig, mesh, params_sds, *,
+                    embed_tp: bool = False):
+    da = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return rules.named(mesh, rules.param_specs(params_sds, mesh, da,
+                                               embed_tp=embed_tp))

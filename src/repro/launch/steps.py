@@ -1,0 +1,98 @@
+"""Step functions the launcher (and the dry-run) lowers.
+
+  train_step    — AdamW/SGD LM step (train_4k)
+  prefill_step  — build KV cache from a prompt, last-token logits (prefill_32k)
+  decode_step   — one token against an S-entry cache (decode_32k, long_500k)
+
+The cross-entropy is computed in vocab chunks (``loss_chunk``) so the
+(B, S, V) logits tensor of large-vocab models is never materialized —
+see EXPERIMENTS.md §Perf for the before/after.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.sharding.ctx import CPU_CTX, ShardCtx
+
+
+def _text_hidden(params, cfg, h):
+    """Drop vision-prefix positions so hidden rows align with labels."""
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        return h[:, cfg.frontend.n_prefix:]
+    return h
+
+
+def chunked_softmax_xent(h, w, labels, *, chunk: int = 0):
+    """Mean next-token CE without materializing (B,S,V) at once.
+
+    h: (B,S,D); w: (D,V); labels: (B,S) int32. chunk = sequence-chunk size
+    (0 => single chunk, i.e. the unchunked baseline)."""
+    B, S, D = h.shape
+    if chunk <= 0 or chunk >= S:
+        logits = (h @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return (lse - ll).mean(), logits.argmax(-1)
+
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mask = jnp.pad(jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    hc = hp.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = lp.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hi, li, mi = xs
+        logits = (hi @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        hits = (logits.argmax(-1) == li).astype(jnp.float32) * mi
+        return (acc[0] + ((lse - ll) * mi).sum(), acc[1] + hits.sum()), None
+
+    (total, hits), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                    (hc, lc, mc))
+    return total / (B * S), hits / (B * S)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, ctx: ShardCtx = CPU_CTX,
+            loss_chunk: int = 0):
+    """batch: {'tokens': (B,S), 'labels': (B,S), ['aux': modality embeds]}."""
+    h = T.forward_hidden(params, cfg, batch["tokens"], ctx=ctx,
+                         aux=batch.get("aux"))
+    h = _text_hidden(params, cfg, h)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    loss, aux = chunked_softmax_xent(h, w, batch["labels"], chunk=loss_chunk)
+    return loss, {"acc_or_preds": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, ctx: ShardCtx = CPU_CTX,
+                    loss_chunk: int = 0):
+    def train_step(params, opt_state, step, batch):
+        (loss, _), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+            params, cfg, batch, ctx=ctx, loss_chunk=loss_chunk)
+        new_params, new_state = optimizer.update(grads, opt_state, params, step)
+        return new_params, new_state, {"loss": loss}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, ctx: ShardCtx = CPU_CTX,
+                      cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        logits, cache = T.prefill(params, cfg, batch["tokens"], ctx=ctx,
+                                  aux=batch.get("aux"), cache_len=cache_len)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, ctx: ShardCtx = CPU_CTX):
+    def decode_step(params, token, cache, pos):
+        return T.decode_step(params, cfg, token, cache, pos, ctx=ctx)
+    return decode_step

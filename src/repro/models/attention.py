@@ -1,0 +1,495 @@
+"""Attention: blockwise (flash-style) pure-JAX path used for lowering +
+training, plus decode-against-cache, GQA/MQA, sliding windows and
+DeepSeek-style MLA.
+
+The Pallas TPU kernel for the sliding-window serving hot path lives in
+``repro.kernels.swa_attention``; this module is the XLA path that every
+dry-run/smoke test exercises (Pallas CPU execution is interpret-only).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, dense_init, rms_norm,
+                                 tp_row_matmul)
+from repro.sharding.ctx import CPU_CTX, ShardCtx
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, size, axis, value=0):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def head_layout(H: int, KV: int, model_size: int):
+    """How to map attention heads onto the model axis (DESIGN.md §5 /
+    EXPERIMENTS.md §Perf iteration 1):
+      'kv'      — shard the KV-head dim (KV % m == 0): zero collectives.
+      'expand'  — repeat k/v G-fold to H heads, shard H: pays G x kv HBM
+                  traffic, zero collectives.
+      'replicate' — heads not divisible (e.g. 14 or 12 heads on a 16-way
+                  axis): attention is data-parallel only. Without this the
+                  partitioner splits the CONTRACTING head_dim and inserts a
+                  per-(layer x q-block x kv-block) score all-reduce — the
+                  46 TB/device pathology in the internvl2 baseline."""
+    if model_size <= 1:
+        return "single"
+    if KV % model_size == 0:
+        return "kv"
+    if H % model_size == 0:
+        return "expand"
+    return "replicate"
+
+
+def _dp_extent(ctx) -> int:
+    n = 1
+    for a in (ctx.data_axes or ()):
+        n *= ctx.mesh.shape[a]
+    return max(n, 1)
+
+
+def _csc(x, ctx, *entries):
+    """with_sharding_constraint if a mesh is live."""
+    if not ctx.distributed:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = ctx.data_axes if ctx.data_axes else None
+    resolved = [dp if e == "data" else e for e in entries]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*resolved)))
+
+
+def apply_head_layout_seq(q5, k, v, ctx):
+    """q5: (B,S,KV,G,hd); k,v: (B,S,KV,hd). Returns constrained (q5,k,v)
+    possibly with k/v expanded to flat heads (KV=H, G=1)."""
+    B, S, KV, G, hd = q5.shape
+    layout = head_layout(KV * G, KV, ctx.model_size)
+    if layout == "single":
+        return q5, k, v
+    if layout == "expand":
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        q5 = q5.reshape(B, S, KV * G, 1, hd)
+        layout = "kv"
+    ax = ctx.model_axis if layout == "kv" else None
+    q5 = _csc(q5, ctx, "data", None, ax, None, None)
+    k = _csc(k, ctx, "data", None, ax, None)
+    v = _csc(v, ctx, "data", None, ax, None)
+    return q5, k, v
+
+
+def blockwise_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                        block_q=512, block_kv=512, banded=True,
+                        causal_skip=False):
+    """Memory-O(block^2) attention. q: (B,Sq,KV,G,hd) (G = query heads per
+    kv head); k,v: (B,Sk,KV,hd); q_pos: (Sq,), kv_pos: (Sk,) absolute
+    positions (-1 => masked key). Returns (B,Sq,KV*G,hd).
+
+    ``banded`` (window > 0 only) restricts each query block to the
+    ~(window+block_q)/block_kv kv blocks it can actually see — assumes
+    q_pos/kv_pos are contiguous ascending (true for train/prefill).
+    ``causal_skip`` restricts the kv scan of query block i to blocks
+    <= i (assumes q and kv are position-aligned, Sq == Sk).
+    """
+    B, Sq, KV, G, hd = q.shape
+    H = KV * G
+    Sk = k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_kv, Sk)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    scale = hd ** -0.5
+
+    qp = _pad_to(q, nq * bq, 1) * scale
+    qpos_p = _pad_to(q_pos, nq * bq, 0, value=-1)
+    kp = _pad_to(k, nk * bk, 1)
+    vp = _pad_to(v, nk * bk, 1)
+    kpos_p = _pad_to(kv_pos, nk * bk, 0, value=-1)
+
+    qb = qp.reshape(B, nq, bq, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpb = qpos_p.reshape(nq, bq)
+
+    use_banded = banded and window > 0 and causal
+
+    def attend_block(qi, qpi, kb, vb, kpi, extra_valid):
+        # qi (B,bq,KV,G,hd) kb (B,bk,KV,hd) -> scores (B,KV,G,bq,bk) fp32
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kb,
+                       preferred_element_type=jnp.float32)
+        valid = (kpi >= 0) & extra_valid                      # (bk,)
+        mask = jnp.broadcast_to(valid[None, :], (bq, bk))
+        if causal:
+            mask = mask & (qpi[:, None] >= kpi[None, :])
+        if window > 0:
+            mask = mask & (qpi[:, None] - kpi[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        return s
+
+    def inner_step(carry, kb, vb, kpi, extra_valid, qi, qpi):
+        m, l, acc = carry
+        s = attend_block(qi, qpi, kb, vb, kpi, extra_valid)   # (B,KV,G,bq,bk)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc)
+
+    def one_q_block(args):
+        i, qi, qpi = args
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+
+        if use_banded:
+            q_start = i * bq
+            span = window + bq - 1
+            nrel = -(-span // bk) + 1
+            base = ((q_start - window + 1) // bk) * bk
+
+            def body(j, carry):
+                nominal = base + j * bk
+                start = jnp.clip(nominal, 0, nk * bk - bk)
+                ok = (nominal >= 0) & (nominal < nk * bk)
+                kb = jax.lax.dynamic_slice_in_dim(kp, start, bk, 1)
+                vb = jax.lax.dynamic_slice_in_dim(vp, start, bk, 1)
+                kpi = jax.lax.dynamic_slice_in_dim(kpos_p, start, bk, 0)
+                return inner_step(carry, kb, vb, kpi, ok, qi, qpi)
+
+            m, l, acc = jax.lax.fori_loop(0, nrel, body, (m0, l0, a0))
+        elif causal_skip and causal and Sq == Sk and bq == bk:
+            def body(j, carry):
+                kb = jax.lax.dynamic_slice_in_dim(kp, j * bk, bk, 1)
+                vb = jax.lax.dynamic_slice_in_dim(vp, j * bk, bk, 1)
+                kpi = jax.lax.dynamic_slice_in_dim(kpos_p, j * bk, bk, 0)
+                return inner_step(carry, kb, vb, kpi, True, qi, qpi)
+
+            m, l, acc = jax.lax.fori_loop(0, i + 1, body, (m0, l0, a0))
+        else:
+            kbs = kp.reshape(B, nk, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+            vbs = vp.reshape(B, nk, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+            kps = kpos_p.reshape(nk, bk)
+
+            def body(carry, xs):
+                kb, vb, kpi = xs
+                return inner_step(carry, kb, vb, kpi, True, qi, qpi), None
+
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kbs, vbs, kps))
+
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,bq,hd)
+        return out
+
+    idx = jnp.arange(nq)
+    outs = jax.lax.map(one_q_block, (idx, qb, qpb))           # (nq,B,KV,G,bq,hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, key_pos, q_pos, *, window=0):
+    """One-token attention vs a cache. q: (B,H,hd); caches (B,Sc,KV,hd);
+    key_pos: (Sc,) absolute positions of cache slots (-1 = unwritten)."""
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    valid = (key_pos >= 0) & (key_pos <= q_pos)
+    if window > 0:
+        valid = valid & (q_pos - key_pos < window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def ring_positions(pos, size):
+    """Absolute positions held by a ring buffer of ``size`` after writing
+    position ``pos`` at slot pos % size. Unwritten slots come out < 0."""
+    slots = jnp.arange(size)
+    return pos - ((pos - slots) % size)
+
+
+# ---------------------------------------------------------------- GQA layer
+
+def attn_init(key, cfg, dtype, *, cross=False):
+    D, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype),
+        "wk": dense_init(ks[1], (D, KV * hd), dtype),
+        "wv": dense_init(ks[2], (D, KV * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KV, hd),
+            v.reshape(B, S, KV, hd))
+
+
+def attn_apply_seq(p, cfg, x, positions, *, kind="global", ctx: ShardCtx = CPU_CTX,
+                   return_cache=False, cache_len=None):
+    """Full-sequence self-attention (train / prefill).
+
+    positions: (S,). Returns (y, cache|None); cache k/v are post-RoPE.
+    For local layers the prefill cache keeps only the last ``window`` slots.
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if kind == "local" else 0
+    q5 = q.reshape(B, S, KV, H // KV, hd)
+    q5a, ka, va = apply_head_layout_seq(q5, k, v, ctx)
+    out = blockwise_attention(
+        q5a, ka, va, positions, positions, causal=True, window=window,
+        block_q=ctx.block_q, block_kv=ctx.block_kv,
+        banded=ctx.banded_local, causal_skip=ctx.causal_skip)
+    y = tp_row_matmul(out.reshape(B, S, -1), p["wo"], ctx)
+    cache = None
+    if return_cache:
+        # cache the UNEXPANDED kv (layout expansion is attention-local)
+        cache = _build_cache(k, v, positions, window, cache_len, S)
+    return y, cache
+
+
+def _build_cache(k, v, positions, window, cache_len, S):
+    """Arrange prefill k/v into the decode cache layout."""
+    if window > 0:
+        W = min(window, cache_len or window)
+        # ring layout: slot = pos % W for the last W positions
+        last = k.shape[1]
+        take = min(W, last)
+        ks, vs = k[:, -take:], v[:, -take:]
+        pos_tail = positions[-take:]
+        slots = pos_tail % W
+        ck = jnp.zeros((k.shape[0], W) + k.shape[2:], k.dtype).at[:, slots].set(ks)
+        cv = jnp.zeros_like(ck).at[:, slots].set(vs)
+        return {"k": ck, "v": cv}
+    L = cache_len or S
+    ck = jnp.zeros((k.shape[0], L) + k.shape[2:], k.dtype)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, 1)
+    cv = jnp.zeros((v.shape[0], L) + v.shape[2:], v.dtype)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, 1)
+    return {"k": ck, "v": cv}
+
+
+def attn_apply_decode(p, cfg, x, pos, cache, *, kind="global",
+                      ctx: ShardCtx = CPU_CTX):
+    """One-token decode. x: (B,1,D); pos: scalar int32; cache {'k','v'}."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)[:, 0]          # (B,H,hd)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)[:, 0]          # (B,KV,hd)
+    v = v[:, 0]
+    window = cfg.window if kind == "local" else 0
+    Sc = cache["k"].shape[1]
+    slot = (pos % Sc) if window > 0 else jnp.minimum(pos, Sc - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, None], slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, None], slot, 1)
+    key_pos = ring_positions(pos, Sc) if window > 0 else jnp.arange(Sc)
+    out = decode_attention(q, ck, cv, key_pos, pos, window=window)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+def init_attn_cache(cfg, B, S_max, dtype, *, kind="global"):
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = min(cfg.window, S_max) if kind == "local" else S_max
+    z = jnp.zeros((B, L, KV, hd), dtype)
+    return {"k": z, "v": z}
+
+
+# --------------------------------------------------------- cross attention
+
+def cross_attn_init(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H * hd), dtype),
+        "wk": dense_init(ks[1], (D, H * hd), dtype),
+        "wv": dense_init(ks[2], (D, H * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype, fan_in=H * hd),
+    }
+
+
+def cross_kv(p, cfg, enc_out):
+    B, T, _ = enc_out.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(B, T, H, hd)
+    v = (enc_out @ p["wv"]).reshape(B, T, H, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attn_apply(p, cfg, x, kv, *, ctx: ShardCtx = CPU_CTX):
+    """x: (B,S,D) attends to precomputed cross kv (B,T,H,hd), non-causal."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    T = kv["k"].shape[1]
+    if S == 1:
+        out = decode_attention(q[:, 0], kv["k"], kv["v"],
+                               jnp.zeros((T,), jnp.int32), jnp.int32(0))
+        out = out[:, None]
+    else:
+        qpos = jnp.zeros((S,), jnp.int32)
+        kpos = jnp.zeros((T,), jnp.int32)
+        q5, k5, v5 = apply_head_layout_seq(q[:, :, :, None], kv["k"],
+                                           kv["v"], ctx)
+        out = blockwise_attention(q5, k5, v5, qpos, kpos,
+                                  causal=False, window=0, banded=False,
+                                  block_q=ctx.block_q, block_kv=ctx.block_kv)
+    return tp_row_matmul(out.reshape(B, S, -1), p["wo"], ctx)
+
+
+# ------------------------------------------------------------------- MLA
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (D, m.q_lora_rank), dtype),
+        "qln": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk), dtype),
+        "wkv_a": dense_init(ks[2], (D, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "kvln": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    H * (m.qk_nope_dim + m.v_head_dim)), dtype),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, D), dtype,
+                         fan_in=H * m.v_head_dim),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(x @ p["wq_a"], p["qln"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    qn, qr = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_ckv(p, cfg, x, positions):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    ckv = rms_norm(kv[..., : m.kv_lora_rank], p["kvln"], cfg.norm_eps)
+    krope = kv[..., m.kv_lora_rank:][:, :, None, :]            # 1 shared head
+    krope = apply_rope(krope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv, krope
+
+
+def mla_apply_seq(p, cfg, x, positions, *, ctx: ShardCtx = CPU_CTX,
+                  return_cache=False, cache_len=None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qn, qr = _mla_q(p, cfg, x, positions)
+    ckv, krope = _mla_ckv(p, cfg, x, positions)
+    kv = (ckv @ p["wkv_b"]).reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    kn, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    q = jnp.concatenate([qn, qr], -1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(krope[:, :, None],
+                                              kn.shape[:3] + (m.qk_rope_dim,))], -1)
+    vp = _pad_to(v, q.shape[-1], -1)                            # pad v to qk dim
+    q5 = q[:, :, :, None]                                       # (B,S,H,1,qk)
+    q5 = q5.reshape(B, S, H, 1, q.shape[-1])
+    q5, k, vp = apply_head_layout_seq(q5, k, vp, ctx)           # KV=H here
+    out = blockwise_attention(q5, k, vp, positions, positions, causal=True,
+                              window=0, banded=False, block_q=ctx.block_q,
+                              block_kv=ctx.block_kv, causal_skip=ctx.causal_skip)
+    out = out[..., : m.v_head_dim]
+    y = tp_row_matmul(out.reshape(B, S, -1), p["wo"], ctx)
+    cache = None
+    if return_cache:
+        L = cache_len or S
+        c1 = jnp.zeros((B, L, m.kv_lora_rank), ckv.dtype)
+        c1 = jax.lax.dynamic_update_slice_in_dim(c1, ckv, 0, 1)
+        c2 = jnp.zeros((B, L, m.qk_rope_dim), krope.dtype)
+        c2 = jax.lax.dynamic_update_slice_in_dim(c2, krope, 0, 1)
+        cache = {"ckv": c1, "krope": c2}
+    return y, cache
+
+
+def mla_apply_decode(p, cfg, x, pos, cache, *, ctx: ShardCtx = CPU_CTX):
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    qn, qr = _mla_q(p, cfg, x, pos_arr)                        # (B,1,H,*)
+    qn, qr = qn[:, 0], qr[:, 0]
+    ckv1, krope1 = _mla_ckv(p, cfg, x, pos_arr)
+    Sc = cache["ckv"].shape[1]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv1, pos, 1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope1, pos, 1)
+    if ctx.distributed and ckv.shape[0] % _dp_extent(ctx) == 0:
+        # keep the latent cache batch-sharded through the layer scan —
+        # without this the partitioner round-trips it through an
+        # all-gather per layer (§Perf deepseek iteration 2)
+        ckv = _csc(ckv, ctx, "data", None, None)
+        krope = _csc(krope, ctx, "data", None, None)
+    key_pos = jnp.arange(Sc)
+    valid = (key_pos <= pos)
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    wk, wv = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim:]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    if ctx.mla_absorb:
+        # fold wkv_b into q / out: scores live in the latent space.
+        q_abs = jnp.einsum("bhn,rhn->bhr", qn, wk)             # (B,H,r)
+        s = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhe,bse->bhs", qr, krope,
+                          preferred_element_type=jnp.float32)) * scale
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv.dtype), ckv)
+        out = jnp.einsum("bhr,rhv->bhv", lat, wv)
+    else:
+        kv = jnp.einsum("bsr,rhx->bshx", ckv, wkv_b)
+        kn, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+        s = (jnp.einsum("bhn,bshn->bhs", qn, kn,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhe,bse->bhs", qr, krope,
+                          preferred_element_type=jnp.float32)) * scale
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhs,bshv->bhv", pr.astype(v.dtype), v)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"ckv": ckv, "krope": krope}
+
+
+def init_mla_cache(cfg, B, S_max, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((B, S_max, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((B, S_max, m.qk_rope_dim), dtype)}

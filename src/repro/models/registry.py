@@ -1,0 +1,39 @@
+"""Model registry: uniform handles over the transformer substrate."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, get_config
+from repro.models import transformer as T
+from repro.sharding.ctx import CPU_CTX, ShardCtx
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def forward(self, params, tokens, *, ctx: ShardCtx = CPU_CTX, aux=None):
+        return T.forward(params, self.cfg, tokens, ctx=ctx, aux=aux)
+
+    def prefill(self, params, tokens, *, ctx: ShardCtx = CPU_CTX, aux=None,
+                cache_len=None):
+        return T.prefill(params, self.cfg, tokens, ctx=ctx, aux=aux,
+                         cache_len=cache_len)
+
+    def decode_step(self, params, token, cache, pos, *, ctx: ShardCtx = CPU_CTX):
+        return T.decode_step(params, self.cfg, token, cache, pos, ctx=ctx)
+
+    def init_cache(self, B, S_max, dtype=None):
+        return T.init_cache(self.cfg, B, S_max, dtype)
+
+
+def get_model(arch_or_cfg) -> Model:
+    cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) else get_config(arch_or_cfg)
+    return Model(cfg)

@@ -1,0 +1,303 @@
+"""Recurrent blocks: RG-LRU (Griffin/RecurrentGemma) and xLSTM (mLSTM, sLSTM).
+
+All three expose a full-sequence path (train / prefill) and an O(1)-state
+decode path. The RG-LRU is a diagonal linear recurrence and uses
+``jax.lax.associative_scan``; mLSTM/sLSTM use a sequential ``lax.scan``
+over time (mLSTM's chunkwise-parallel form is a §Perf candidate).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, dense_init, gelu
+
+RG_LRU_C = 8.0
+
+
+# ------------------------------------------------------------------ RG-LRU
+
+def rglru_init(key, cfg, dtype):
+    D, R = cfg.d_model, cfg.d_rnn
+    cw = cfg.ssm.conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "win": dense_init(ks[0], (D, R), dtype),
+        "wgate": dense_init(ks[1], (D, R), dtype),
+        "conv": dense_init(ks[2], (cw, R), dtype, fan_in=cw),
+        "wa": dense_init(ks[3], (R, R), dtype),
+        "ba": jnp.zeros((R,), dtype),
+        "wx": dense_init(ks[4], (R, R), dtype),
+        "bx": jnp.zeros((R,), dtype),
+        # a = exp(-c * softplus(lam) * r); init for slow decay
+        "lam": jnp.full((R,), -4.0, dtype),
+        "wout": dense_init(ks[5], (R, D), dtype),
+    }
+
+
+def _rglru_gates(p, uc):
+    r = jax.nn.sigmoid(uc @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(uc @ p["wx"] + p["bx"])
+    log_a = (-RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = scale * (i.astype(jnp.float32) * uc.astype(jnp.float32))
+    return a, b
+
+
+def rglru_seq(p, x, state=None, *, return_state=False):
+    """x: (B,S,D) -> (y, new_state). Linear diagonal recurrence via
+    associative scan: h_t = a_t * h_{t-1} + b_t."""
+    g = x @ p["wgate"]
+    u = x @ p["win"]
+    uc, conv_state = causal_conv1d(u, p["conv"],
+                                   None if state is None else state["conv"])
+    a, b = _rglru_gates(p, uc)                                # fp32 (B,S,R)
+    if state is not None:
+        b = b.at[:, 0].add(a[:, 0] * state["h"].astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    y = (h * gelu(g)) @ p["wout"]
+    new_state = None
+    if return_state:
+        new_state = {"h": h[:, -1], "conv": conv_state}
+    return y, new_state
+
+
+def rglru_decode(p, x, state):
+    """x: (B,1,D); state {'h': (B,R), 'conv': (B,cw-1,R)}."""
+    g = x @ p["wgate"]
+    u = x @ p["win"]
+    uc, conv_state = causal_conv1d(u, p["conv"], state["conv"])
+    a, b = _rglru_gates(p, uc)                                # (B,1,R)
+    h = (a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]).astype(x.dtype)
+    y = (h[:, None] * gelu(g)) @ p["wout"]
+    return y, {"h": h, "conv": conv_state}
+
+
+def init_rglru_state(cfg, B, dtype):
+    R, cw = cfg.d_rnn, cfg.ssm.conv_width
+    return {"h": jnp.zeros((B, R), dtype),
+            "conv": jnp.zeros((B, cw - 1, R), dtype)}
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def mlstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    Dm = 2 * D
+    H = cfg.ssm.n_heads
+    cw = cfg.ssm.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "wup": dense_init(ks[0], (D, Dm), dtype),
+        "wz": dense_init(ks[1], (D, Dm), dtype),
+        "conv": dense_init(ks[2], (cw, Dm), dtype, fan_in=cw),
+        "wq": dense_init(ks[3], (Dm, Dm), dtype),
+        "wk": dense_init(ks[4], (Dm, Dm), dtype),
+        "wv": dense_init(ks[5], (Dm, Dm), dtype),
+        "wi": dense_init(ks[6], (Dm, H), dtype),
+        "bi": jnp.zeros((H,), dtype),
+        "wf": dense_init(ks[7], (Dm, H), dtype),
+        "bf": jnp.linspace(3.0, 6.0, H).astype(dtype),  # long-memory init
+        "gn": jnp.zeros((Dm,), dtype),
+        "wdown": dense_init(jax.random.fold_in(key, 9), (Dm, D), dtype),
+    }
+
+
+def _mlstm_qkvif(p, cfg, x, conv_state):
+    B, S, _ = x.shape
+    H = cfg.ssm.n_heads
+    Dm = p["wup"].shape[1]
+    dh = Dm // H
+    xu = x @ p["wup"]
+    z = x @ p["wz"]
+    xc, conv_state = causal_conv1d(xu, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(B, S, H, dh) * (dh ** -0.5)
+    k = (xc @ p["wk"]).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = (xu @ p["wv"]).reshape(B, S, H, dh)
+    i = (xc @ p["wi"] + p["bi"]).astype(jnp.float32)          # (B,S,H) log-i
+    f = (xc @ p["wf"] + p["bf"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f)
+    return q, k, v, i, logf, z, conv_state
+
+
+def _mlstm_step(state, qkvif):
+    """Stabilized mLSTM cell. state: C (B,H,dh,dh), n (B,H,dh), m (B,H)."""
+    C, n, m = state
+    q, k, v, i, logf = qkvif                                  # (B,H,dh)x3,(B,H)x2
+    m_new = jnp.maximum(logf + m, i)
+    i_p = jnp.exp(i - m_new)[..., None]
+    f_p = jnp.exp(logf + m - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = f_p[..., None] * C + i_p[..., None] * (vf[..., :, None] * kf[..., None, :])
+    n = f_p * n + i_p * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _gn(h, scale, eps=1e-6):
+    """Per-head group norm over the head dim. h: (..., H, dh)."""
+    h32 = h.astype(jnp.float32)
+    mu = h32.mean(-1, keepdims=True)
+    var = h32.var(-1, keepdims=True)
+    out = (h32 - mu) * jax.lax.rsqrt(var + eps)
+    flat = out.reshape(out.shape[:-2] + (-1,))
+    return flat * (1.0 + scale.astype(jnp.float32))
+
+
+def mlstm_seq(p, cfg, x, state=None, *, return_state=False):
+    B, S, D = x.shape
+    H = cfg.ssm.n_heads
+    Dm = p["wup"].shape[1]
+    dh = Dm // H
+    conv_state = None if state is None else state["conv"]
+    q, k, v, i, logf, z, conv_state = _mlstm_qkvif(p, cfg, x, conv_state)
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def body(carry, xs):
+        return _mlstm_step(carry, xs)
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i.transpose(1, 0, 2), logf.transpose(1, 0, 2))
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3)                              # (B,S,H,dh)
+    out = _gn(h, p["gn"]).astype(x.dtype)
+    y = (out * jax.nn.silu(z)) @ p["wdown"]
+    new_state = None
+    if return_state:
+        new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
+    return y, new_state
+
+
+def mlstm_decode(p, cfg, x, state):
+    q, k, v, i, logf, z, conv_state = _mlstm_qkvif(p, cfg, x, state["conv"])
+    (C, n, m), h = _mlstm_step((state["C"], state["n"], state["m"]),
+                               (q[:, 0], k[:, 0], v[:, 0], i[:, 0], logf[:, 0]))
+    out = _gn(h, p["gn"]).astype(x.dtype)[:, None]
+    y = (out * jax.nn.silu(z)) @ p["wdown"]
+    return y, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def init_mlstm_state(cfg, B, dtype):
+    H = cfg.ssm.n_heads
+    Dm = 2 * cfg.d_model
+    dh = Dm // H
+    cw = cfg.ssm.conv_width
+    return {"C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((B, cw - 1, Dm), dtype)}
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def slstm_init(key, cfg, dtype):
+    D = cfg.d_model
+    H = cfg.ssm.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 10)
+    p = {}
+    for n, kk in zip(("z", "i", "f", "o"), ks[:4]):
+        p[f"w{n}"] = dense_init(kk, (D, D), dtype)
+        p[f"b{n}"] = jnp.zeros((D,), dtype)
+    for n, kk in zip(("z", "i", "f", "o"), ks[4:8]):
+        p[f"r{n}"] = dense_init(kk, (H, dh, dh), dtype, fan_in=dh)
+    p["bf_init"] = jnp.linspace(3.0, 6.0, D).astype(dtype)  # long-memory bias
+    p["gn"] = jnp.zeros((D,), dtype)
+    p["wout"] = dense_init(ks[8], (D, D), dtype)
+    return p
+
+
+def _slstm_recur(p, h_prev, H, dh):
+    hp = h_prev.reshape(h_prev.shape[0], H, dh)
+    out = {}
+    for n in ("z", "i", "f", "o"):
+        out[n] = jnp.einsum("bhd,hde->bhe", hp, p[f"r{n}"]).reshape(h_prev.shape)
+    return out
+
+
+def _slstm_step(p, state, xg, H, dh):
+    """state: (c, n, m, h) each (B,D) fp32 (h in model dtype)."""
+    c, nrm, m, h = state
+    xz, xi, xf, xo = xg
+    r = _slstm_recur(p, h, H, dh)
+    z = jnp.tanh((xz + r["z"]).astype(jnp.float32))
+    o = jax.nn.sigmoid((xo + r["o"]).astype(jnp.float32))
+    i_log = (xi + r["i"]).astype(jnp.float32)
+    f_log = (xf + r["f"] + p["bf_init"]).astype(jnp.float32)
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_p = jnp.exp(i_log - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c = f_p * c + i_p * z
+    nrm = f_p * nrm + i_p
+    h_new = (o * c / jnp.maximum(nrm, 1.0)).astype(h.dtype)
+    return (c, nrm, m_new, h_new)
+
+
+def slstm_seq(p, cfg, x, state=None, *, return_state=False):
+    B, S, D = x.shape
+    H = cfg.ssm.n_heads
+    dh = D // H
+    xg = tuple((x @ p[f"w{n}"] + p[f"b{n}"]).transpose(1, 0, 2)
+               for n in ("z", "i", "f", "o"))
+    if state is None:
+        state = (jnp.zeros((B, D), jnp.float32), jnp.zeros((B, D), jnp.float32),
+                 jnp.full((B, D), -1e30, jnp.float32), jnp.zeros((B, D), x.dtype))
+    else:
+        state = (state["c"], state["n"], state["m"], state["h"])
+
+    def body(carry, xs):
+        new = _slstm_step(p, carry, xs, H, dh)
+        return new, new[3]
+
+    state, hs = jax.lax.scan(body, state, xg)
+    h = hs.transpose(1, 0, 2)                                 # (B,S,D)
+    out = _gn(h.reshape(B, S, H, dh), p["gn"]).astype(x.dtype)
+    y = out @ p["wout"]
+    new_state = None
+    if return_state:
+        c, nrm, m, hl = state
+        new_state = {"c": c, "n": nrm, "m": m, "h": hl}
+    return y, new_state
+
+
+def slstm_decode(p, cfg, x, state):
+    B = x.shape[0]
+    D = x.shape[-1]
+    H = cfg.ssm.n_heads
+    dh = D // H
+    xg = tuple((x[:, 0] @ p[f"w{n}"] + p[f"b{n}"]) for n in ("z", "i", "f", "o"))
+    new = _slstm_step(p, (state["c"], state["n"], state["m"], state["h"]),
+                      xg, H, dh)
+    c, nrm, m, h = new
+    out = _gn(h.reshape(B, H, dh), p["gn"]).astype(x.dtype)
+    y = (out @ p["wout"])[:, None]
+    return y, {"c": c, "n": nrm, "m": m, "h": h}
+
+
+def init_slstm_state(cfg, B, dtype):
+    D = cfg.d_model
+    return {"c": jnp.zeros((B, D), jnp.float32),
+            "n": jnp.zeros((B, D), jnp.float32),
+            "m": jnp.full((B, D), -1e30, jnp.float32),
+            "h": jnp.zeros((B, D), dtype)}

@@ -1,0 +1,411 @@
+"""Config-driven transformer stacks for all assigned architecture families.
+
+Layers are organized as *pattern units* (the repeating layer group, e.g.
+gemma3's 5xlocal+1xglobal): parameters of each unit position are stacked
+over a leading ``n_units`` axis and the stack is traversed with
+``jax.lax.scan`` — keeping HLO size proportional to the pattern length and
+making NetChange depth transforms pure slice/concat on the stacked axis.
+Layers that don't fill a whole unit (n_layers % pattern_len) live
+unstacked under ``params["rem"]``.
+
+Public API:
+  init_params(key, cfg)                    -> params pytree
+  forward(params, cfg, tokens, ...)        -> logits (B,S,V)
+  prefill(params, cfg, tokens, ...)        -> (last_logits (B,V), cache)
+  decode_step(params, cfg, token, cache, pos, ...) -> (logits (B,V), cache)
+  init_cache(cfg, B, S_max, dtype)         -> cache pytree
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import dense_init, embed_init, mlp_apply, mlp_init, rms_norm
+from repro.sharding.ctx import CPU_CTX, ShardCtx
+
+Params = Dict[str, Any]
+
+
+def _param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------- block init
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("global", "local", "crossdec"):
+        p = {"ln1": jnp.zeros((D,), dtype), "ln2": jnp.zeros((D,), dtype)}
+        p["attn"] = (A.mla_init(ks[0], cfg, dtype) if cfg.mla
+                     else A.attn_init(ks[0], cfg, dtype))
+        if kind == "crossdec":
+            p["lnx"] = jnp.zeros((D,), dtype)
+            p["xattn"] = A.cross_attn_init(ks[1], cfg, dtype)
+        if cfg.moe is not None:
+            p["moe"] = M.moe_init(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg, D, cfg.d_ff, dtype)
+        return p
+    if kind == "rglru":
+        return {"ln1": jnp.zeros((D,), dtype),
+                "rg": S.rglru_init(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((D,), dtype),
+                "mlp": mlp_init(ks[1], cfg, D, cfg.d_ff, dtype)}
+    if kind == "mlstm":
+        return {"ln1": jnp.zeros((D,), dtype),
+                "mx": S.mlstm_init(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln1": jnp.zeros((D,), dtype),
+                "sx": S.slstm_init(ks[0], cfg, dtype)}
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------- block apply (seq)
+
+def _sp_boundary(x, ctx):
+    """Sequence-parallel residual boundary: shard S over the model axis so
+    the partitioner lowers the TP partial-sum all-reduces into
+    reduce-scatter + all-gather pairs (§Perf glm4 iteration 5)."""
+    if not (getattr(ctx, "seq_parallel", False) and ctx.distributed):
+        return x
+    if x.shape[1] % ctx.model_size:
+        return x
+    from repro.models.attention import _csc
+    return _csc(x, ctx, "data", ctx.model_axis, None)
+
+
+def block_apply_seq(p, cfg, kind, x, positions, *, ctx, return_cache=False,
+                    cache_len=None, enc_out=None):
+    """Full-sequence block. Returns (x, cache_or_None)."""
+    cache = None
+    x = _sp_boundary(x, ctx)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("global", "local", "crossdec"):
+        akind = "global" if kind == "crossdec" else kind
+        if cfg.mla is not None:
+            y, cache = A.mla_apply_seq(p["attn"], cfg, h, positions, ctx=ctx,
+                                       return_cache=return_cache,
+                                       cache_len=cache_len)
+        else:
+            y, cache = A.attn_apply_seq(p["attn"], cfg, h, positions,
+                                        kind=akind, ctx=ctx,
+                                        return_cache=return_cache,
+                                        cache_len=cache_len)
+        x = x + y
+        if kind == "crossdec":
+            hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+            ckv = A.cross_kv(p["xattn"], cfg, enc_out)
+            x = x + A.cross_attn_apply(p["xattn"], cfg, hx, ckv, ctx=ctx)
+            if return_cache:
+                cache = dict(cache, xk=ckv["k"], xv=ckv["v"])
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            x = x + M.moe_apply(p["moe"], cfg, h2, ctx)
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx)
+        return x, cache
+    if kind == "rglru":
+        y, st = S.rglru_seq(p["rg"], h, None, return_state=return_cache)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx)
+        return x, st
+    if kind == "mlstm":
+        y, st = S.mlstm_seq(p["mx"], cfg, h, None, return_state=return_cache)
+        return x + y, st
+    if kind == "slstm":
+        y, st = S.slstm_seq(p["sx"], cfg, h, None, return_state=return_cache)
+        return x + y, st
+    raise ValueError(kind)
+
+
+def block_apply_decode(p, cfg, kind, x, pos, cache, *, ctx):
+    """One-token block step. Returns (x, new_cache)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("global", "local", "crossdec"):
+        akind = "global" if kind == "crossdec" else kind
+        if cfg.mla is not None:
+            y, cache_sa = A.mla_apply_decode(p["attn"], cfg, h, pos, cache, ctx=ctx)
+            new_cache = cache_sa
+        else:
+            sa = {"k": cache["k"], "v": cache["v"]}
+            y, cache_sa = A.attn_apply_decode(p["attn"], cfg, h, pos, sa,
+                                              kind=akind, ctx=ctx)
+            new_cache = dict(cache, **cache_sa)
+        x = x + y
+        if kind == "crossdec":
+            hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+            ckv = {"k": cache["xk"], "v": cache["xv"]}
+            x = x + A.cross_attn_apply(p["xattn"], cfg, hx, ckv, ctx=ctx)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            x = x + M.moe_apply(p["moe"], cfg, h2, ctx)
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx)
+        return x, new_cache
+    if kind == "rglru":
+        y, st = S.rglru_decode(p["rg"], h, cache)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx)
+        return x, st
+    if kind == "mlstm":
+        y, st = S.mlstm_decode(p["mx"], cfg, h, cache)
+        return x + y, st
+    if kind == "slstm":
+        y, st = S.slstm_decode(p["sx"], cfg, h, cache)
+        return x + y, st
+    raise ValueError(kind)
+
+
+def _block_cache_init(cfg, kind, B, S_max, dtype):
+    if kind in ("global", "local"):
+        if cfg.mla is not None:
+            return A.init_mla_cache(cfg, B, S_max, dtype)
+        return A.init_attn_cache(cfg, B, S_max, dtype, kind=kind)
+    if kind == "crossdec":
+        c = A.init_attn_cache(cfg, B, S_max, dtype, kind="global")
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        T = cfg.encoder.n_ctx
+        c["xk"] = jnp.zeros((B, T, H, hd), dtype)
+        c["xv"] = jnp.zeros((B, T, H, hd), dtype)
+        return c
+    if kind == "rglru":
+        return S.init_rglru_state(cfg, B, dtype)
+    if kind == "mlstm":
+        return S.init_mlstm_state(cfg, B, dtype)
+    if kind == "slstm":
+        return S.init_slstm_state(cfg, B, dtype)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------- whisper encoder
+
+def _enc_block_init(key, cfg, dtype):
+    D = cfg.encoder.d_model
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((D,), dtype),
+            "attn": A.attn_init(ks[0], cfg, dtype),
+            "ln2": jnp.zeros((D,), dtype),
+            "mlp": mlp_init(ks[1], cfg, D, cfg.d_ff, dtype)}
+
+
+def _enc_block_apply(p, cfg, x, positions, *, ctx):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = A._qkv(p["attn"], cfg, h)
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    B, S = q.shape[0], q.shape[1]
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    q5 = q.reshape(B, S, KV, cfg.n_heads // KV, hd)
+    q5, k, v = A.apply_head_layout_seq(q5, k, v, ctx)
+    out = A.blockwise_attention(q5, k, v, positions, positions, causal=False,
+                                window=0, banded=False,
+                                block_q=ctx.block_q, block_kv=ctx.block_kv)
+    x = x + out.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"]
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx)
+
+
+def encode(params, cfg, frames, *, ctx=CPU_CTX):
+    """Whisper encoder over stub frame embeddings (B, n_ctx, D)."""
+    x = frames
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, unit_p):
+        return _enc_block_apply(unit_p, cfg, h, positions, ctx=ctx), None
+
+    x, _ = jax.lax.scan(body, x, params["units"])
+    return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------- init
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    dtype = _param_dtype(cfg)
+    D, V = cfg.d_model, cfg.vocab_size
+    k_embed, k_units, k_rem, k_head, k_enc = jax.random.split(key, 5)
+
+    params: Params = {"embed": embed_init(k_embed, (V, D), dtype),
+                      "final_ln": jnp.zeros((D,), dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (D, V), dtype)
+
+    plen, n_units = cfg.pattern_len, cfg.n_units
+    if n_units:
+        unit = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            ki = jax.random.fold_in(k_units, i)
+            stacked = jax.vmap(lambda k: block_init(k, cfg, kind, dtype))(
+                jax.random.split(ki, n_units))
+            unit[f"b{i}"] = stacked
+        params["units"] = unit
+    rem = {}
+    for i, kind in enumerate(cfg.rem_kinds):
+        rem[f"b{i}"] = block_init(jax.random.fold_in(k_rem, i), cfg, kind, dtype)
+    if rem:
+        params["rem"] = rem
+
+    if cfg.encoder is not None:
+        enc_units = jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(k_enc, cfg.encoder.n_layers))
+        params["encoder"] = {"units": enc_units,
+                             "final_ln": jnp.zeros((D,), dtype)}
+    return params
+
+
+# ------------------------------------------------------------- embeddings
+
+def _embed(params, cfg, tokens, aux):
+    h = params["embed"][tokens].astype(_param_dtype(cfg))
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision" and aux is not None:
+        h = jnp.concatenate([aux.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _logits(params, cfg, h, fp32=True):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out = h @ w
+    return out.astype(jnp.float32) if fp32 else out
+
+
+# ------------------------------------------------------------ seq traversal
+
+def _traverse_seq(params, cfg, h, positions, *, ctx, return_cache,
+                  cache_len=None, enc_out=None):
+    """Scan units + unrolled remainder. Returns (h, caches|None)."""
+    caches_u = None
+    if cfg.n_units:
+        def unit_body(hc, unit_p):
+            hh = hc
+            outs = {}
+            for i, kind in enumerate(cfg.layer_pattern):
+                hh, c = block_apply_seq(unit_p[f"b{i}"], cfg, kind, hh,
+                                        positions, ctx=ctx,
+                                        return_cache=return_cache,
+                                        cache_len=cache_len, enc_out=enc_out)
+                if return_cache:
+                    outs[f"b{i}"] = c
+            return hh, (outs if return_cache else None)
+
+        if ctx.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if ctx.remat_policy == "dots" else None)
+            body = jax.checkpoint(unit_body, policy=policy)
+        else:
+            body = unit_body
+        h, caches_u = jax.lax.scan(body, h, params["units"])
+    caches_r = {}
+    for i, kind in enumerate(cfg.rem_kinds):
+        h, c = block_apply_seq(params["rem"][f"b{i}"], cfg, kind, h, positions,
+                               ctx=ctx, return_cache=return_cache,
+                               cache_len=cache_len, enc_out=enc_out)
+        if return_cache:
+            caches_r[f"b{i}"] = c
+    if not return_cache:
+        return h, None
+    cache = {}
+    if caches_u is not None:
+        cache["units"] = caches_u
+    if caches_r:
+        cache["rem"] = caches_r
+    return h, cache
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *,
+                   ctx: ShardCtx = CPU_CTX, aux=None):
+    """Final-norm hidden states (B, S_total, D) — callers that chunk the
+    vocab projection (big-V loss) use this instead of ``forward``."""
+    h = _embed(params, cfg, tokens, aux)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(params["encoder"], cfg, aux, ctx=ctx)
+    h, _ = _traverse_seq(params, cfg, h, positions, ctx=ctx,
+                         return_cache=False, enc_out=enc_out)
+    return rms_norm(h, params["final_ln"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, ctx: ShardCtx = CPU_CTX,
+            aux=None, fp32_logits=True):
+    """Training forward: logits for every position. tokens: (B, S_text)."""
+    h = forward_hidden(params, cfg, tokens, ctx=ctx, aux=aux)
+    return _logits(params, cfg, h, fp32_logits)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, ctx: ShardCtx = CPU_CTX,
+            aux=None, cache_len=None):
+    """Prefill: returns (last-position logits (B,V), cache)."""
+    h = _embed(params, cfg, tokens, aux)
+    S = h.shape[1]
+    cache_len = cache_len or S
+    positions = jnp.arange(S)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(params["encoder"], cfg, aux, ctx=ctx)
+    h, cache = _traverse_seq(params, cfg, h, positions, ctx=ctx,
+                             return_cache=True, cache_len=cache_len,
+                             enc_out=enc_out)
+    h = rms_norm(h[:, -1:], params["final_ln"], cfg.norm_eps)
+    return _logits(params, cfg, h)[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                ctx: ShardCtx = CPU_CTX):
+    """One decode step. token: (B,1) int32; pos: scalar int32 (position of
+    the new token). Returns (logits (B,V), new_cache)."""
+    h = _embed(params, cfg, token, None)
+    new_cache: Dict[str, Any] = {}
+    if cfg.n_units:
+        def unit_body(hc, xs):
+            unit_p, unit_c = xs
+            hh = hc
+            outs = {}
+            for i, kind in enumerate(cfg.layer_pattern):
+                hh, c = block_apply_decode(unit_p[f"b{i}"], cfg, kind, hh, pos,
+                                           unit_c[f"b{i}"], ctx=ctx)
+                outs[f"b{i}"] = c
+            return hh, outs
+
+        h, new_units = jax.lax.scan(unit_body, h,
+                                    (params["units"], cache["units"]))
+        new_cache["units"] = new_units
+    if cfg.rem_kinds:
+        new_rem = {}
+        for i, kind in enumerate(cfg.rem_kinds):
+            h, c = block_apply_decode(params["rem"][f"b{i}"], cfg, kind, h, pos,
+                                      cache["rem"][f"b{i}"], ctx=ctx)
+            new_rem[f"b{i}"] = c
+        new_cache["rem"] = new_rem
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return _logits(params, cfg, h)[:, 0], new_cache
+
+
+def init_cache(cfg: ModelConfig, B, S_max, dtype=None) -> Params:
+    dtype = dtype or _param_dtype(cfg)
+    cache: Dict[str, Any] = {}
+    if cfg.n_units:
+        unit = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            one = _block_cache_init(cfg, kind, B, S_max, dtype)
+            unit[f"b{i}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.n_units,) + x.shape), one)
+        cache["units"] = unit
+    if cfg.rem_kinds:
+        cache["rem"] = {f"b{i}": _block_cache_init(cfg, kind, B, S_max, dtype)
+                        for i, kind in enumerate(cfg.rem_kinds)}
+    return cache

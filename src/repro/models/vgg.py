@@ -1,0 +1,95 @@
+"""VGG family in functional JAX — the paper's own experimental models.
+
+Structure (matches ``repro.configs.vgg_family.VGGConfig``):
+  params = {
+    "stages": {"s0": {"c0": {"w": (3,3,Cin,Cout), "b": (Cout,)}, ...}, ...},
+    "fc":     {"f0": {"w": (Din,Dout), "b": (Dout,)}, ...},
+    "out":    {"w": (D, n_classes), "b": (n_classes,)},
+  }
+Max-pool (2x2) after every stage; ReLU after every conv / fc.
+
+The sequential conv/fc structure is what FedADP's NetChange manipulates
+(core/netchange.py): widening duplicates output channels and splits the
+*next* layer's incoming weights; deepening inserts identity convs (exact
+under ReLU since activations are non-negative).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vgg_family import VGGConfig
+
+
+def _conv_init(key, cin, cout, dtype=jnp.float32):
+    k1, _ = jax.random.split(key)
+    fan_in = 3 * 3 * cin
+    w = jax.random.normal(k1, (3, 3, cin, cout)) * math.sqrt(2.0 / fan_in)
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def _fc_init(key, din, dout, dtype=jnp.float32):
+    w = jax.random.normal(key, (din, dout)) * math.sqrt(2.0 / din)
+    return {"w": w.astype(dtype), "b": jnp.zeros((dout,), dtype)}
+
+
+def init_params(key, cfg: VGGConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    params: Dict[str, Any] = {"stages": {}, "fc": {}}
+    cin = cfg.in_channels
+    for si, widths in enumerate(cfg.stages):
+        stage = {}
+        for li, cout in enumerate(widths):
+            stage[f"c{li}"] = _conv_init(
+                jax.random.fold_in(key, si * 100 + li), cin, cout, dtype)
+            cin = cout
+        params["stages"][f"s{si}"] = stage
+    spatial = cfg.image_size // (2 ** len(cfg.stages))
+    din = cin * spatial * spatial
+    for fi, dout in enumerate(cfg.classifier):
+        params["fc"][f"f{fi}"] = _fc_init(
+            jax.random.fold_in(key, 10_000 + fi), din, dout, dtype)
+        din = dout
+    params["out"] = _fc_init(jax.random.fold_in(key, 20_000), din,
+                             cfg.n_classes, dtype)
+    return params
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params, cfg: VGGConfig, x):
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    n_stages = len(params["stages"])
+    for si in range(n_stages):
+        stage = params["stages"][f"s{si}"]
+        for li in range(len(stage)):
+            x = jax.nn.relu(_conv(x, stage[f"c{li}"]))
+        x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    for fi in range(len(params["fc"])):
+        p = params["fc"][f"f{fi}"]
+        x = jax.nn.relu(x @ p["w"] + p["b"])
+    out = params["out"]
+    return x @ out["w"] + out["b"]
+
+
+def loss_fn(params, cfg: VGGConfig, batch):
+    """batch: {'x': (B,H,W,C), 'y': (B,) int labels}."""
+    logits = apply(params, cfg, batch["x"]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    loss = (logz - ll).mean()
+    acc = (logits.argmax(-1) == batch["y"]).mean()
+    return loss, acc

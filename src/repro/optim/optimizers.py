@@ -1,0 +1,100 @@
+"""Self-contained optimizers (no optax dependency).
+
+An ``Optimizer`` is a pair of pure functions:
+  init(params)                       -> state
+  update(grads, state, params, step) -> (new_params, new_state)
+
+AdamW keeps fp32 master copies of bf16 params (mixed-precision training on
+the TPU target); SGD matches the paper's local-update rule (Eq. 3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def sgd(lr: Union[float, Schedule], momentum: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step=0):
+        lr_t = sched(jnp.asarray(step))
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        new = jax.tree.map(
+            lambda p, m: (p - lr_t * m.astype(jnp.float32)).astype(p.dtype),
+            params, mu)
+        return new, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          master_fp32: bool = True) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+        if master_fp32:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params, step=0):
+        step = jnp.asarray(step, jnp.int32)
+        lr_t = sched(step)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        masters = state.get("master", params)
+
+        def step_fn(p32, m_, v_):
+            upd = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            p32f = p32.astype(jnp.float32)
+            return p32f - lr_t * (upd + weight_decay * p32f)
+
+        new_master = jax.tree.map(step_fn, masters, m, v)
+        new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                                  new_master, params)
+        new_state = {"m": m, "v": v}
+        if master_fp32:
+            new_state["master"] = new_master
+        return new_params, new_state
+
+    return Optimizer(init, update)

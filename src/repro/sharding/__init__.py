@@ -1,0 +1,1 @@
+from repro.sharding.ctx import CPU_CTX, ShardCtx  # noqa: F401

@@ -1,0 +1,56 @@
+"""Distribution context threaded (statically) through model code.
+
+``ShardCtx`` tells the model which mesh axes exist so that layers with an
+explicit distribution strategy (the MoE expert-parallel block) can use
+``shard_map`` + collectives, while single-device paths (CPU smoke tests)
+run the identical math locally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ()     # batch axes, e.g. ("pod", "data")
+    model_axis: Optional[str] = None    # tensor/expert-parallel axis
+    # perf knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    banded_local: bool = True           # banded blockwise attn for local layers
+    causal_skip: bool = False           # skip fully-masked kv blocks (causal)
+    mla_absorb: bool = False            # absorbed MLA decode (w_kv_b folded)
+    moe_all_to_all: bool = False        # a2a dispatch instead of psum combine
+    block_q: int = 512
+    block_kv: int = 512
+    remat: bool = False                 # checkpoint each layer unit
+    remat_policy: str = "full"          # full | dots (save matmul outputs)
+    embed_tp: bool = False              # embed: (model, None) instead of
+                                        # (model, data) — kills the per-
+                                        # loss-chunk logit all-reduce
+    tp_bf16_reduce: bool = False        # row-parallel projections reduce
+                                        # partial sums in bf16 via shard_map
+                                        # (XLA's default AR is f32 — 2x bytes)
+    seq_parallel: bool = False          # Megatron-style sequence parallelism:
+                                        # residual stream sharded S->model
+                                        # between blocks (AR -> RS + AG)
+
+    @property
+    def distributed(self) -> bool:
+        return self.mesh is not None and self.model_axis is not None
+
+    @property
+    def model_size(self) -> int:
+        if not self.distributed:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def batch_spec(self, *rest) -> P:
+        lead = self.data_axes if self.data_axes else None
+        return P(lead, *rest)
+
+
+CPU_CTX = ShardCtx()

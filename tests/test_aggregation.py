@@ -1,0 +1,50 @@
+"""FedAvg invariants (paper Eq. 1-2) — property-based."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (client_weights, fedavg, fedavg_stacked,
+                                    stack_trees)
+
+
+@given(ns=st.lists(st.integers(1, 1000), min_size=1, max_size=10))
+@settings(max_examples=50, deadline=None)
+def test_client_weights_normalized(ns):
+    w = client_weights(ns)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+    assert (w >= 0).all()
+    np.testing.assert_allclose(w, np.asarray(ns) / np.sum(ns), rtol=1e-5)
+
+
+@given(k=st.integers(1, 6), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_fedavg_identity_and_convexity(k, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (3, 4)), "b": {"c": jnp.ones((2,))}}
+    w = client_weights([1] * k)
+    # aggregating k copies of the same tree returns the tree
+    agg = fedavg([tree] * k, w)
+    np.testing.assert_allclose(np.asarray(agg["a"]), np.asarray(tree["a"]),
+                               rtol=1e-5, atol=1e-6)
+    # result is within the convex hull (elementwise min/max bound)
+    import functools
+    trees = [jax.tree.map(lambda x, i=i: x + i, tree) for i in range(k)]
+    agg = fedavg(trees, w)
+    lo = jax.tree.map(lambda *ls: functools.reduce(jnp.minimum, ls), *trees)
+    hi = jax.tree.map(lambda *ls: functools.reduce(jnp.maximum, ls), *trees)
+    assert bool(jnp.all(agg["a"] >= lo["a"] - 1e-5))
+    assert bool(jnp.all(agg["a"] <= hi["a"] + 1e-5))
+
+
+@given(k=st.integers(1, 5), use_kernel=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_stacked_matches_list(k, use_kernel):
+    key = jax.random.PRNGKey(k)
+    trees = [{"w": jax.random.normal(jax.random.fold_in(key, i), (6, 5))}
+             for i in range(k)]
+    w = client_weights(list(range(1, k + 1)))
+    a = fedavg(trees, w)
+    b = fedavg_stacked(stack_trees(trees), w, use_kernel=use_kernel)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,104 @@
+"""Blockwise attention vs naive reference; banded == full; decode caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    ring_positions)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k) * hd ** -0.5
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (pos[:, None] >= pos[None, :])
+    if window > 0:
+        mask = mask & (pos[:, None] - pos[None, :] < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("S,H,KV,window,bq,bk",
+                         [(48, 4, 2, 0, 16, 16), (65, 4, 1, 0, 16, 32),
+                          (64, 2, 2, 24, 16, 16), (100, 4, 4, 17, 32, 16)])
+def test_blockwise_matches_naive(S, H, KV, window, bq, bk):
+    hd = 16
+    q = jax.random.normal(KEY, (2, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, S, KV, hd))
+    pos = jnp.arange(S)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    q5 = q.reshape(2, S, KV, H // KV, hd)
+    for banded in ([False, True] if window else [False]):
+        got = blockwise_attention(q5, k, v, pos, pos, causal=True,
+                                  window=window, block_q=bq, block_kv=bk,
+                                  banded=banded)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"banded={banded}")
+
+
+def test_causal_skip_matches_full():
+    S, H, KV, hd = 64, 2, 2, 16
+    q = jax.random.normal(KEY, (1, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (1, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (1, S, KV, hd))
+    pos = jnp.arange(S)
+    q5 = q.reshape(1, S, KV, H // KV, hd)
+    a = blockwise_attention(q5, k, v, pos, pos, causal=True, window=0,
+                            block_q=16, block_kv=16, banded=False,
+                            causal_skip=False)
+    b = blockwise_attention(q5, k, v, pos, pos, causal=True, window=0,
+                            block_q=16, block_kv=16, banded=False,
+                            causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_blockwise_is_differentiable():
+    S, H, hd = 32, 2, 8
+    q = jax.random.normal(KEY, (1, S, H, hd))
+    pos = jnp.arange(S)
+
+    def f(q):
+        q5 = q.reshape(1, S, H, 1, hd)
+        return blockwise_attention(q5, q, q, pos, pos, causal=True, window=8,
+                                   block_q=16, block_kv=16, banded=True).sum()
+
+    g = jax.grad(f)(q)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@given(pos=st.integers(0, 300), W=st.sampled_from([16, 64, 128]))
+@settings(max_examples=20, deadline=None)
+def test_ring_positions_invariants(pos, W):
+    kp = np.asarray(ring_positions(jnp.int32(pos), W))
+    # every held position is in (pos - W, pos] and lives in its slot
+    held = kp[kp >= 0]
+    assert (held > pos - W).all() and (held <= pos).all()
+    slots = np.where(kp >= 0)[0]
+    assert ((held % W) == slots).all()
+    # exactly min(pos+1, W) positions held
+    assert len(held) == min(pos + 1, W)
+
+
+def test_decode_attention_matches_naive_last_row():
+    S, H, KV, hd = 40, 4, 2, 16
+    q = jax.random.normal(KEY, (2, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (2, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (2, S, KV, hd))
+    want = naive_attention(q, k, v, causal=True)[:, -1]
+    got = decode_attention(q[:, -1], k, v, jnp.arange(S), jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,64 @@
+"""Baseline semantics: Clustered-FL clusters, FlexiFed common prefix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vgg_family import scaled, vgg
+from repro.core import ClusteredFL, FlexiFed, vgg_chain
+from repro.models import vgg as V
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(archs):
+    cfgs = [scaled(vgg(a), 0.125, 32) for a in archs]
+    ps = [V.init_params(jax.random.fold_in(KEY, i), c)
+          for i, c in enumerate(cfgs)]
+    return cfgs, ps
+
+
+def test_clustered_fl_averages_within_clusters_only():
+    archs = ["vgg13", "vgg13", "vgg19"]
+    cfgs, ps = _params(archs)
+    algo = ClusteredFL(cfgs, [1, 1, 1])
+    new = algo.round(list(ps), lambda k, p: p, 0)
+    # the two vgg13 clients end identical; vgg19 untouched
+    for a, b in zip(jax.tree.leaves(new[0]), jax.tree.leaves(new[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(new[2]), jax.tree.leaves(ps[2])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and vgg13 result is the average of the two inputs
+    want = (np.asarray(ps[0]["out"]["w"]) + np.asarray(ps[1]["out"]["w"])) / 2
+    np.testing.assert_allclose(np.asarray(new[0]["out"]["w"]), want,
+                               rtol=1e-5)
+
+
+def test_flexifed_common_prefix_extent():
+    archs = ["vgg13", "vgg16-wider", "vgg19"]
+    cfgs, ps = _params(archs)
+    algo = FlexiFed(cfgs, [1, 1, 1], vgg_chain)
+    common = algo._common_prefix(ps)
+    # stages 1-2 have identical structure everywhere (2+2 convs); stage 3
+    # diverges in depth (2 vs 3 vs 4 convs) at chain position 6... the
+    # prefix must cover at least the first 4 convs and stop before any
+    # width/depth mismatch.
+    assert len(common) >= 4
+    chain0 = vgg_chain(cfgs[0], ps[0])
+    # verify every common position has identical layer-id across clients
+    for pos in common:
+        ids = {tuple(vgg_chain(c, p)[pos][0]) for c, p in zip(cfgs, ps)}
+        assert len(ids) == 1
+
+
+def test_flexifed_aggregates_prefix_across_all():
+    archs = ["vgg13", "vgg19"]
+    cfgs, ps = _params(archs)
+    algo = FlexiFed(cfgs, [1, 1], vgg_chain)
+    new = algo.round([jax.tree.map(jnp.array, p) for p in ps],
+                     lambda k, p: p, 0)
+    w0 = np.asarray(new[0]["stages"]["s0"]["c0"]["w"])
+    w1 = np.asarray(new[1]["stages"]["s0"]["c0"]["w"])
+    np.testing.assert_array_equal(w0, w1)
+    want = (np.asarray(ps[0]["stages"]["s0"]["c0"]["w"])
+            + np.asarray(ps[1]["stages"]["s0"]["c0"]["w"])) / 2
+    np.testing.assert_allclose(w0, want, rtol=1e-5)

@@ -1,0 +1,141 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------- fedavg
+@pytest.mark.parametrize("k", [1, 3, 20])
+@pytest.mark.parametrize("n", [128, 1000, 5000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_kernel_sweep(k, n, dtype):
+    from repro.kernels.fedavg import ops, ref
+    x = jax.random.normal(KEY, (k, n), dtype=dtype)
+    w = jax.random.uniform(jax.random.fold_in(KEY, 1), (k,))
+    w = w / w.sum()
+    got = ops.weighted_sum(x, w)
+    want = ref.weighted_sum_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_fedavg_kernel_nd_shapes():
+    from repro.kernels.fedavg import ops, ref
+    x = jax.random.normal(KEY, (4, 3, 5, 7))
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    got = ops.weighted_sum(x, w)
+    want = ref.weighted_sum_ref(x.reshape(4, -1), w).reshape(3, 5, 7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# -------------------------------------------------------------- netchange
+@pytest.mark.parametrize("rows,old,new", [(7, 30, 50), (64, 128, 256),
+                                          (5, 3, 100), (300, 260, 261)])
+@pytest.mark.parametrize("split", [False, True])
+def test_widen_kernel_sweep(rows, old, new, split):
+    from repro.core.netchange import dup_mapping
+    from repro.kernels.netchange import ops, ref
+    x = jax.random.normal(KEY, (rows, old))
+    mapping = dup_mapping(old, new, tag="k", seed=3)
+    got = ops.widen_cols(x, mapping, split=split)
+    counts = np.bincount(mapping, minlength=old)
+    scale = (1.0 / counts[mapping]).astype(np.float32) if split \
+        else np.ones(new, np.float32)
+    want = ref.widen_ref(x, jnp.asarray(mapping), jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_widen_kernel_matches_core_semantics():
+    """Kernel == repro.core.netchange.widen_in/out on real weights."""
+    from repro.core import netchange as nc
+    from repro.kernels.netchange import ops
+    w = jax.random.normal(KEY, (40, 24))
+    m = nc.dup_mapping(24, 40, tag="q", seed=7)
+    np.testing.assert_allclose(
+        np.asarray(ops.widen_cols(w, m, split=False)),
+        np.asarray(nc.widen_in(w, m, axis=-1)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.widen_cols(w, m, split=True)),
+        np.asarray(nc.widen_out(w.T, m, 24, axis=0).T), rtol=1e-6)
+
+
+# ---------------------------------------------------------- swa attention
+@pytest.mark.parametrize("B,H,KV,hd,S", [(1, 4, 1, 64, 256), (2, 8, 2, 32, 384),
+                                         (3, 6, 6, 128, 128)])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_decode_sweep(B, H, KV, hd, S, window, dtype):
+    from repro.kernels.swa_attention import ops, ref
+    q = jax.random.normal(KEY, (B, H, hd), dtype=dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd), dtype=dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd), dtype=dtype)
+    key_pos = jnp.arange(S)
+    pos = jnp.int32(S - 10)
+    got = ops.decode_attention(q, k, v, key_pos, pos, window=window,
+                               block_s=128)
+    want = ref.decode_ref(q.reshape(B, KV, H // KV, hd), k, v, key_pos, pos,
+                          window=window).reshape(B, H, hd)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_decode_ring_cache_positions():
+    """Ring-buffer caches: unwritten slots (< 0) are masked out."""
+    from repro.kernels.swa_attention import ops, ref
+    from repro.models.attention import ring_positions
+    B, H, KV, hd, W = 1, 2, 1, 32, 128
+    pos = jnp.int32(37)                     # ring only partially written
+    key_pos = ring_positions(pos, W)
+    assert int((key_pos >= 0).sum()) == 38
+    q = jax.random.normal(KEY, (B, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, W, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, W, KV, hd))
+    got = ops.decode_attention(q, k, v, key_pos, pos, window=W, block_s=64)
+    want = ref.decode_ref(q.reshape(B, KV, H, hd), k, v, key_pos, pos,
+                          window=W).reshape(B, H, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("B,KV,G,S,hd,win,bq,bk",
+                         [(1, 2, 2, 256, 32, 64, 64, 64),
+                          (2, 1, 4, 512, 64, 128, 128, 64),
+                          (1, 2, 1, 256, 32, 0, 64, 64),   # full causal
+                          (1, 1, 2, 128, 16, 16, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_prefill_kernel_sweep(B, KV, G, S, hd, win, bq, bk, dtype):
+    from repro.kernels.swa_attention.prefill import swa_prefill
+    from repro.kernels.swa_attention.ref import prefill_ref
+    q = jax.random.normal(KEY, (B, KV, G, S, hd), dtype=dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd),
+                          dtype=dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd),
+                          dtype=dtype)
+    got = swa_prefill(q, k, v, window=win, block_q=bq, block_kv=bk)
+    want = prefill_ref(q, k, v, window=win)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_kernel_vs_model_decode_attention():
+    """Pallas kernel == the model-side XLA decode attention path."""
+    from repro.kernels.swa_attention import ops
+    from repro.models.attention import decode_attention as xla_decode
+    B, H, KV, hd, S = 2, 8, 4, 64, 256
+    q = jax.random.normal(KEY, (B, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (B, S, KV, hd))
+    key_pos = jnp.arange(S)
+    pos = jnp.int32(S - 1)
+    got = ops.decode_attention(q, k, v, key_pos, pos, window=128)
+    want = xla_decode(q, k, v, key_pos, pos, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,82 @@
+"""Property tests for the NetChange primitives (paper Alg. 2 / Alg. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import netchange as nc
+
+
+@given(old=st.integers(1, 40), extra=st.integers(0, 40),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_dup_mapping_properties(old, extra, seed):
+    m = nc.dup_mapping(old, old + extra, tag="t", seed=seed)
+    assert m.shape == (old + extra,)
+    assert (m[:old] == np.arange(old)).all()          # identity prefix
+    assert (m >= 0).all() and (m < old).all()
+    m2 = nc.dup_mapping(old, old + extra, tag="t", seed=seed)
+    assert (m == m2).all()                            # deterministic
+
+
+@given(rows=st.integers(1, 8), old=st.integers(1, 12), extra=st.integers(0, 12),
+       seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_widen_function_preserving(rows, old, extra, seed):
+    """x @ W_in @ W_out is invariant under To-Wider (Alg. 2 semantics)."""
+    rng = np.random.default_rng(seed)
+    w_in = jnp.asarray(rng.standard_normal((rows, old)), jnp.float32)
+    w_out = jnp.asarray(rng.standard_normal((old, 3)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, rows)), jnp.float32)
+    m = nc.dup_mapping(old, old + extra, tag="w", seed=seed)
+    w_in2 = nc.widen_in(w_in, m, axis=-1)
+    w_out2 = nc.widen_out(w_out, m, old, axis=0)
+    y1 = x @ w_in @ w_out
+    y2 = x @ w_in2 @ w_out2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(rows=st.integers(1, 8), old=st.integers(2, 12), extra=st.integers(0, 12),
+       seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_fold_inverts_widen(rows, old, extra, seed):
+    rng = np.random.default_rng(seed)
+    w_in = jnp.asarray(rng.standard_normal((rows, old)), jnp.float32)
+    w_out = jnp.asarray(rng.standard_normal((old, 3)), jnp.float32)
+    m = nc.dup_mapping(old, old + extra, tag="f", seed=seed)
+    wi = nc.widen_in(w_in, m, axis=-1)
+    wo = nc.widen_out(w_out, m, old, axis=0)
+    np.testing.assert_allclose(np.asarray(nc.narrow_fold_in(wi, m, old, axis=-1)),
+                               np.asarray(w_in), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(nc.narrow_fold_out(wo, m, old, axis=0)),
+                               np.asarray(w_out), rtol=1e-5, atol=1e-5)
+
+
+def test_narrow_paper_mass_redistribution():
+    """Alg. 3: survivors absorb sum(deleted)/N_tar of outgoing weight."""
+    w = jnp.asarray(np.arange(12, dtype=np.float32).reshape(6, 2))
+    out = nc.narrow_out_paper(w, 4, axis=0)
+    dropped = np.asarray(w[4:]).sum(axis=0)
+    expect = np.asarray(w[:4]) + dropped / 4
+    np.testing.assert_allclose(np.asarray(out), expect)
+    # total outgoing mass preserved
+    np.testing.assert_allclose(np.asarray(out).sum(0), np.asarray(w).sum(0))
+
+
+def test_identity_conv_exact_under_relu():
+    from repro.models.vgg import _conv
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 5)))
+    p = {"w": nc.identity_conv(5), "b": jnp.zeros((5,))}
+    y = jax.nn.relu(_conv(x, p))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_zero_like_output_proj():
+    p = {"attn": {"wq": jnp.ones((3, 3)), "wo": jnp.ones((3, 3))},
+         "mlp": {"wd": jnp.ones((3, 3)), "wg": jnp.ones((3, 3))}}
+    z = nc.zero_like_output_proj(p, ("wo", "wd"))
+    assert float(z["attn"]["wo"].sum()) == 0.0
+    assert float(z["mlp"]["wd"].sum()) == 0.0
+    assert float(z["attn"]["wq"].sum()) == 9.0

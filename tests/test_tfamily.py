@@ -1,0 +1,99 @@
+"""Transformer-family NetChange (beyond-paper): function preservation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import tfamily
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _variant_pair(arch, **kw):
+    cfg = reduced(get_config(arch), n_units=2, d_model=128)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    var = tfamily.make_variant(cfg, **kw)
+    if var.moe is not None:
+        var = dataclasses.replace(var, moe=dataclasses.replace(
+            var.moe, capacity_factor=8.0))
+    return var, tfamily.union([var, cfg])
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("glm4-9b", dict(n_units=1, ffn_scale=0.5)),
+    ("gemma-7b", dict(n_units=1, ffn_scale=0.5)),
+    ("recurrentgemma-9b", dict(n_units=1, ffn_scale=0.5)),
+    ("xlstm-125m", dict(n_units=1)),
+    ("internvl2-1b", dict(n_units=1, ffn_scale=0.5)),
+])
+def test_up_preserves_function(arch, kw):
+    var, uni = _variant_pair(arch, **kw)
+    m_v = get_model(var)
+    p = m_v.init(KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, var.vocab_size)
+    aux = None
+    if var.frontend is not None and var.frontend.kind == "vision":
+        aux = jax.random.normal(KEY, (2, var.frontend.n_prefix, var.d_model))
+    y0 = m_v.forward(p, toks, aux=aux)
+    pg = tfamily.up(p, var, uni, seed=3)
+    y1 = get_model(uni).forward(pg, toks, aux=aux)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("glm4-9b", dict(n_units=1, ffn_scale=0.5)),
+    ("recurrentgemma-9b", dict(n_units=1, ffn_scale=0.5)),
+])
+def test_fold_roundtrip(arch, kw):
+    var, uni = _variant_pair(arch, **kw)
+    m_v = get_model(var)
+    p = m_v.init(KEY)
+    toks = jax.random.randint(KEY, (2, 10), 0, var.vocab_size)
+    y0 = m_v.forward(p, toks)
+    pg = tfamily.up(p, var, uni, seed=3)
+    pb = tfamily.down(pg, uni, var, seed=3, mode="fold")
+    y2 = m_v.forward(pb, toks)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y2),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_moe_expert_widening_exact_under_soft_routing():
+    cfg = reduced(get_config("mixtral-8x7b"), n_units=2, d_model=64)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, n_experts=4, top_k=4, capacity_factor=8.0))
+    var = tfamily.make_variant(cfg, n_units=1, n_experts=2)
+    var = dataclasses.replace(var, moe=dataclasses.replace(
+        var.moe, top_k=2, capacity_factor=8.0))
+    uni = tfamily.union([var, cfg])
+    m_v = get_model(var)
+    p = m_v.init(KEY)
+    toks = jax.random.randint(KEY, (2, 10), 0, var.vocab_size)
+    y0 = m_v.forward(p, toks)
+    y1 = get_model(uni).forward(tfamily.up(p, var, uni, seed=1), toks)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_down_paper_produces_variant_shapes():
+    var, uni = _variant_pair("glm4-9b", n_units=1, ffn_scale=0.5)
+    gp = get_model(uni).init(KEY)
+    cp = tfamily.down(gp, uni, var, mode="paper")
+    want = jax.tree.map(lambda l: l.shape, get_model(var).init(KEY))
+    got = jax.tree.map(lambda l: l.shape, cp)
+    assert want == got
+
+
+def test_union_takes_elementwise_max():
+    cfg = reduced(get_config("glm4-9b"), n_units=2)   # 4 layers total
+    a = tfamily.make_variant(cfg, n_units=1, ffn_scale=0.5)   # shallow, wide
+    b = tfamily.make_variant(cfg, n_units=2, ffn_scale=0.25)  # deeper, narrow
+    u = tfamily.union([a, b])
+    assert u.n_layers == b.n_layers  # deepest cohort member
+    assert u.d_ff == a.d_ff          # widest cohort member

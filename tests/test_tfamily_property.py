@@ -1,0 +1,50 @@
+"""Property tests over random variant lattices (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.core import tfamily
+
+BASE = reduced(get_config("glm4-9b"), n_units=3, d_model=64)
+KEY = jax.random.PRNGKey(0)
+
+
+@given(units=st.lists(st.integers(1, 3), min_size=1, max_size=4),
+       scales=st.lists(st.sampled_from([0.25, 0.5, 1.0]), min_size=1,
+                       max_size=4))
+@settings(max_examples=20, deadline=None)
+def test_union_upper_bounds_every_member(units, scales):
+    n = min(len(units), len(scales))
+    cohort = [tfamily.make_variant(BASE, n_units=u, ffn_scale=s)
+              for u, s in zip(units[:n], scales[:n])]
+    uni = tfamily.union(cohort)
+    for c in cohort:
+        assert uni.n_layers >= c.n_layers
+        assert uni.d_ff >= c.d_ff
+    # idempotence: union with itself changes nothing structural
+    uni2 = tfamily.union([uni, uni])
+    assert (uni2.n_layers, uni2.d_ff) == (uni.n_layers, uni.d_ff)
+    # union is a member-wise max: it equals some member on each coordinate
+    assert uni.n_layers in {c.n_layers for c in cohort}
+    assert uni.d_ff in {c.d_ff for c in cohort}
+
+
+@given(u=st.integers(1, 2), s=st.sampled_from([0.25, 0.5]),
+       seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_up_then_paper_down_restores_shapes(u, s, seed):
+    var = tfamily.make_variant(BASE, n_units=u, ffn_scale=s)
+    uni = tfamily.union([var, BASE])
+    from repro.models import transformer as T
+    p = T.init_params(jax.random.fold_in(KEY, seed), var)
+    up = tfamily.up(p, var, uni, seed=seed)
+    down = tfamily.down(up, uni, var, seed=seed, mode="paper")
+    want = jax.tree.map(lambda l: l.shape, p)
+    got = jax.tree.map(lambda l: l.shape, down)
+    assert want == got
+    for leaf in jax.tree.leaves(down):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()

@@ -1,0 +1,64 @@
+"""FedADP on the VGG family: union, function preservation, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg_family import (PAPER_COHORT, paper_client_archs,
+                                      scaled, union_config, vgg)
+from repro.core import vggops
+from repro.models import vgg as V
+
+KEY = jax.random.PRNGKey(0)
+COHORT = {a: scaled(vgg(a)) for a in PAPER_COHORT}
+GLOBAL = union_config(list(COHORT.values()))
+X = jax.random.normal(KEY, (3, 32, 32, 3))
+
+
+def test_union_is_vgg19_wider():
+    gw = scaled(vgg("vgg19-wider"))
+    assert GLOBAL.stages == gw.stages
+    assert GLOBAL.classifier == gw.classifier
+
+
+def test_paper_cohort_assignment():
+    archs = paper_client_archs()
+    assert len(archs) == 20
+    assert sum(1 for a in archs if a == "vgg19") == 6
+
+
+@pytest.mark.parametrize("arch", PAPER_COHORT)
+def test_up_preserves_function(arch):
+    cfg = COHORT[arch]
+    p = V.init_params(jax.random.fold_in(KEY, 1), cfg)
+    y0 = V.apply(p, cfg, X)
+    pg = vggops.up(p, cfg, GLOBAL, seed=5)
+    y1 = V.apply(pg, GLOBAL, X)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["vgg13", "vgg16-wider", "vgg19"])
+def test_fold_down_inverts_up(arch):
+    cfg = COHORT[arch]
+    p = V.init_params(jax.random.fold_in(KEY, 2), cfg)
+    pg = vggops.up(p, cfg, GLOBAL, seed=9)
+    pb = vggops.down(pg, GLOBAL, cfg, seed=9, mode="fold")
+    y0 = V.apply(p, cfg, X)
+    y2 = V.apply(pb, cfg, X)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["vgg13", "vgg15", "vgg18"])
+def test_down_paper_produces_client_shapes(arch):
+    cfg = COHORT[arch]
+    gp = V.init_params(KEY, GLOBAL)
+    cp = vggops.down(gp, GLOBAL, cfg, mode="paper")
+    want = jax.tree.map(lambda l: l.shape, V.init_params(KEY, cfg))
+    got = jax.tree.map(lambda l: l.shape, cp)
+    assert want == got
+    # and the narrowed model still runs
+    y = V.apply(cp, cfg, X)
+    assert y.shape == (3, cfg.n_classes)
+    assert not bool(jnp.isnan(y).any())
