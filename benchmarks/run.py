@@ -20,7 +20,7 @@ import time
 def main() -> None:
     only = os.environ.get("FEDADP_BENCH_ONLY")
     sections = only.split(",") if only else [
-        "kernels", "netchange", "roofline", "fig4", "table1"]
+        "kernels", "netchange", "unified", "roofline", "fig4", "table1"]
     csv = ["name,us_per_call,derived"]
     for name in sections:
         t0 = time.time()
@@ -34,6 +34,8 @@ def main() -> None:
                 from benchmarks.kernels import main as m
             elif name == "netchange":
                 from benchmarks.netchange_bench import main as m
+            elif name == "unified":
+                from benchmarks.unified_bench import main as m
             elif name == "roofline":
                 from benchmarks.roofline_report import main as m
             elif name == "ablations":

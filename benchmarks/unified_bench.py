@@ -1,0 +1,95 @@
+"""Per-client loop vs cohort-parallel unified engine wall clock.
+
+The unified engine (fl/engine.py) replaces the Python loop over K clients
+with one stacked vmapped program; this bench measures the per-round wall
+clock of both Simulator paths across cohort sizes K in {4, 8, 16} on a
+depth-heterogeneous VGG cohort (where the two are numerically equivalent
+— tests/test_unified.py). Compile time is excluded by a 1-round warmup
+run on the SAME Simulator (grad fns and the engine's jitted step are
+cached per instance) before the timed rounds. Numbers feed
+EXPERIMENTS.md §Perf.
+
+On a single device the two paths are roughly wall-clock neutral on CPU
+(the engine trades K dispatches for union-depth padding FLOPs); the win
+is sharding the client axis. FEDADP_BENCH_DEVICES=N forces an N-device
+host platform (set BEFORE jax initializes — works standalone or with
+FEDADP_BENCH_ONLY=unified) and runs the unified path shard_map-ed over
+a client mesh.
+
+CSV rows: unified/K{K}/{loop|unified},us_per_round,rounds=N
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+_DEV = os.environ.get("FEDADP_BENCH_DEVICES")
+if _DEV and "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={_DEV} "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+from typing import List
+
+from repro.configs.vgg_family import scaled, vgg
+from repro.core import VGGFamily
+from repro.data import EASY, ClientSampler, image_classification, iid_partition
+from repro.fl import FLRunConfig, Simulator
+from repro.sharding import cohort_mesh
+
+DEPTH_ARCHS = ("vgg13", "vgg15", "vgg17", "vgg19")  # depth-only cohort
+
+
+def _cohort(K: int, n_per_client: int, batch: int):
+    family = VGGFamily()
+    cfgs = [scaled(vgg(DEPTH_ARCHS[k % len(DEPTH_ARCHS)]), 0.125, 64)
+            for k in range(K)]
+    n = n_per_client * K
+    data = image_classification(EASY, n, seed=0)
+    test = image_classification(EASY, 64, seed=99)
+    parts = iid_partition(n, K, seed=0)
+
+    def samplers():
+        return [ClientSampler(data, p, round_fraction=0.5, batch_size=batch,
+                              seed=i) for i, p in enumerate(parts)]
+
+    return family, cfgs, samplers, test
+
+
+def _per_round(family, cfgs, samplers, test, engine: str, rounds: int) -> float:
+    rc = FLRunConfig(method="fedadp", rounds=1, local_epochs=1, lr=0.05,
+                     momentum=0.9, eval_every=10 ** 9, engine=engine)
+    mesh = cohort_mesh(len(cfgs)) if engine == "unified" else None
+    sim = Simulator(family, cfgs, samplers(), rc, test, mesh=mesh)
+    sim.run()                                   # warmup: pays compilation
+    sim.cfg = dataclasses.replace(rc, rounds=rounds)
+    return sim.run()["wall_s"] / rounds
+
+
+def main(csv: List[str]):
+    import jax
+    if _DEV and len(jax.devices()) != int(_DEV):
+        # jax was initialized before this module could set XLA_FLAGS
+        # (e.g. an earlier benchmarks/run.py section imported it) —
+        # flag it so single-device rows aren't mistaken for sharded ones.
+        csv.append(f"unified/devices,0,WARN=requested {_DEV} devices but "
+                   f"jax has {len(jax.devices())}; run standalone or with "
+                   "FEDADP_BENCH_ONLY=unified")
+    full = os.environ.get("FEDADP_BENCH_FULL")
+    n_per_client, batch, rounds = (256, 64, 5) if full else (64, 32, 3)
+    for K in (4, 8, 16):
+        family, cfgs, samplers, test = _cohort(K, n_per_client, batch)
+        per = {}
+        for engine in ("loop", "unified"):
+            per[engine] = _per_round(family, cfgs, samplers, test, engine,
+                                     rounds)
+            csv.append(f"unified/K{K}/{engine},{per[engine] * 1e6:.0f},"
+                       f"rounds={rounds}")
+        csv.append(f"unified/K{K}/speedup,"
+                   f"{per['loop'] / max(per['unified'], 1e-9):.2f},x")
+    return csv
+
+
+if __name__ == "__main__":
+    rows = main(["name,us_per_call,derived"])
+    print("\n".join(rows))

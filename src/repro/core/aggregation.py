@@ -4,11 +4,12 @@ Two layouts:
   * list-of-trees   — server-side aggregation of K client pytrees,
   * stacked tree    — every leaf has a leading K axis (the unified-space
                       simulation layout); hot path backed by the Pallas
-                      ``fedavg`` kernel on TPU (jnp fallback elsewhere).
+                      ``fedavg`` kernel on TPU (jnp fallback elsewhere,
+                      selected automatically when ``use_kernel=None``).
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +36,17 @@ def fedavg(trees: Sequence, weights) -> object:
     return jax.tree.map(agg, *trees)
 
 
-def fedavg_stacked(stacked, weights, *, use_kernel: bool = False):
-    """Aggregate a stacked tree: every leaf (K, ...) -> (...)."""
+def fedavg_stacked(stacked, weights, *, use_kernel: Optional[bool] = None):
+    """Aggregate a stacked tree: every leaf (K, ...) -> (...).
+
+    ``use_kernel=None`` auto-selects the Pallas kernel (compiled) on a TPU
+    backend and the jnp einsum fallback everywhere else; pass an explicit
+    bool to force either path.
+    """
     w = jnp.asarray(weights, jnp.float32)
+    if use_kernel is None:
+        from repro.kernels.fedavg.fedavg import on_tpu
+        use_kernel = on_tpu()
 
     if use_kernel:
         from repro.kernels.fedavg import ops as kops

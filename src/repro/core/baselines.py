@@ -104,13 +104,15 @@ def _assign(container: Dict, values: Dict):
 
 
 def vgg_chain(cfg, params) -> List:
-    """Sequential chain for the VGG family (layer-id, param-dict)."""
+    """Sequential chain for the VGG family (layer-id, param-dict). The ids
+    and tree paths come from ``VGGFamily.chain_paths`` — the single source
+    the unified engine's FlexiFed grouping also uses, so the two cannot
+    drift."""
+    from repro.core.family import VGGFamily
     out = []
-    for si, ws in enumerate(cfg.stages):
-        for li in range(len(ws)):
-            out.append((("conv", si, li, ws[li]),
-                        params["stages"][f"s{si}"][f"c{li}"]))
-    for fi, wd in enumerate(cfg.classifier):
-        out.append((("fc", fi, wd), params["fc"][f"f{fi}"]))
-    out.append((("out",), params["out"]))
+    for lid, path in VGGFamily().chain_paths(cfg):
+        node = params
+        for key in path:
+            node = node[key]
+        out.append((lid, node))
     return out

@@ -10,6 +10,7 @@ NetChange, and (c) init/evaluate members. Two concrete families:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
@@ -24,6 +25,34 @@ from repro.configs.vgg_family import VGGConfig, union_config
 class VGGFamily:
     def union(self, cfgs: Sequence[VGGConfig]) -> VGGConfig:
         return union_config(list(cfgs))
+
+    def depth_only(self, cfgs: Sequence[VGGConfig]) -> bool:
+        """True when the cohort differs ONLY in depth (layer counts): the
+        unified-space engine is then exact (DESIGN.md §2). Width layers must
+        agree wherever two clients both have them, and every non-stage
+        config field (classifier, n_classes, in_channels, ...) must match."""
+        for si in range(max(len(c.stages) for c in cfgs)):
+            for li in range(max(len(c.stages[si]) for c in cfgs
+                                if si < len(c.stages))):
+                ws = {c.stages[si][li] for c in cfgs
+                      if si < len(c.stages) and li < len(c.stages[si])}
+                if len(ws) > 1:
+                    return False
+        norm = {dataclasses.replace(c, name="", stages=()) for c in cfgs}
+        return len(norm) == 1
+
+    def chain_paths(self, cfg: VGGConfig):
+        """Sequential chain as (layer-id, params-tree path) pairs — the
+        engine's FlexiFed grouping uses the ids to find the shared prefix
+        and the paths to locate each layer in the (stacked) union tree."""
+        out = []
+        for si, ws in enumerate(cfg.stages):
+            for li, w in enumerate(ws):
+                out.append((("conv", si, li, w), ("stages", f"s{si}", f"c{li}")))
+        for fi, wd in enumerate(cfg.classifier):
+            out.append((("fc", fi, wd), ("fc", f"f{fi}")))
+        out.append((("out",), ("out",)))
+        return out
 
     def init(self, key, cfg):
         from repro.models import vgg
@@ -52,6 +81,20 @@ class VGGFamily:
 class TransformerFamily:
     def union(self, cfgs):
         return tfamily.union(list(cfgs))
+
+    def depth_only(self, cfgs) -> bool:
+        """True when variants differ only in n_layers (zero-block padding is
+        exact under pre-norm residuals); any other config difference makes
+        the unified embedding approximate or invalid (DESIGN.md
+        §Arch-applicability). Configs are frozen dataclasses, so normalize
+        the depth-and-label fields away and compare whole."""
+        norm = {dataclasses.replace(c, name="", n_layers=0) for c in cfgs}
+        return len(norm) == 1
+
+    def chain_paths(self, cfg):
+        raise NotImplementedError(
+            "FlexiFed's sequential-prefix grouping is defined for the VGG "
+            "chain only (paper Section IV.A.3)")
 
     def init(self, key, cfg):
         from repro.models import transformer as T

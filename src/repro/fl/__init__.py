@@ -1,1 +1,3 @@
+from repro.fl.engine import UnifiedEngine, client_embedding  # noqa: F401
 from repro.fl.simulator import FLRunConfig, Simulator  # noqa: F401
+from repro.fl.unified import UnifiedFedADP  # noqa: F401

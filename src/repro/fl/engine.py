@@ -1,0 +1,259 @@
+"""Cohort-parallel unified FL engine (DESIGN.md §2, §5).
+
+NetChange embeds every heterogeneous client into the cohort's union
+architecture, so a whole federated round can run as ONE stacked XLA
+program instead of a Python loop over clients:
+
+  * client k's model = the global architecture with a constant *filler*
+    on the parameters the client doesn't have (zero blocks for pre-norm
+    residual transformers, identity convs for VGG — whatever ``up()``
+    would insert) and a 0/1 *trainable mask* on the ones it does,
+  * local training = ``jax.vmap`` over the stacked (K, ...) parameter
+    tree with mask-projected gradients and stacked optimizer state
+    (SGD + momentum from ``repro.optim``), jitted ONCE per engine,
+  * the client axis is ``shard_map``-ed over a device mesh via the
+    ``sharding/rules.py`` machinery (``stacked_client_spec``) — local
+    training is embarrassingly parallel over K, so the shard-mapped body
+    needs no collectives,
+  * aggregation = ``fedavg_stacked`` (Pallas ``fedavg`` kernel on TPU,
+    jnp fallback elsewhere, auto-selected).
+
+Faithfulness (verified in tests/test_unified.py against the per-client
+``Simulator`` loop, which remains the reference path):
+
+  * EXACT for depth-heterogeneous cohorts: the filler is a pointwise
+    identity in the forward pass (zero block under a pre-norm residual;
+    identity conv under ReLU on non-negative activations), masked
+    gradients keep it constant, and aggregating the stacked tree with
+    the filler in place reproduces the paper's zero/identity-filler
+    FedAvg literally.
+  * Width heterogeneity embeds through a FIXED To-Wider mapping
+    (``embed_seed``) instead of Alg. 2's per-round random duplication —
+    a documented approximation (EXPERIMENTS.md §Ablations).
+
+Methods: ``fedadp`` (filler "zero" | "global"), ``clustered``,
+``flexifed`` (VGG chain), ``standalone``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.aggregation import client_weights, fedavg_stacked, stack_trees
+from repro.core.baselines import _cluster_ids
+from repro.optim import sgd
+from repro.sharding.rules import stacked_client_spec
+
+
+def client_embedding(family, client_cfgs: Sequence, global_cfg, *,
+                     seed: int = 0):
+    """Stacked (masks, filler) for embedding a cohort into ``global_cfg``.
+
+    ``up()`` is linear in the client parameters except for the constants
+    it inserts (identity convs / zero blocks), so pushing an all-ones and
+    an all-zeros tree through it separates the two:
+
+      filler  = up(zeros)                 — the inserted constants,
+      mask    = |up(ones) - up(zeros)| > 0 — 1 exactly where a client
+                                             parameter lands.
+    """
+    key = jax.random.PRNGKey(0)
+    masks, fillers = [], []
+    for cfg in client_cfgs:
+        proto = family.init(key, cfg)
+        up0 = family.up(jax.tree.map(jnp.zeros_like, proto), cfg, global_cfg,
+                        seed=seed)
+        up1 = family.up(jax.tree.map(jnp.ones_like, proto), cfg, global_cfg,
+                        seed=seed)
+        masks.append(jax.tree.map(
+            lambda a, b: (jnp.abs(a - b) > 0).astype(jnp.float32), up1, up0))
+        fillers.append(up0)
+    return stack_trees(masks), stack_trees(fillers)
+
+
+@dataclass
+class UnifiedEngine:
+    """Runs FL methods in the stacked unified space. See module docstring."""
+    family: Any
+    client_cfgs: Sequence[Any]
+    n_samples: Sequence[int]
+    lr: float = 0.01
+    momentum: float = 0.0
+    method: str = "fedadp"
+    filler_mode: str = "zero"            # fedadp only: "zero" | "global"
+    loss_fn: Optional[Callable] = None   # loss(params, batch) under the
+                                         # GLOBAL cfg; default: family's
+    use_kernel: Optional[bool] = None    # None = auto (Pallas on TPU)
+    mesh: Optional[Mesh] = None          # shard the client axis over this
+    client_axes: Tuple[str, ...] = ("clients",)
+    embed_seed: int = 0
+
+    def __post_init__(self):
+        self.global_cfg = self.family.union(list(self.client_cfgs))
+        self.weights = client_weights(self.n_samples)
+        self.masks, self.filler = client_embedding(
+            self.family, self.client_cfgs, self.global_cfg,
+            seed=self.embed_seed)
+        self.clusters = _cluster_ids(self.client_cfgs)
+        if self.method == "flexifed":
+            self._prefix_paths = self._flexifed_prefix_paths()
+        self._opt = sgd(self.lr, self.momentum)
+        self._step = self._build_step()
+
+    # ------------------------------------------------------------- step fn
+    def _build_step(self):
+        """One SGD step over the whole stacked cohort, jitted exactly once
+        (the per-call re-``jax.jit`` of the old sketch is gone)."""
+        if self.loss_fn is not None:
+            lf = self.loss_fn
+
+            def grads_one(p, b):
+                return jax.grad(lf)(p, b)
+        else:
+            gf = self.family.loss_and_grad(self.global_cfg)
+
+            def grads_one(p, b):
+                return gf(p, b)[1]
+
+        opt = self._opt
+
+        def step_core(params, opt_state, masks, batch, step_idx):
+            grads = jax.vmap(grads_one)(params, batch)
+            grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype),
+                                 grads, masks)
+            return opt.update(grads, opt_state, params, step_idx)
+
+        fn = step_core
+        if self.mesh is not None:
+            spec = stacked_client_spec(self.mesh, self.client_axes,
+                                       len(self.client_cfgs))
+            if spec != P():
+                # local training is independent per client: every operand
+                # carries the K axis, the body needs no collectives.
+                fn = shard_map(step_core, mesh=self.mesh,
+                               in_specs=(spec, spec, spec, spec, P()),
+                               out_specs=(spec, spec), check_rep=False)
+        return jax.jit(fn)
+
+    # ----------------------------------------------------------- embedding
+    def init_global(self, key):
+        return self.family.init(key, self.global_cfg)
+
+    def round_start(self, global_params):
+        """Stacked per-client views of a global model: the unified-space
+        equivalent of FedADP's distribute (To-Shallower/To-Narrower)."""
+        return jax.tree.map(
+            lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
+            global_params, self.masks, self.filler)
+
+    def embed(self, client_params: Sequence):
+        """Stack per-client (client-space) trees into the unified space."""
+        return stack_trees([
+            self.family.up(p, cfg, self.global_cfg, seed=self.embed_seed)
+            for p, cfg in zip(client_params, self.client_cfgs)])
+
+    def client_view(self, stacked, k: int):
+        return jax.tree.map(lambda x: x[k], stacked)
+
+    # ------------------------------------------------------------ training
+    def train_round(self, stacked, stacked_batches: Sequence):
+        """Run one local-training round: fresh optimizer state (matching
+        the per-client loop, which re-inits SGD momentum every round), one
+        step per stacked batch."""
+        opt_state = self._opt.init(stacked)
+        for i, batch in enumerate(stacked_batches):
+            stacked, opt_state = self._step(
+                stacked, opt_state, self.masks, batch,
+                jnp.asarray(i, jnp.int32))
+        return stacked
+
+    # --------------------------------------------------------- aggregation
+    def _norm_w(self, ids) -> np.ndarray:
+        return client_weights(np.asarray(self.n_samples)[np.asarray(ids)])
+
+    def aggregate_global(self, stacked, global_params=None):
+        """FedADP Eq. 1-2 over the stacked tree. filler_mode="zero" keeps
+        the filler constants in the average (the paper's rule — exactly
+        what averaging ``up()`` outputs does); "global" (FedADP-U)
+        substitutes the server's current values in uncovered regions.
+
+        Note: for "global" this engine treats EVERY coordinate the client
+        doesn't own as uncovered — including the nonzero taps of identity
+        -conv filler — whereas the loop path's ``|collect(ones)| > 0``
+        mask counts those taps as covered and keeps the identity values.
+        The two therefore differ on VGG depth cohorts under FedADP-U
+        (engine semantics are the stricter reading); ``engine="auto"``
+        keeps FedADP-U on the loop path for this reason."""
+        if self.filler_mode == "global":
+            assert global_params is not None
+            stacked = jax.tree.map(
+                lambda p, m, g: p * m + g[None] * (1 - m),
+                stacked, self.masks, global_params)
+        return fedavg_stacked(stacked, self.weights,
+                              use_kernel=self.use_kernel)
+
+    def _agg_clustered(self, stacked):
+        new = stacked
+        for ids in self.clusters.values():
+            idx = jnp.asarray(ids)
+            sub = jax.tree.map(lambda x: x[idx], stacked)
+            agg = fedavg_stacked(sub, self._norm_w(ids),
+                                 use_kernel=self.use_kernel)
+            new = jax.tree.map(
+                lambda n, a: n.at[idx].set(
+                    jnp.broadcast_to(a[None], (len(ids),) + a.shape)),
+                new, agg)
+        return new
+
+    def _flexifed_prefix_paths(self):
+        """Chain positions shared by the WHOLE cohort (same layer id) —
+        FlexiFed's common prefix, computed from configs alone."""
+        chains = [self.family.chain_paths(c) for c in self.client_cfgs]
+        n = 0
+        for pos in range(min(len(c) for c in chains)):
+            if len({c[pos][0] for c in chains}) == 1:
+                n += 1
+            else:
+                break
+        gchain = self.family.chain_paths(self.global_cfg)
+        return {gchain[p][1] for p in range(n)}
+
+    def _agg_flexifed(self, stacked):
+        """Common prefix averaged over ALL clients, remainder within
+        same-architecture clusters (Clustered-Common)."""
+        glob = fedavg_stacked(stacked,
+                              self._norm_w(range(len(self.n_samples))),
+                              use_kernel=self.use_kernel)
+        clus = self._agg_clustered(stacked)
+        prefix = self._prefix_paths
+
+        def pick(path, g, c):
+            keys = tuple(str(getattr(p, "key", p)) for p in path)
+            if any(keys[:len(pp)] == pp for pp in prefix):
+                return jnp.broadcast_to(g[None], c.shape)
+            return c
+        return jax.tree_util.tree_map_with_path(pick, glob, clus)
+
+    # ---------------------------------------------------------- full round
+    def run_round(self, state, stacked_batches: Sequence):
+        """One federated round. ``state`` is the global tree for fedadp
+        and the stacked client tree for the per-client-parameter methods;
+        returns the same kind."""
+        if self.method == "fedadp":
+            trained = self.train_round(self.round_start(state),
+                                       stacked_batches)
+            return self.aggregate_global(trained, state)
+        trained = self.train_round(state, stacked_batches)
+        if self.method == "clustered":
+            return self._agg_clustered(trained)
+        if self.method == "flexifed":
+            return self._agg_flexifed(trained)
+        if self.method == "standalone":
+            return trained
+        raise ValueError(self.method)

@@ -5,6 +5,18 @@ Methods: fedadp | flexifed | clustered | standalone  (Section IV).
 Protocol knobs follow Section IV.A.4: K clients, full participation,
 local epochs E over 20% of the client's data per round, SGD(lr).
 
+Two execution paths (EXPERIMENTS.md §Perf):
+  * engine="loop"     — the reference path: a Python loop over clients,
+                        each trained in its own architecture.
+  * engine="unified"  — the cohort-parallel path (fl/engine.py): one
+                        stacked vmapped program in the union architecture,
+                        shard_map-able over a device mesh. Exact for
+                        depth-heterogeneous cohorts, approximate under
+                        width heterogeneity (DESIGN.md §2).
+  * engine="auto"     — unified when the method supports it, the cohort
+                        is depth-only and client batch streams align;
+                        loop otherwise.
+
 Beyond-paper knobs (ablations in EXPERIMENTS.md):
   * narrow_mode:  "paper" (Alg. 3) | "fold" (function-preserving inverse)
   * filler:       "zero"  (paper: expanded regions a client doesn't have
@@ -26,7 +38,10 @@ import numpy as np
 from repro.core import FedADP, ClusteredFL, FlexiFed, Standalone, vgg_chain
 from repro.core.aggregation import client_weights, fedavg
 from repro.data.federated import ClientSampler
+from repro.fl.engine import UnifiedEngine
 from repro.optim import sgd
+
+_UNIFIED_METHODS = ("fedadp", "clustered", "flexifed", "standalone")
 
 
 @dataclass
@@ -40,18 +55,23 @@ class FLRunConfig:
     filler: str = "zero"
     seed: int = 0
     eval_every: int = 1
+    engine: str = "auto"                 # loop | unified | auto
+    use_kernel: Optional[bool] = None    # unified path: None = auto (TPU)
 
 
 class Simulator:
     def __init__(self, family, client_cfgs: Sequence, samplers: List[ClientSampler],
-                 run_cfg: FLRunConfig, eval_batch: Dict[str, np.ndarray]):
+                 run_cfg: FLRunConfig, eval_batch: Dict[str, np.ndarray],
+                 mesh=None):
         self.family = family
         self.client_cfgs = list(client_cfgs)
         self.samplers = samplers
         self.cfg = run_cfg
         self.eval_batch = eval_batch
+        self.mesh = mesh
         self.n_samples = [s.n_samples for s in samplers]
         self._grad_fns: Dict[str, Callable] = {}
+        self._engines: Dict[tuple, UnifiedEngine] = {}
         self._opt = sgd(run_cfg.lr, run_cfg.momentum)
 
     # ------------------------------------------------------------ pieces
@@ -72,14 +92,42 @@ class Simulator:
             step += 1
         return params
 
-    def _evaluate_clients(self, client_params) -> float:
+    def _evaluate_clients(self, client_params, cfgs=None) -> float:
+        cfgs = cfgs if cfgs is not None else self.client_cfgs
         accs = [self.family.evaluate(p, c, self.eval_batch)
-                for p, c in zip(client_params, self.client_cfgs)]
+                for p, c in zip(client_params, cfgs)]
         return float(np.mean(accs))
+
+    # ------------------------------------------------------ engine choice
+    def _resolve_engine(self) -> str:
+        eng = self.cfg.engine
+        if eng == "auto":
+            # equal n_samples + batch_size + round_fraction => every sampler
+            # draws the same per-round take, so the stacked batch streams
+            # are guaranteed to align (ragged cohorts keep the loop).
+            # filler="global" stays on the loop: the two paths define
+            # "uncovered" differently on identity-conv filler taps
+            # (engine.py aggregate_global docstring).
+            ok = (self.cfg.method in _UNIFIED_METHODS
+                  and self.cfg.filler == "zero"
+                  and self.family.depth_only(self.client_cfgs)
+                  and len(set(self.n_samples)) == 1
+                  and len({s.batch_size for s in self.samplers}) == 1
+                  and len({getattr(s, "round_fraction", None)
+                           for s in self.samplers}) == 1)
+            return "unified" if ok else "loop"
+        if eng not in ("loop", "unified"):
+            raise ValueError(f"engine={eng!r}")
+        return eng
 
     # -------------------------------------------------------------- runs
     def run(self, key=None) -> Dict[str, Any]:
         key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
+        if self._resolve_engine() == "unified":
+            return self._run_unified(key)
+        return self._run_loop(key)
+
+    def _run_loop(self, key) -> Dict[str, Any]:
         method = self.cfg.method
         hist: List[float] = []
         t0 = time.time()
@@ -118,6 +166,75 @@ class Simulator:
             if (r + 1) % self.cfg.eval_every == 0:
                 hist.append(self._evaluate_clients(client_params))
         return self._result(hist, client_params, t0)
+
+    # ------------------------------------------------- cohort-parallel run
+    def _stacked_round_batches(self) -> List[Dict[str, np.ndarray]]:
+        """Draw one round of local batches from every sampler and stack
+        them on a leading K axis. Consumes the SAME rng stream per sampler
+        as the loop path, so the two paths see identical data."""
+        per = [list(s.round_batches(self.cfg.local_epochs))
+               for s in self.samplers]
+        counts = {len(b) for b in per}
+        if len(counts) != 1:
+            raise ValueError(
+                "unified engine needs aligned client batch streams "
+                f"(got per-client step counts {sorted(counts)}); "
+                "use engine='loop' for ragged cohorts")
+        out = []
+        for t in range(counts.pop()):
+            shapes = {tuple((k, v.shape) for k, v in sorted(b[t].items()))
+                      for b in per}
+            if len(shapes) != 1:
+                raise ValueError(
+                    "unified engine needs identical batch shapes across "
+                    "clients; use engine='loop'")
+            out.append({k: np.stack([b[t][k] for b in per])
+                        for k in per[0][t]})
+        return out
+
+    def _run_unified(self, key) -> Dict[str, Any]:
+        method = self.cfg.method
+        if method not in _UNIFIED_METHODS:
+            raise ValueError(f"unified engine does not support {method!r}")
+        hist: List[float] = []
+        t0 = time.time()
+        ekey = (method, self.cfg.filler, self.cfg.lr, self.cfg.momentum,
+                self.cfg.use_kernel, self.cfg.seed)
+        if ekey not in self._engines:   # keep the jitted step across run()s
+            self._engines[ekey] = UnifiedEngine(
+                self.family, self.client_cfgs, self.n_samples,
+                lr=self.cfg.lr, momentum=self.cfg.momentum, method=method,
+                filler_mode=self.cfg.filler, use_kernel=self.cfg.use_kernel,
+                mesh=self.mesh, embed_seed=self.cfg.seed)
+        eng = self._engines[ekey]
+        gcfgs = [eng.global_cfg] * len(self.client_cfgs)
+
+        def eval_stacked(stacked):
+            views = [eng.client_view(stacked, k)
+                     for k in range(len(self.client_cfgs))]
+            return self._evaluate_clients(views, gcfgs)
+
+        if method == "fedadp":
+            gparams = eng.init_global(key)
+            for r in range(self.cfg.rounds):
+                gparams = eng.run_round(gparams, self._stacked_round_batches())
+                if (r + 1) % self.cfg.eval_every == 0:
+                    hist.append(eval_stacked(eng.round_start(gparams)))
+            views = eng.round_start(gparams)
+            final = [eng.client_view(views, k)
+                     for k in range(len(self.client_cfgs))]
+            return self._result(hist, final, t0, global_params=gparams)
+
+        stacked = eng.embed([
+            self.family.init(jax.random.fold_in(key, k), c)
+            for k, c in enumerate(self.client_cfgs)])
+        for r in range(self.cfg.rounds):
+            stacked = eng.run_round(stacked, self._stacked_round_batches())
+            if (r + 1) % self.cfg.eval_every == 0:
+                hist.append(eval_stacked(stacked))
+        final = [eng.client_view(stacked, k)
+                 for k in range(len(self.client_cfgs))]
+        return self._result(hist, final, t0)
 
     def _round_fedadp_globalfill(self, algo: FedADP, gparams, r: int):
         """FedADP-U: uncovered regions keep the server's values instead of

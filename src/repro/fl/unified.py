@@ -1,32 +1,25 @@
 """Unified-space FedADP simulation — the TPU-native realization of the
 paper's "transform everything into one architecture" idea (DESIGN.md §2).
 
-Because NetChange embeds every client into the global architecture, a
-heterogeneous cohort can be simulated as ONE stacked computation:
+Thin FedADP-shaped facade over ``fl/engine.py``'s ``UnifiedEngine``; kept
+for callers that drive rounds with pre-stacked batches and a custom
+global-space loss. The engine owns the mechanics: stacked (K, ...)
+parameters, mask-projected vmapped gradients, a step function jitted
+once, optional ``shard_map`` over the client axis, and ``fedavg_stacked``
+(Pallas kernel on TPU, auto-selected).
 
-  * client k's model = the global architecture with a 0/1 structure mask
-    (masked-out parameters held at zero => pre-norm residual identity),
-  * local training = `jax.vmap` over the stacked (K, ...) parameters with
-    mask-projected gradients — one XLA program for the whole cohort, and
-    `shard_map`-able over the data axis so clients live on device shards,
-  * FedAvg = `fedavg_stacked` (Pallas ``fedavg`` kernel on TPU).
-
-Faithfulness: EXACT for depth-heterogeneous cohorts (masked blocks are
-zero = the same identity filler literal FedADP produces; verified in
-tests/test_unified.py). Width heterogeneity is embedded prefix-style
-(mask kills column/row pairs) rather than by Alg. 2's random duplication
-— a documented approximation.
+Faithfulness: EXACT for depth-heterogeneous cohorts (the filler is the
+same identity/zero constant FedADP's ``up()`` produces; verified in
+tests/test_unified.py). Width heterogeneity is embedded through a fixed
+To-Wider mapping rather than Alg. 2's per-round random duplication — a
+documented approximation (EXPERIMENTS.md §Ablations).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, List, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import client_weights, fedavg_stacked, stack_trees
+from repro.fl.engine import UnifiedEngine
 
 
 @dataclass
@@ -36,40 +29,24 @@ class UnifiedFedADP:
     n_samples: Sequence[int]
     loss_fn: Callable            # loss_fn(params, batch) under the GLOBAL cfg
     lr: float = 0.05
-    use_kernel: bool = False
+    use_kernel: Optional[bool] = None
 
     def __post_init__(self):
-        self.global_cfg = self.family.union(list(self.client_cfgs))
-        self.weights = client_weights(self.n_samples)
-        key = jax.random.PRNGKey(0)
-        masks = []
-        for cfg in self.client_cfgs:
-            ones = jax.tree.map(jnp.ones_like, self.family.init(key, cfg))
-            up = self.family.up(ones, cfg, self.global_cfg, seed=0)
-            masks.append(jax.tree.map(
-                lambda m: (jnp.abs(m) > 0).astype(jnp.float32), up))
-        self.masks = stack_trees(masks)
+        self._engine = UnifiedEngine(
+            self.family, self.client_cfgs, self.n_samples, lr=self.lr,
+            momentum=0.0, method="fedadp", loss_fn=self.loss_fn,
+            use_kernel=self.use_kernel)
+        self.global_cfg = self._engine.global_cfg
+        self.weights = self._engine.weights
+        self.masks = self._engine.masks
 
     def init_global(self, key):
-        return self.family.init(key, self.global_cfg)
+        return self._engine.init_global(key)
 
     def round(self, global_params, stacked_batches: List, *, epochs: int = 1):
         """stacked_batches: list of pytrees whose leaves carry a leading K
         axis (one slice per client). One FedADP round, fully vmapped."""
-        K = len(self.client_cfgs)
-
-        start = jax.vmap(lambda m: jax.tree.map(
-            lambda g, mm: g * mm, global_params, m))(self.masks)
-
-        def one_step(params_k, mask_k, batch_k):
-            g = jax.grad(self.loss_fn)(params_k, batch_k)
-            return jax.tree.map(lambda p, gg, mm: p - self.lr * gg * mm,
-                                params_k, g, mask_k)
-
-        step = jax.jit(jax.vmap(one_step))
-        params = start
-        for _ in range(epochs):
-            for batch in stacked_batches:
-                params = step(params, self.masks, batch)
-        w = self.weights / self.weights.sum()
-        return fedavg_stacked(params, w, use_kernel=self.use_kernel)
+        params = self._engine.round_start(global_params)
+        params = self._engine.train_round(
+            params, [b for _ in range(epochs) for b in stacked_batches])
+        return self._engine.aggregate_global(params)

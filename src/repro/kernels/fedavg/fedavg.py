@@ -7,18 +7,25 @@ The kernel tiles the flattened parameter axis into VMEM-resident blocks
 byte is touched exactly once (arithmetic intensity ~= 1 FLOP/byte — see
 the roofline discussion in EXPERIMENTS.md).
 
-TARGET: TPU (pl.pallas_call + BlockSpec). Validated via interpret=True on
-CPU against ``ref.weighted_sum_ref``.
+TARGET: TPU (pl.pallas_call + BlockSpec). ``interpret=None`` auto-selects:
+compiled (interpret=False) on a TPU backend, interpreter mode elsewhere —
+so the same call site is production-fast on TPU and still validated via
+interpret=True on CPU against ``ref.weighted_sum_ref``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 128
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
 
 
 def _kernel(x_ref, w_ref, o_ref):
@@ -29,8 +36,11 @@ def _kernel(x_ref, w_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def weighted_sum_2d(x, w, *, block: int = 4096, interpret: bool = True):
+def weighted_sum_2d(x, w, *, block: int = 4096,
+                    interpret: Optional[bool] = None):
     """x: (K, N) with N a multiple of 128; w: (K,) -> (N,) fp32."""
+    if interpret is None:
+        interpret = not on_tpu()
     K, N = x.shape
     block = min(block, N)
     assert N % LANE == 0 and N % block == 0, (N, block)

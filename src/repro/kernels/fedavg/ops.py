@@ -1,17 +1,21 @@
 """Jitted public wrapper: aggregate arbitrary-shaped stacked tensors."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.fedavg.fedavg import LANE, weighted_sum_2d
 
 
-def weighted_sum(stacked, w, *, block: int = 4096, interpret: bool = True):
+def weighted_sum(stacked, w, *, block: int = 4096,
+                 interpret: Optional[bool] = None):
     """stacked: (K, *shape); w: (K,) -> (*shape,) fp32.
 
     Pads the flattened parameter axis to a lane multiple, runs the Pallas
-    kernel, and restores the original shape.
+    kernel, and restores the original shape. ``interpret=None`` compiles
+    on TPU and falls back to interpreter mode elsewhere.
     """
     K = stacked.shape[0]
     shape = stacked.shape[1:]

@@ -1,1 +1,3 @@
 from repro.sharding.ctx import CPU_CTX, ShardCtx  # noqa: F401
+from repro.sharding.rules import (  # noqa: F401
+    cache_specs, cohort_mesh, named, param_specs, stacked_client_spec)

@@ -182,3 +182,30 @@ def cache_specs(cache, mesh: Mesh, data_axes: Tuple[str, ...], *,
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def stacked_client_spec(mesh: Mesh, client_axes: Tuple[str, ...],
+                        n_clients: int) -> P:
+    """Spec for unified-cohort trees whose leaves carry a leading K (client)
+    axis (DESIGN.md §5): shard K over ``client_axes``, replicate the rest.
+    Falls back to replication when K does not divide the mesh extent —
+    the same divisibility rule ``_resolve`` applies to parameter dims."""
+    if not client_axes:
+        return P()
+    extent = int(np.prod([mesh.shape[a] for a in client_axes]))
+    if extent <= 1 or n_clients % extent != 0:
+        return P()
+    return P(client_axes if len(client_axes) > 1 else client_axes[0])
+
+
+def cohort_mesh(n_clients: int, *, axis: str = "clients") -> Optional[Mesh]:
+    """1-D device mesh for sharding a K-client unified cohort. Uses the
+    largest device count that divides K (devices beyond it are left idle);
+    returns None when only one device would participate."""
+    devs = jax.devices()
+    n = len(devs)
+    while n > 1 and n_clients % n != 0:
+        n -= 1
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), (axis,))

@@ -24,8 +24,10 @@ def test_analyzer_counts_scan_bodies_times_trip_count():
     assert abs(r["dot_flops"] - 7 * 2 * N ** 3) / (7 * 2 * N ** 3) < 0.05
     # raw cost_analysis undercounts (counts the body once) — the reason
     # this analyzer exists:
-    raw = c.cost_analysis()["flops"]
-    assert raw < r["dot_flops"] / 2
+    raw = c.cost_analysis()
+    if isinstance(raw, (list, tuple)):        # older jax wraps per-device
+        raw = raw[0]
+    assert raw["flops"] < r["dot_flops"] / 2
 
 
 def test_analyzer_nested_scans():
@@ -48,7 +50,11 @@ def test_analyzer_nested_scans():
 
 
 def _abstract_mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    # jax>=0.4.36 takes ((name, size), ...); older takes (sizes, names)
+    try:
+        return AbstractMesh((("data", 16), ("model", 16)))
+    except TypeError:
+        return AbstractMesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ["glm4-9b", "mixtral-8x7b",
