@@ -16,13 +16,15 @@ import os
 import time
 from typing import Dict, List
 
+import jax
 import numpy as np
 
 from repro.configs.vgg_family import paper_client_archs, scaled, vgg
 from repro.core import VGGFamily
 from repro.data import (ClientSampler, TABLE1_TASKS, image_classification,
                         iid_partition)
-from repro.fl import FLRunConfig, Simulator
+from repro.fl import (Federation, LoopBackend, UnifiedBackend, make_strategy,
+                      unified_eligible)
 
 METHODS = ("fedadp", "flexifed", "clustered", "standalone")
 
@@ -43,15 +45,23 @@ def run_task(task, *, n_clients: int, rounds: int, n_train: int,
     test = image_classification(task, max(200, n_train // 5), seed=seed + 999)
     parts = iid_partition(n_train, len(cfgs), seed=seed)
     out: Dict[str, Dict] = {}
+    family = VGGFamily()
     for method in METHODS:
         samplers = [ClientSampler(data, p, round_fraction=0.2, batch_size=64,
                                   seed=100 * seed + i)
                     for i, p in enumerate(parts)]
-        rc = FLRunConfig(method=method, rounds=rounds,
-                         local_epochs=local_epochs, lr=0.03, momentum=0.9,
-                         seed=seed, eval_every=max(1, rounds // 6))
-        sim = Simulator(VGGFamily(), cfgs, samplers, rc, test)
-        res = sim.run()
+        strategy = make_strategy(method, family, cfgs,
+                                 [s.n_samples for s in samplers],
+                                 base_seed=seed)
+        backend_cls = (UnifiedBackend if unified_eligible(
+            strategy, family, cfgs, samplers) else LoopBackend)
+        kw = {"seed": seed} if backend_cls is UnifiedBackend else {}
+        backend = backend_cls(family, cfgs, samplers,
+                              local_epochs=local_epochs, lr=0.03,
+                              momentum=0.9, **kw)
+        fed = Federation(strategy, backend, rounds=rounds, eval_batch=test,
+                         eval_every=max(1, rounds // 6))
+        res = fed.run(jax.random.PRNGKey(seed))
         out[method] = {"final": res["final_acc"], "history": res["history"],
                        "wall_s": res["wall_s"]}
     return out

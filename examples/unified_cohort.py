@@ -1,42 +1,59 @@
-"""Cohort-parallel FedADP: the unified engine vs the per-client loop.
+"""Cohort-parallel FedADP: the unified backend vs the per-client loop.
 
 A depth-heterogeneous VGG cohort (the setting where the unified-space
 embedding is EXACT — DESIGN.md §2) is trained twice with identical data
-and SGD+momentum: once through the reference per-client loop, once as a
-single stacked vmapped program (fl/engine.py), shard_map-ed over the
-client axis when more than one device is available.
+and SGD+momentum through the same ``Federation`` + ``FedADPStrategy``,
+swapping only the execution backend: once through the reference
+per-client ``LoopBackend``, once as a single stacked vmapped program
+(``UnifiedBackend`` around fl/engine.py), shard_map-ed over the client
+axis when more than one device is available.
 
   PYTHONPATH=src python examples/unified_cohort.py
 """
-import numpy as np
+import jax
 
 from repro.configs.vgg_family import scaled, vgg
 from repro.core import VGGFamily
 from repro.data import EASY, ClientSampler, image_classification, iid_partition
-from repro.fl import FLRunConfig, Simulator
+from repro.fl import Federation, FedADPStrategy, LoopBackend, UnifiedBackend
 from repro.sharding import cohort_mesh
 
 
-def main():
-    archs = ("vgg13", "vgg15", "vgg17", "vgg19")     # depth-only cohort
-    client_cfgs = [scaled(vgg(a), 0.125, 64) for a in archs for _ in range(2)]
+def main(*, rounds=4, local_epochs=1, eval_every=2, width=64,
+         archs=("vgg13", "vgg15", "vgg17", "vgg19"), per_arch=2,
+         n_per_client=160, n_test=400):
+    family = VGGFamily()
+    client_cfgs = [scaled(vgg(a), 0.125, width)
+                   for a in archs for _ in range(per_arch)]
     K = len(client_cfgs)
-    data = image_classification(EASY, 160 * K, seed=0)
-    test = image_classification(EASY, 400, seed=99)
-    parts = iid_partition(160 * K, K, seed=0)
+    data = image_classification(EASY, n_per_client * K, seed=0)
+    test = image_classification(EASY, n_test, seed=99)
+    parts = iid_partition(n_per_client * K, K, seed=0)
     mesh = cohort_mesh(K)                            # None on 1 device
     print(f"{K} clients, client mesh: {mesh}")
 
+    results = {}
     for engine in ("loop", "unified"):
         samplers = [ClientSampler(data, p, round_fraction=0.5, batch_size=32,
                                   seed=i) for i, p in enumerate(parts)]
-        cfg = FLRunConfig(method="fedadp", rounds=4, local_epochs=1, lr=0.05,
-                          momentum=0.9, eval_every=2, engine=engine)
-        res = Simulator(VGGFamily(), client_cfgs, samplers, cfg, test,
-                        mesh=mesh if engine == "unified" else None).run()
+        strategy = FedADPStrategy(family, client_cfgs,
+                                  [s.n_samples for s in samplers])
+        if engine == "unified":
+            backend = UnifiedBackend(family, client_cfgs, samplers,
+                                     local_epochs=local_epochs, lr=0.05,
+                                     momentum=0.9, mesh=mesh)
+        else:
+            backend = LoopBackend(family, client_cfgs, samplers,
+                                  local_epochs=local_epochs, lr=0.05,
+                                  momentum=0.9)
+        fed = Federation(strategy, backend, rounds=rounds, eval_batch=test,
+                         eval_every=eval_every)
+        res = fed.run(jax.random.PRNGKey(0))
         print(f"{engine:8s} acc by round: "
               + "  ".join(f"{a:.3f}" for a in res["history"])
               + f"   wall {res['wall_s']:.1f}s")
+        results[engine] = res
+    return results
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -27,9 +27,17 @@ def _cluster_ids(cfgs) -> Dict[str, List[int]]:
     return dict(out)
 
 
+def _resolve_selected(selected, n: int) -> List[int]:
+    return list(selected if selected is not None else range(n))
+
+
 class Standalone:
     def __init__(self, client_cfgs, n_samples):
         self.client_cfgs = list(client_cfgs)
+
+    def aggregate(self, client_params: List,
+                  selected: Optional[Sequence[int]] = None) -> List:
+        return list(client_params)
 
     def round(self, client_params: List, local_train: Callable, round_idx: int):
         return [local_train(k, p) for k, p in enumerate(client_params)]
@@ -41,14 +49,25 @@ class ClusteredFL:
         self.n_samples = np.asarray(n_samples, np.float64)
         self.clusters = _cluster_ids(self.client_cfgs)
 
-    def round(self, client_params: List, local_train: Callable, round_idx: int):
-        new = [local_train(k, p) for k, p in enumerate(client_params)]
+    def aggregate(self, client_params: List,
+                  selected: Optional[Sequence[int]] = None) -> List:
+        """FedAvg within each (architecture cluster ∩ selected); clients
+        outside ``selected`` keep their parameters untouched."""
+        sel = set(_resolve_selected(selected, len(client_params)))
+        new = list(client_params)
         for ids in self.clusters.values():
+            ids = [i for i in ids if i in sel]
+            if not ids:
+                continue
             w = client_weights(self.n_samples[ids])
             agg = fedavg([new[i] for i in ids], w)
             for i in ids:
                 new[i] = agg
         return new
+
+    def round(self, client_params: List, local_train: Callable, round_idx: int):
+        return self.aggregate(
+            [local_train(k, p) for k, p in enumerate(client_params)])
 
 
 class FlexiFed:
@@ -61,41 +80,60 @@ class FlexiFed:
         self.clusters = _cluster_ids(self.client_cfgs)
         self.chain_fn = chain_fn
 
-    def _common_prefix(self, client_params) -> List:
-        chains = [self.chain_fn(cfg, p)
-                  for cfg, p in zip(self.client_cfgs, client_params)]
+    def _chains(self, client_params, ids: Sequence[int]) -> Dict[int, List]:
+        return {i: self.chain_fn(self.client_cfgs[i], client_params[i])
+                for i in ids}
+
+    def _common_of(self, chains: Dict[int, List]) -> List:
+        ordered = list(chains.values())
         common = []
-        for pos in range(min(len(c) for c in chains)):
-            ids = {c[pos][0] for c in chains}
-            shapes0 = [l.shape for l in jax.tree.leaves(chains[0][pos][1])]
+        for pos in range(min(len(c) for c in ordered)):
+            ids = {c[pos][0] for c in ordered}
+            shapes0 = [l.shape for l in jax.tree.leaves(ordered[0][pos][1])]
             same_shape = all(
                 [l.shape for l in jax.tree.leaves(c[pos][1])] == shapes0
-                for c in chains)
+                for c in ordered)
             if len(ids) == 1 and same_shape:
                 common.append(pos)
             else:
                 break
         return common
 
-    def round(self, client_params: List, local_train: Callable, round_idx: int):
-        new = [local_train(k, p) for k, p in enumerate(client_params)]
-        chains = [self.chain_fn(cfg, p)
-                  for cfg, p in zip(self.client_cfgs, new)]
-        common = self._common_prefix(new)
-        # aggregate the common prefix across ALL clients
-        w_all = client_weights(self.n_samples)
+    def _common_prefix(self, client_params) -> List:
+        return self._common_of(
+            self._chains(client_params, range(len(client_params))))
+
+    def aggregate(self, client_params: List,
+                  selected: Optional[Sequence[int]] = None) -> List:
+        """Clustered-Common over the participating subset: the common
+        prefix of the SELECTED clients' chains is averaged across all of
+        them, the remainder within (cluster ∩ selected). Non-participants
+        are untouched. NOTE: mutates the selected entries' param dicts in
+        place (through the chain views) and returns the list."""
+        sel = _resolve_selected(selected, len(client_params))
+        new = list(client_params)
+        chains = self._chains(new, sel)
+        common = self._common_of(chains)
+        w_all = client_weights(self.n_samples[sel])
         for pos in common:
-            agg = fedavg([chains[i][pos][1] for i in range(len(new))], w_all)
-            for i in range(len(new)):
+            agg = fedavg([chains[i][pos][1] for i in sel], w_all)
+            for i in sel:
                 _assign(chains[i][pos][1], agg)
         # aggregate the personalized remainder within clusters
         for ids in self.clusters.values():
+            ids = [i for i in ids if i in set(sel)]
+            if not ids:
+                continue
             w = client_weights(self.n_samples[ids])
             for pos in range(len(common), len(chains[ids[0]])):
                 agg = fedavg([chains[i][pos][1] for i in ids], w)
                 for i in ids:
                     _assign(chains[i][pos][1], agg)
         return new
+
+    def round(self, client_params: List, local_train: Callable, round_idx: int):
+        return self.aggregate(
+            [local_train(k, p) for k, p in enumerate(client_params)])
 
 
 def _assign(container: Dict, values: Dict):

@@ -13,10 +13,11 @@ function-preserving fold inverse ("fold") — compared in ablations.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import client_weights, fedavg
@@ -55,6 +56,25 @@ class FedADP:
                               self.global_cfg,
                               seed=self._seed(round_idx, k))
 
+    def coverage_mask(self, round_idx: int, k: int, like):
+        """Global-space 0/1 mask of the coordinates client k's expansion
+        touches at this round: push an all-ones client tree (structured
+        like ``like``) through ``collect`` and threshold. Identity-conv
+        filler taps count as covered under this (loop-reference) reading —
+        see ``UnifiedEngine.aggregate_global`` for the stricter one."""
+        ones = jax.tree.map(jnp.ones_like, like)
+        return jax.tree.map(lambda m: (jnp.abs(m) > 0).astype(jnp.float32),
+                            self.collect(ones, round_idx, k))
+
+    def aggregate(self, expanded: Sequence,
+                  selected: Optional[Sequence[int]] = None):
+        """Step 4 (Eq. 1-2): FedAvg of the expanded client models, with
+        W_k renormalized over the participating subset."""
+        selected = list(selected if selected is not None
+                        else range(len(self.client_cfgs)))
+        w = self.weights[np.asarray(selected)]
+        return fedavg(expanded, w / w.sum())
+
     def round(self, global_params, local_train: Callable, round_idx: int,
               selected: Optional[Sequence[int]] = None):
         """One FedADP round. ``local_train(k, client_params)`` runs the
@@ -66,6 +86,4 @@ class FedADP:
             ck = self.distribute(global_params, round_idx, k)
             ck = local_train(k, ck)
             expanded.append(self.collect(ck, round_idx, k))
-        w = self.weights[np.asarray(selected)]
-        w = w / w.sum()
-        return fedavg(expanded, w)
+        return self.aggregate(expanded, selected)

@@ -1,3 +1,11 @@
 from repro.fl.engine import UnifiedEngine, client_embedding  # noqa: F401
+from repro.fl.strategy import (  # noqa: F401
+    ClusteredStrategy, FedADPStrategy, FlexiFedStrategy, StandaloneStrategy,
+    Strategy, make_strategy)
+from repro.fl.backends import (  # noqa: F401
+    LoopBackend, UnifiedBackend, unified_eligible)
+from repro.fl.federation import (  # noqa: F401
+    Federation, Participation, checkpoint_path, load_round_checkpoint,
+    restore_sampler_rngs, save_round_checkpoint)
 from repro.fl.simulator import FLRunConfig, Simulator  # noqa: F401
 from repro.fl.unified import UnifiedFedADP  # noqa: F401

@@ -1,0 +1,210 @@
+"""Pluggable execution backends: who actually runs a federated round.
+
+A backend takes a bound ``Strategy`` and executes ``distribute -> local
+train -> collect -> aggregate`` for one round:
+
+  * ``LoopBackend``     — the reference path: a Python loop over the
+                          participating clients, each trained in its OWN
+                          architecture with a per-config jitted grad fn.
+                          Supports every strategy and any participation
+                          subset.
+  * ``UnifiedBackend``  — the cohort-parallel path: wraps
+                          ``fl/engine.py``'s ``UnifiedEngine`` so the
+                          whole round runs as one stacked vmapped XLA
+                          program in the union architecture (shard_map
+                          over the client axis when a mesh is given).
+                          Requires FULL participation and aligned client
+                          batch streams; partial rounds raise
+                          ``ValueError`` (DESIGN.md §7).
+
+Both expose the same surface to ``Federation``:
+  bind(strategy) / init_state(key) / run_round(state, r, selected) /
+  evaluate(state, r, batch) / client_views(state, r) / samplers.
+
+``unified_eligible`` keeps the old ``engine="auto"`` rules: unified when
+the strategy supports it, the cohort is depth-only, the client batch
+streams are guaranteed to align, and participation is full.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.fl.engine import UnifiedEngine
+from repro.fl.strategy import METHODS, Strategy
+from repro.optim import sgd
+
+
+class LoopBackend:
+    """Per-client reference execution (exactly the paper's protocol)."""
+    name = "loop"
+
+    def __init__(self, family, client_cfgs: Sequence, samplers: List, *,
+                 local_epochs: int = 1, lr: float = 0.01,
+                 momentum: float = 0.0):
+        self.family = family
+        self.client_cfgs = list(client_cfgs)
+        self.samplers = samplers
+        self.local_epochs = local_epochs
+        self._opt = sgd(lr, momentum)
+        self._grad_fns: Dict[str, Callable] = {}
+        self.strategy: Optional[Strategy] = None
+
+    def bind(self, strategy: Strategy) -> "LoopBackend":
+        self.strategy = strategy
+        return self
+
+    # ---------------------------------------------------------- training
+    def _grad_fn(self, cfg):
+        if cfg.name not in self._grad_fns:
+            self._grad_fns[cfg.name] = jax.jit(self.family.loss_and_grad(cfg))
+        return self._grad_fns[cfg.name]
+
+    def _local_train(self, k: int, params):
+        gf = self._grad_fn(self.client_cfgs[k])
+        opt_state = self._opt.init(params)   # fresh momentum every round
+        step = 0
+        for batch in self.samplers[k].round_batches(self.local_epochs):
+            (_, _), grads = gf(params, batch)
+            params, opt_state = self._opt.update(grads, opt_state, params,
+                                                 step)
+            step += 1
+        return params
+
+    # ----------------------------------------------------------- surface
+    def init_state(self, key):
+        return self.strategy.init_state(key)
+
+    def run_round(self, state, round_idx: int, selected: Sequence[int]):
+        s = self.strategy
+        updates = []
+        for k in selected:
+            trained = self._local_train(k, s.distribute(state, round_idx, k))
+            updates.append((k, s.collect(state, round_idx, k, trained)))
+        return s.aggregate(state, round_idx, updates)
+
+    def client_views(self, state, round_idx: int) -> List:
+        return [self.strategy.client_view(state, k, round_idx)
+                for k in range(len(self.client_cfgs))]
+
+    def evaluate(self, state, round_idx: int, eval_batch) -> float:
+        accs = [self.family.evaluate(p, c, eval_batch)
+                for p, c in zip(self.client_views(state, round_idx),
+                                self.client_cfgs)]
+        return float(np.mean(accs))
+
+
+class UnifiedBackend:
+    """Cohort-parallel execution through ``UnifiedEngine`` (one stacked
+    program; exact for depth-only cohorts — fl/engine.py docstring)."""
+    name = "unified"
+
+    def __init__(self, family, client_cfgs: Sequence, samplers: List, *,
+                 local_epochs: int = 1, lr: float = 0.01,
+                 momentum: float = 0.0, use_kernel: Optional[bool] = None,
+                 mesh=None, seed: int = 0):
+        self.family = family
+        self.client_cfgs = list(client_cfgs)
+        self.samplers = samplers
+        self.local_epochs = local_epochs
+        self.lr, self.momentum = lr, momentum
+        self.use_kernel, self.mesh, self.seed = use_kernel, mesh, seed
+        self.strategy: Optional[Strategy] = None
+        self.engine: Optional[UnifiedEngine] = None
+        self._engine_key = None
+
+    def bind(self, strategy: Strategy) -> "UnifiedBackend":
+        if strategy.name not in METHODS:
+            raise ValueError(
+                f"unified backend does not support {strategy.name!r}")
+        self.strategy = strategy
+        # aggregation weights come from the STRATEGY's n_samples (the same
+        # numbers strategy.aggregate would use on the loop backend), not
+        # from whatever samplers the backend currently holds
+        n_samples = [int(n) for n in strategy.n_samples]
+        # keep the engine (and its jitted step) across rebinds of the SAME
+        # method/filler/weights; rebuild when the strategy's math changes
+        key = (strategy.name, getattr(strategy, "filler", "zero"),
+               tuple(n_samples))
+        if self.engine is None or self._engine_key != key:
+            self._engine_key = key
+            self.engine = UnifiedEngine(
+                self.family, self.client_cfgs, n_samples,
+                lr=self.lr, momentum=self.momentum, method=strategy.name,
+                filler_mode=getattr(strategy, "filler", "zero"),
+                use_kernel=self.use_kernel, mesh=self.mesh,
+                embed_seed=self.seed)
+        return self
+
+    # ------------------------------------------------------- batch stream
+    def _stacked_round_batches(self) -> List[Dict[str, np.ndarray]]:
+        """Draw one round of local batches from every sampler and stack
+        them on a leading K axis. Consumes the SAME rng stream per sampler
+        as the loop path, so the two paths see identical data."""
+        per = [list(s.round_batches(self.local_epochs))
+               for s in self.samplers]
+        counts = {len(b) for b in per}
+        if len(counts) != 1:
+            raise ValueError(
+                "unified backend needs aligned client batch streams "
+                f"(got per-client step counts {sorted(counts)}); "
+                "use the loop backend for ragged cohorts")
+        out = []
+        for t in range(counts.pop()):
+            shapes = {tuple((k, v.shape) for k, v in sorted(b[t].items()))
+                      for b in per}
+            if len(shapes) != 1:
+                raise ValueError(
+                    "unified backend needs identical batch shapes across "
+                    "clients; use the loop backend")
+            out.append({k: np.stack([b[t][k] for b in per])
+                        for k in per[0][t]})
+        return out
+
+    # ----------------------------------------------------------- surface
+    def init_state(self, key):
+        if self.strategy.kind == "global":
+            return self.engine.init_global(key)
+        return self.engine.embed(self.strategy.init_state(key))
+
+    def run_round(self, state, round_idx: int, selected: Sequence[int]):
+        if list(selected) != list(range(len(self.client_cfgs))):
+            raise ValueError(
+                "unified backend requires full participation (stacked "
+                f"cohort program); got subset {list(selected)} of "
+                f"{len(self.client_cfgs)} clients — use LoopBackend / "
+                "engine='loop' for partial participation")
+        return self.engine.run_round(state, self._stacked_round_batches())
+
+    def client_views(self, state, round_idx: int) -> List:
+        stacked = (self.engine.round_start(state)
+                   if self.strategy.kind == "global" else state)
+        return [self.engine.client_view(stacked, k)
+                for k in range(len(self.client_cfgs))]
+
+    def evaluate(self, state, round_idx: int, eval_batch) -> float:
+        gcfg = self.engine.global_cfg
+        accs = [self.family.evaluate(p, gcfg, eval_batch)
+                for p in self.client_views(state, round_idx)]
+        return float(np.mean(accs))
+
+
+def unified_eligible(strategy: Strategy, family, client_cfgs,
+                     samplers, *, full_participation: bool = True) -> bool:
+    """The ``auto`` rule: equal n_samples + batch_size + round_fraction
+    means every sampler draws the same per-round take, so the stacked
+    batch streams are guaranteed to align (ragged cohorts keep the loop).
+    filler="global" stays on the loop: the two paths define "uncovered"
+    differently on identity-conv filler taps (engine.aggregate_global
+    docstring). Partial participation always keeps the loop."""
+    n_samples = [s.n_samples for s in samplers]
+    return (strategy.name in METHODS
+            and getattr(strategy, "filler", "zero") == "zero"
+            and full_participation
+            and family.depth_only(list(client_cfgs))
+            and len(set(n_samples)) == 1
+            and len({s.batch_size for s in samplers}) == 1
+            and len({getattr(s, "round_fraction", None)
+                     for s in samplers}) == 1)

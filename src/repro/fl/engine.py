@@ -19,7 +19,8 @@ program instead of a Python loop over clients:
     jnp fallback elsewhere, auto-selected).
 
 Faithfulness (verified in tests/test_unified.py against the per-client
-``Simulator`` loop, which remains the reference path):
+``LoopBackend`` reference path; ``UnifiedBackend`` in fl/backends.py is
+the Federation-facing wrapper around this engine — DESIGN.md §7):
 
   * EXACT for depth-heterogeneous cohorts: the filler is a pointwise
     identity in the forward pass (zero block under a pre-norm residual;

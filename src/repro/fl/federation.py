@@ -1,0 +1,215 @@
+"""Federation: the orchestrator that owns rounds, participation,
+metrics callbacks, and checkpoint/resume.
+
+One object, one loop::
+
+    strategy = FedADPStrategy(family, cfgs, n_samples)
+    backend  = LoopBackend(family, cfgs, samplers, local_epochs=2, lr=0.05)
+    fed      = Federation(strategy, backend, rounds=20, eval_batch=test)
+    result   = fed.run(jax.random.PRNGKey(0))
+
+Responsibilities are split three ways (DESIGN.md §7):
+  * the **Strategy** defines the method's math (fl/strategy.py),
+  * the **backend** executes a round (fl/backends.py: LoopBackend /
+    UnifiedBackend),
+  * the **Federation** owns everything around the rounds: which clients
+    participate (``Participation``), when to evaluate, metrics callbacks,
+    and durable ``(round, strategy state, rng)`` checkpoints through
+    ``repro.checkpoint.store``.
+
+Participation schedules:
+  * full            — ``Participation()``: every client, every round,
+  * fixed fraction  — ``Participation.cycle(f)``: a deterministic rotating
+                      window of ``max(1, round(f*K))`` clients,
+  * seeded sampling — ``Participation.sample(f, seed)``: a fresh
+                      without-replacement draw per round, derived from
+                      ``(seed, round)`` only — stateless, so resume needs
+                      no sampler bookkeeping.
+
+Checkpoints hold the strategy/backend state pytree (dtype-preserving,
+bf16-safe — checkpoint/store.py) plus ``round``, ``history`` and the
+data samplers' numpy rng states in the manifest, which is exactly the
+state a run consumes: local optimizer state is re-initialized every
+round and participation is stateless, so a resumed run reproduces the
+uninterrupted one bit-for-bit (tests/test_federation.py).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+
+PARTICIPATION_MODES = ("sample", "cycle")
+
+
+@dataclass(frozen=True)
+class Participation:
+    """Per-round client selection. ``fraction=1.0`` is full participation;
+    otherwise ``max(1, round(fraction*K))`` clients per round, chosen by
+    ``mode`` ("sample": seeded without-replacement draw per round;
+    "cycle": deterministic rotating window)."""
+    fraction: float = 1.0
+    seed: int = 0
+    mode: str = "sample"
+
+    def __post_init__(self):
+        if not (0.0 < self.fraction <= 1.0):
+            raise ValueError(f"participation fraction={self.fraction!r} "
+                             "must be in (0, 1]")
+        if self.mode not in PARTICIPATION_MODES:
+            raise ValueError(f"participation mode={self.mode!r}, expected "
+                             f"one of {PARTICIPATION_MODES}")
+
+    @classmethod
+    def sample(cls, fraction: float, seed: int = 0) -> "Participation":
+        return cls(fraction=fraction, seed=seed, mode="sample")
+
+    @classmethod
+    def cycle(cls, fraction: float) -> "Participation":
+        return cls(fraction=fraction, mode="cycle")
+
+    @property
+    def full(self) -> bool:
+        return self.fraction >= 1.0
+
+    def select(self, round_idx: int, n_clients: int) -> List[int]:
+        if self.full:
+            return list(range(n_clients))
+        m = max(1, int(round(self.fraction * n_clients)))
+        if self.mode == "cycle":
+            start = (round_idx * m) % n_clients
+            return sorted((start + i) % n_clients for i in range(m))
+        rng = np.random.default_rng((self.seed, round_idx))
+        return sorted(int(i) for i in
+                      rng.choice(n_clients, size=m, replace=False))
+
+
+# ------------------------------------------------------------ checkpoints
+def checkpoint_path(directory: str, round_idx: int) -> str:
+    return os.path.join(directory, f"round_{round_idx:04d}.npz")
+
+
+def save_round_checkpoint(path: str, state, *, round_idx: int,
+                          history: Sequence[float] = (),
+                          samplers: Sequence = (),
+                          meta: Optional[Dict[str, Any]] = None):
+    """Persist ``(round, state, data-rng)``: the state pytree goes into the
+    npz payload (dtype views preserved), everything else into the JSON
+    manifest. Sampler rng state dicts (numpy ``bit_generator.state``) are
+    plain JSON-serializable ints."""
+    save_pytree(path, state, extra={
+        "round": int(round_idx),
+        "history": [float(h) for h in history],
+        "sampler_rng": [s.rng.bit_generator.state for s in samplers],
+        "meta": meta or {}})
+
+
+def load_round_checkpoint(path: str, like=None):
+    """Returns ``(state, extra)``; pass ``like`` (a template state pytree,
+    e.g. a fresh ``backend.init_state``) to get arrays arranged into its
+    structure and dtypes."""
+    return load_pytree(path, like=like)
+
+
+def restore_sampler_rngs(samplers: Sequence, extra: Dict[str, Any]):
+    states = extra.get("sampler_rng") or []
+    if states and len(states) != len(samplers):
+        raise ValueError(
+            f"checkpoint has {len(states)} sampler rng states, run has "
+            f"{len(samplers)} samplers")
+    for s, st in zip(samplers, states):
+        s.rng.bit_generator.state = st
+
+
+# ------------------------------------------------------------- federation
+class Federation:
+    """Round orchestrator over a (strategy, backend) pair.
+
+    ``callbacks`` are called once per round with a record dict
+    ``{"round", "selected", "wall_s"[, "acc"]}``. ``checkpoint_every=N``
+    with ``checkpoint_dir`` writes ``round_XXXX.npz`` after every N-th
+    round; ``run(resume_from=path)`` continues a run from such a file.
+    """
+
+    def __init__(self, strategy, backend, *, rounds: int,
+                 eval_batch=None, eval_every: int = 1,
+                 participation: Optional[Participation] = None,
+                 callbacks: Sequence[Callable[[Dict[str, Any]], None]] = (),
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0):
+        self.participation = participation or Participation()
+        if not self.participation.full and backend.name == "unified":
+            raise ValueError(
+                "UnifiedBackend requires full participation (the round is "
+                "one stacked cohort program); use LoopBackend for "
+                f"fraction={self.participation.fraction}")
+        if rounds < 0:
+            raise ValueError(f"rounds={rounds!r} must be >= 0")
+        if eval_every < 1:
+            raise ValueError(f"eval_every={eval_every!r} must be >= 1")
+        self.strategy = strategy
+        self.backend = backend.bind(strategy)
+        self.rounds = rounds
+        self.eval_batch = eval_batch
+        self.eval_every = eval_every
+        self.callbacks = list(callbacks)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+
+    # ------------------------------------------------------------- running
+    def run(self, key=None, *, resume_from: Optional[str] = None
+            ) -> Dict[str, Any]:
+        # re-bind: another Federation may have bound the shared backend to
+        # a different strategy since construction
+        self.backend.bind(self.strategy)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        state = self.backend.init_state(key)
+        start, hist = 0, []
+        if resume_from is not None:
+            state, extra = load_round_checkpoint(resume_from, like=state)
+            start, hist = extra["round"], list(extra["history"])
+            restore_sampler_rngs(self.backend.samplers, extra)
+        t0 = time.time()
+        for r in range(start, self.rounds):
+            selected = self.participation.select(r, self.strategy.n_clients)
+            state = self.backend.run_round(state, r, selected)
+            record: Dict[str, Any] = {"round": r + 1, "selected": selected,
+                                      "wall_s": time.time() - t0}
+            if (r + 1) % self.eval_every == 0 and self.eval_batch is not None:
+                acc = self.backend.evaluate(state, r + 1, self.eval_batch)
+                hist.append(acc)
+                record["acc"] = acc
+            for cb in self.callbacks:
+                cb(record)
+            if (self.checkpoint_dir and self.checkpoint_every
+                    and (r + 1) % self.checkpoint_every == 0):
+                save_round_checkpoint(
+                    checkpoint_path(self.checkpoint_dir, r + 1), state,
+                    round_idx=r + 1, history=hist,
+                    samplers=self.backend.samplers,
+                    meta={"strategy": self.strategy.name,
+                          "backend": self.backend.name})
+        self.state = state
+        return self._result(state, hist, t0)
+
+    def _result(self, state, hist, t0) -> Dict[str, Any]:
+        wall = time.time() - t0   # training time only: the final catch-up
+                                  # eval below must not skew benchmarks
+        final_acc = hist[-1] if hist else None
+        if final_acc is None and self.eval_batch is not None:
+            # eval_every may exceed rounds: still report a final accuracy
+            final_acc = self.backend.evaluate(state, self.rounds,
+                                              self.eval_batch)
+        return {"history": hist,
+                "final_acc": final_acc,
+                "client_params": self.backend.client_views(state,
+                                                           self.rounds),
+                "global_params": (state if self.strategy.kind == "global"
+                                  else None),
+                "wall_s": wall}

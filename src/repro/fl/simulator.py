@@ -1,47 +1,51 @@
-"""Federated-learning simulator: the paper's protocol end to end.
+"""Back-compat facade: ``Simulator``/``FLRunConfig`` over ``Federation``.
+
+The orchestration API is the Strategy protocol + Federation orchestrator
+(fl/strategy.py, fl/federation.py, fl/backends.py — DESIGN.md §7); this
+module keeps the original entry point working unchanged:
+
+    Simulator(family, client_cfgs, samplers, FLRunConfig(...), eval_batch)
+        .run() -> {"history", "final_acc", "client_params",
+                   "global_params", "wall_s"}
 
 Methods: fedadp | flexifed | clustered | standalone  (Section IV).
 
-Protocol knobs follow Section IV.A.4: K clients, full participation,
-local epochs E over 20% of the client's data per round, SGD(lr).
+Protocol knobs follow Section IV.A.4: K clients, local epochs E over 20%
+of the client's data per round, SGD(lr). ``participation`` (beyond-paper)
+selects a seeded per-round client subset when < 1 (loop engine only).
 
-Two execution paths (EXPERIMENTS.md §Perf):
-  * engine="loop"     — the reference path: a Python loop over clients,
-                        each trained in its own architecture.
-  * engine="unified"  — the cohort-parallel path (fl/engine.py): one
-                        stacked vmapped program in the union architecture,
-                        shard_map-able over a device mesh. Exact for
-                        depth-heterogeneous cohorts, approximate under
-                        width heterogeneity (DESIGN.md §2).
-  * engine="auto"     — unified when the method supports it, the cohort
-                        is depth-only and client batch streams align;
+Execution backends (EXPERIMENTS.md §Perf):
+  * engine="loop"     — reference path: a Python loop over clients, each
+                        trained in its own architecture (LoopBackend).
+  * engine="unified"  — cohort-parallel path (UnifiedBackend around
+                        fl/engine.py): one stacked vmapped program in the
+                        union architecture, shard_map-able over a device
+                        mesh. Exact for depth-heterogeneous cohorts
+                        (DESIGN.md §2).
+  * engine="auto"     — unified when eligible (backends.unified_eligible),
                         loop otherwise.
 
 Beyond-paper knobs (ablations in EXPERIMENTS.md):
   * narrow_mode:  "paper" (Alg. 3) | "fold" (function-preserving inverse)
-  * filler:       "zero"  (paper: expanded regions a client doesn't have
-                  carry zeros / identity filler into the average)
-                  | "global" (FedADP-U: the server substitutes its own
-                  current values for uncovered regions — uncovered
-                  parameters are simply not pulled toward the filler)
+  * filler:       "zero" (paper) | "global" (FedADP-U) — a FedADP
+                  strategy option (fl/strategy.py).
+
+All config values are validated eagerly at ``FLRunConfig`` construction.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FedADP, ClusteredFL, FlexiFed, Standalone, vgg_chain
-from repro.core.aggregation import client_weights, fedavg
 from repro.data.federated import ClientSampler
-from repro.fl.engine import UnifiedEngine
-from repro.optim import sgd
+from repro.fl.backends import LoopBackend, UnifiedBackend, unified_eligible
+from repro.fl.federation import Federation, Participation
+from repro.fl.strategy import FILLERS, METHODS, NARROW_MODES, make_strategy
 
-_UNIFIED_METHODS = ("fedadp", "clustered", "flexifed", "standalone")
+_ENGINES = ("loop", "unified", "auto")
 
 
 @dataclass
@@ -57,12 +61,43 @@ class FLRunConfig:
     eval_every: int = 1
     engine: str = "auto"                 # loop | unified | auto
     use_kernel: Optional[bool] = None    # unified path: None = auto (TPU)
+    participation: float = 1.0           # client fraction per round
+    participation_seed: int = 0          # per-round sampling seed
+
+    def __post_init__(self):
+        # fail at construction, not after `rounds` of work mid-run
+        if self.method not in METHODS:
+            raise ValueError(
+                f"method={self.method!r}, expected one of {METHODS}")
+        if self.filler not in FILLERS:
+            raise ValueError(
+                f"filler={self.filler!r}, expected one of {FILLERS}")
+        if self.narrow_mode not in NARROW_MODES:
+            raise ValueError(f"narrow_mode={self.narrow_mode!r}, expected "
+                             f"one of {NARROW_MODES}")
+        if self.engine not in _ENGINES:
+            raise ValueError(
+                f"engine={self.engine!r}, expected one of {_ENGINES}")
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError(f"participation={self.participation!r} must "
+                             "be in (0, 1]")
+        if self.rounds < 0:
+            raise ValueError(f"rounds={self.rounds!r} must be >= 0")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every={self.eval_every!r} must be >= 1")
+        if self.local_epochs < 1:
+            raise ValueError(
+                f"local_epochs={self.local_epochs!r} must be >= 1")
 
 
 class Simulator:
-    def __init__(self, family, client_cfgs: Sequence, samplers: List[ClientSampler],
-                 run_cfg: FLRunConfig, eval_batch: Dict[str, np.ndarray],
-                 mesh=None):
+    """Thin shim: builds (strategy, backend, Federation) from the config
+    once, then delegates ``run()``. Kept so every existing test, example
+    and benchmark works unchanged on top of the new API."""
+
+    def __init__(self, family, client_cfgs: Sequence,
+                 samplers: List[ClientSampler], run_cfg: FLRunConfig,
+                 eval_batch: Dict[str, np.ndarray], mesh=None):
         self.family = family
         self.client_cfgs = list(client_cfgs)
         self.samplers = samplers
@@ -70,192 +105,59 @@ class Simulator:
         self.eval_batch = eval_batch
         self.mesh = mesh
         self.n_samples = [s.n_samples for s in samplers]
-        self._grad_fns: Dict[str, Callable] = {}
-        self._engines: Dict[tuple, UnifiedEngine] = {}
-        self._opt = sgd(run_cfg.lr, run_cfg.momentum)
-
-    # ------------------------------------------------------------ pieces
-    def _grad_fn(self, cfg):
-        if cfg.name not in self._grad_fns:
-            f = self.family.loss_and_grad(cfg)
-            self._grad_fns[cfg.name] = jax.jit(f)
-        return self._grad_fns[cfg.name]
-
-    def _local_train(self, k: int, params):
-        cfg = self.client_cfgs[k]
-        gf = self._grad_fn(cfg)
-        opt_state = self._opt.init(params)
-        step = 0
-        for batch in self.samplers[k].round_batches(self.cfg.local_epochs):
-            (_, _), grads = gf(params, batch)
-            params, opt_state = self._opt.update(grads, opt_state, params, step)
-            step += 1
-        return params
-
-    def _evaluate_clients(self, client_params, cfgs=None) -> float:
-        cfgs = cfgs if cfgs is not None else self.client_cfgs
-        accs = [self.family.evaluate(p, c, self.eval_batch)
-                for p, c in zip(client_params, cfgs)]
-        return float(np.mean(accs))
+        # backends (grad fns / the engine's jitted step) are cached across
+        # run()s keyed by the cfg fields they depend on; the Federation
+        # itself is rebuilt per run so `sim.cfg` mutations (e.g. replacing
+        # `rounds` between a warmup and a timed run) take effect.
+        self._backends: Dict[tuple, Any] = {}
 
     # ------------------------------------------------------ engine choice
-    def _resolve_engine(self) -> str:
-        eng = self.cfg.engine
-        if eng == "auto":
-            # equal n_samples + batch_size + round_fraction => every sampler
-            # draws the same per-round take, so the stacked batch streams
-            # are guaranteed to align (ragged cohorts keep the loop).
-            # filler="global" stays on the loop: the two paths define
-            # "uncovered" differently on identity-conv filler taps
-            # (engine.py aggregate_global docstring).
-            ok = (self.cfg.method in _UNIFIED_METHODS
-                  and self.cfg.filler == "zero"
-                  and self.family.depth_only(self.client_cfgs)
-                  and len(set(self.n_samples)) == 1
-                  and len({s.batch_size for s in self.samplers}) == 1
-                  and len({getattr(s, "round_fraction", None)
-                           for s in self.samplers}) == 1)
-            return "unified" if ok else "loop"
-        if eng not in ("loop", "unified"):
-            raise ValueError(f"engine={eng!r}")
-        return eng
+    def _resolve_engine(self, strategy=None) -> str:
+        if self.cfg.engine != "auto":
+            return self.cfg.engine
+        strategy = strategy if strategy is not None else self._strategy()
+        return ("unified" if unified_eligible(
+            strategy, self.family, self.client_cfgs, self.samplers,
+            full_participation=self.cfg.participation >= 1.0) else "loop")
+
+    def _strategy(self):
+        return make_strategy(
+            self.cfg.method, self.family, self.client_cfgs, self.n_samples,
+            narrow_mode=self.cfg.narrow_mode, filler=self.cfg.filler,
+            base_seed=self.cfg.seed)
+
+    def _backend(self, kind: str):
+        cfg = self.cfg
+        # key only on what each backend actually depends on, so e.g. a
+        # seed sweep on the loop engine keeps its warm grad fns
+        bkey = (kind, cfg.local_epochs, cfg.lr, cfg.momentum) + (
+            (cfg.use_kernel, cfg.seed) if kind == "unified" else ())
+        if bkey not in self._backends:
+            if kind == "unified":
+                self._backends[bkey] = UnifiedBackend(
+                    self.family, self.client_cfgs, self.samplers,
+                    local_epochs=cfg.local_epochs, lr=cfg.lr,
+                    momentum=cfg.momentum, use_kernel=cfg.use_kernel,
+                    mesh=self.mesh, seed=cfg.seed)
+            else:
+                self._backends[bkey] = LoopBackend(
+                    self.family, self.client_cfgs, self.samplers,
+                    local_epochs=cfg.local_epochs, lr=cfg.lr,
+                    momentum=cfg.momentum)
+        return self._backends[bkey]
+
+    def _build(self) -> Federation:
+        cfg = self.cfg
+        strategy = self._strategy()
+        backend = self._backend(self._resolve_engine(strategy))
+        backend.samplers = self.samplers   # like cfg, mutable between runs
+        return Federation(
+            strategy, backend, rounds=cfg.rounds, eval_batch=self.eval_batch,
+            eval_every=cfg.eval_every,
+            participation=Participation(cfg.participation,
+                                        cfg.participation_seed))
 
     # -------------------------------------------------------------- runs
     def run(self, key=None) -> Dict[str, Any]:
         key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
-        if self._resolve_engine() == "unified":
-            return self._run_unified(key)
-        return self._run_loop(key)
-
-    def _run_loop(self, key) -> Dict[str, Any]:
-        method = self.cfg.method
-        hist: List[float] = []
-        t0 = time.time()
-
-        if method == "fedadp":
-            algo = FedADP(self.family, self.client_cfgs, self.n_samples,
-                          narrow_mode=self.cfg.narrow_mode,
-                          base_seed=self.cfg.seed)
-            gparams = algo.init_global(key)
-            for r in range(self.cfg.rounds):
-                if self.cfg.filler == "global":
-                    gparams = self._round_fedadp_globalfill(algo, gparams, r)
-                else:
-                    gparams = algo.round(gparams, self._local_train, r)
-                if (r + 1) % self.cfg.eval_every == 0:
-                    cps = [algo.distribute(gparams, r + 1, k)
-                           for k in range(len(self.client_cfgs))]
-                    hist.append(self._evaluate_clients(cps))
-            final = [algo.distribute(gparams, self.cfg.rounds, k)
-                     for k in range(len(self.client_cfgs))]
-            return self._result(hist, final, t0, global_params=gparams)
-
-        # per-client-parameter methods
-        client_params = [self.family.init(jax.random.fold_in(key, k), c)
-                         for k, c in enumerate(self.client_cfgs)]
-        if method == "standalone":
-            algo = Standalone(self.client_cfgs, self.n_samples)
-        elif method == "clustered":
-            algo = ClusteredFL(self.client_cfgs, self.n_samples)
-        elif method == "flexifed":
-            algo = FlexiFed(self.client_cfgs, self.n_samples, vgg_chain)
-        else:
-            raise ValueError(method)
-        for r in range(self.cfg.rounds):
-            client_params = algo.round(client_params, self._local_train, r)
-            if (r + 1) % self.cfg.eval_every == 0:
-                hist.append(self._evaluate_clients(client_params))
-        return self._result(hist, client_params, t0)
-
-    # ------------------------------------------------- cohort-parallel run
-    def _stacked_round_batches(self) -> List[Dict[str, np.ndarray]]:
-        """Draw one round of local batches from every sampler and stack
-        them on a leading K axis. Consumes the SAME rng stream per sampler
-        as the loop path, so the two paths see identical data."""
-        per = [list(s.round_batches(self.cfg.local_epochs))
-               for s in self.samplers]
-        counts = {len(b) for b in per}
-        if len(counts) != 1:
-            raise ValueError(
-                "unified engine needs aligned client batch streams "
-                f"(got per-client step counts {sorted(counts)}); "
-                "use engine='loop' for ragged cohorts")
-        out = []
-        for t in range(counts.pop()):
-            shapes = {tuple((k, v.shape) for k, v in sorted(b[t].items()))
-                      for b in per}
-            if len(shapes) != 1:
-                raise ValueError(
-                    "unified engine needs identical batch shapes across "
-                    "clients; use engine='loop'")
-            out.append({k: np.stack([b[t][k] for b in per])
-                        for k in per[0][t]})
-        return out
-
-    def _run_unified(self, key) -> Dict[str, Any]:
-        method = self.cfg.method
-        if method not in _UNIFIED_METHODS:
-            raise ValueError(f"unified engine does not support {method!r}")
-        hist: List[float] = []
-        t0 = time.time()
-        ekey = (method, self.cfg.filler, self.cfg.lr, self.cfg.momentum,
-                self.cfg.use_kernel, self.cfg.seed)
-        if ekey not in self._engines:   # keep the jitted step across run()s
-            self._engines[ekey] = UnifiedEngine(
-                self.family, self.client_cfgs, self.n_samples,
-                lr=self.cfg.lr, momentum=self.cfg.momentum, method=method,
-                filler_mode=self.cfg.filler, use_kernel=self.cfg.use_kernel,
-                mesh=self.mesh, embed_seed=self.cfg.seed)
-        eng = self._engines[ekey]
-        gcfgs = [eng.global_cfg] * len(self.client_cfgs)
-
-        def eval_stacked(stacked):
-            views = [eng.client_view(stacked, k)
-                     for k in range(len(self.client_cfgs))]
-            return self._evaluate_clients(views, gcfgs)
-
-        if method == "fedadp":
-            gparams = eng.init_global(key)
-            for r in range(self.cfg.rounds):
-                gparams = eng.run_round(gparams, self._stacked_round_batches())
-                if (r + 1) % self.cfg.eval_every == 0:
-                    hist.append(eval_stacked(eng.round_start(gparams)))
-            views = eng.round_start(gparams)
-            final = [eng.client_view(views, k)
-                     for k in range(len(self.client_cfgs))]
-            return self._result(hist, final, t0, global_params=gparams)
-
-        stacked = eng.embed([
-            self.family.init(jax.random.fold_in(key, k), c)
-            for k, c in enumerate(self.client_cfgs)])
-        for r in range(self.cfg.rounds):
-            stacked = eng.run_round(stacked, self._stacked_round_batches())
-            if (r + 1) % self.cfg.eval_every == 0:
-                hist.append(eval_stacked(stacked))
-        final = [eng.client_view(stacked, k)
-                 for k in range(len(self.client_cfgs))]
-        return self._result(hist, final, t0)
-
-    def _round_fedadp_globalfill(self, algo: FedADP, gparams, r: int):
-        """FedADP-U: uncovered regions keep the server's values instead of
-        the zero/identity filler (beyond-paper; see module docstring)."""
-        expanded, masks = [], []
-        for k in range(len(self.client_cfgs)):
-            ck = algo.distribute(gparams, r, k)
-            ck = self._local_train(k, ck)
-            up_k = algo.collect(ck, r, k)
-            ones = jax.tree.map(jnp.ones_like, ck)
-            mask = jax.tree.map(lambda m: (jnp.abs(m) > 0).astype(jnp.float32),
-                                algo.collect(ones, r, k))
-            filled = jax.tree.map(lambda u, m, g: u * m + g * (1 - m),
-                                  up_k, mask, gparams)
-            expanded.append(filled)
-        w = algo.weights / algo.weights.sum()
-        return fedavg(expanded, w)
-
-    def _result(self, hist, client_params, t0, global_params=None):
-        return {"history": hist,
-                "final_acc": hist[-1] if hist else None,
-                "client_params": client_params,
-                "global_params": global_params,
-                "wall_s": time.time() - t0}
+        return self._build().run(key)

@@ -1,0 +1,198 @@
+"""The Strategy protocol: every FL method as one round contract.
+
+The survey framing (Fan et al., 2023; HeteroFL) — and the paper's own
+Algorithm 1 — describe a federated round as
+
+    distribute -> local train -> collect -> aggregate
+
+and every method we implement is an instance of that contract.  This
+module makes the contract the API:
+
+  * ``init_state(key)``                      server state at round 0,
+  * ``distribute(state, r, k)``              params client k trains on,
+  * ``collect(state, r, k, trained)``        client k's server-side update,
+  * ``aggregate(state, r, updates)``         next server state from the
+                                             participating ``(k, update)``
+                                             pairs (partial participation
+                                             = a subset of clients),
+  * ``client_view(state, k, r)``             client k's current params for
+                                             evaluation / deployment.
+
+State shape is strategy-owned: FedADP's state is the single global
+parameter tree (``kind = "global"``); the per-client baselines carry a
+list of per-client trees (``kind = "per_client"``).  Orchestration —
+rounds, participation schedules, callbacks, checkpointing — lives in
+``fl/federation.py``; execution (who actually runs local training) lives
+in ``fl/backends.py``.  Strategies only define the method's math, by
+delegating to the ``repro.core`` implementations, so the literal
+algorithms stay the single source of truth.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Protocol, Sequence, Tuple, runtime_checkable
+
+import jax
+
+from repro.core import ClusteredFL, FedADP, FlexiFed, Standalone, vgg_chain
+
+Update = Tuple[int, Any]          # (client index, collected update)
+
+METHODS = ("fedadp", "clustered", "flexifed", "standalone")
+FILLERS = ("zero", "global")
+NARROW_MODES = ("paper", "fold")
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    """Round contract every FL method implements (see module docstring)."""
+    name: str                     # method id ("fedadp", "clustered", ...)
+    kind: str                     # "global" | "per_client" state shape
+    n_samples: Sequence[int]      # per-client dataset sizes (W_k weights)
+
+    @property
+    def n_clients(self) -> int: ...
+
+    def init_state(self, key) -> Any: ...
+
+    def distribute(self, state, round_idx: int, k: int) -> Any: ...
+
+    def collect(self, state, round_idx: int, k: int, trained) -> Any: ...
+
+    def aggregate(self, state, round_idx: int,
+                  updates: Sequence[Update]) -> Any: ...
+
+    def client_view(self, state, k: int, round_idx: int = 0) -> Any: ...
+
+
+class FedADPStrategy:
+    """FedADP (Algorithm 1) as a Strategy. State = the global tree.
+
+    ``filler`` selects the aggregation rule for regions a client doesn't
+    cover (DESIGN.md §4):
+      * "zero"    — the paper: the zero/identity filler ``up()`` inserts
+                    participates in the average,
+      * "global"  — FedADP-U: uncovered coordinates keep the server's
+                    current values (the update is mask-folded onto the
+                    global tree before averaging), so they are not pulled
+                    toward the filler.  Formerly a one-off method body in
+                    the simulator; now just a strategy option.
+    """
+    name = "fedadp"
+    kind = "global"
+
+    def __init__(self, family, client_cfgs, n_samples, *,
+                 narrow_mode: str = "paper", filler: str = "zero",
+                 base_seed: int = 0):
+        if filler not in FILLERS:
+            raise ValueError(f"filler={filler!r}, expected one of {FILLERS}")
+        self.algo = FedADP(family, client_cfgs, n_samples,
+                           narrow_mode=narrow_mode, base_seed=base_seed)
+        self.filler = filler
+        self.family = family
+        self.client_cfgs = list(self.algo.client_cfgs)
+        self.n_samples = list(n_samples)
+        self.global_cfg = self.algo.global_cfg
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_cfgs)
+
+    def init_state(self, key):
+        return self.algo.init_global(key)
+
+    def distribute(self, state, round_idx: int, k: int):
+        return self.algo.distribute(state, round_idx, k)
+
+    def collect(self, state, round_idx: int, k: int, trained):
+        up = self.algo.collect(trained, round_idx, k)
+        if self.filler == "zero":
+            return up
+        mask = self.algo.coverage_mask(round_idx, k, trained)
+        return jax.tree.map(lambda u, m, g: u * m + g * (1 - m),
+                            up, mask, state)
+
+    def aggregate(self, state, round_idx: int, updates: Sequence[Update]):
+        selected = [k for k, _ in updates]
+        return self.algo.aggregate([u for _, u in updates], selected)
+
+    def client_view(self, state, k: int, round_idx: int = 0):
+        return self.algo.distribute(state, round_idx, k)
+
+
+class _PerClientStrategy:
+    """Shared scaffolding for methods whose state is the list of client
+    parameter trees; subclasses plug the core algorithm in ``_algo``."""
+    kind = "per_client"
+
+    def __init__(self, family, client_cfgs, n_samples):
+        self.family = family
+        self.client_cfgs = list(client_cfgs)
+        self.n_samples = list(n_samples)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_cfgs)
+
+    def init_state(self, key) -> List:
+        return [self.family.init(jax.random.fold_in(key, k), c)
+                for k, c in enumerate(self.client_cfgs)]
+
+    def distribute(self, state, round_idx: int, k: int):
+        return state[k]
+
+    def collect(self, state, round_idx: int, k: int, trained):
+        return trained
+
+    def aggregate(self, state, round_idx: int, updates: Sequence[Update]):
+        new = list(state)
+        for k, u in updates:
+            new[k] = u
+        return self._algo.aggregate(new, [k for k, _ in updates])
+
+    def client_view(self, state, k: int, round_idx: int = 0):
+        return state[k]
+
+
+class StandaloneStrategy(_PerClientStrategy):
+    """Purely local training — aggregate is the identity."""
+    name = "standalone"
+
+    def __init__(self, family, client_cfgs, n_samples):
+        super().__init__(family, client_cfgs, n_samples)
+        self._algo = Standalone(self.client_cfgs, self.n_samples)
+
+
+class ClusteredStrategy(_PerClientStrategy):
+    """FedAvg within same-architecture clusters (∩ participants)."""
+    name = "clustered"
+
+    def __init__(self, family, client_cfgs, n_samples):
+        super().__init__(family, client_cfgs, n_samples)
+        self._algo = ClusteredFL(self.client_cfgs, self.n_samples)
+
+
+class FlexiFedStrategy(_PerClientStrategy):
+    """Clustered-Common: shared chain prefix across participants, the
+    personalized remainder within (cluster ∩ participants)."""
+    name = "flexifed"
+
+    def __init__(self, family, client_cfgs, n_samples, chain_fn=vgg_chain):
+        super().__init__(family, client_cfgs, n_samples)
+        self._algo = FlexiFed(self.client_cfgs, self.n_samples, chain_fn)
+
+
+def make_strategy(method: str, family, client_cfgs, n_samples, *,
+                  narrow_mode: str = "paper", filler: str = "zero",
+                  base_seed: int = 0) -> Strategy:
+    """Strategy factory keyed on the method names ``FLRunConfig`` uses."""
+    if method == "fedadp":
+        return FedADPStrategy(family, client_cfgs, n_samples,
+                              narrow_mode=narrow_mode, filler=filler,
+                              base_seed=base_seed)
+    if method == "standalone":
+        return StandaloneStrategy(family, client_cfgs, n_samples)
+    if method == "clustered":
+        return ClusteredStrategy(family, client_cfgs, n_samples)
+    if method == "flexifed":
+        return FlexiFedStrategy(family, client_cfgs, n_samples)
+    raise ValueError(f"method={method!r}, expected one of {METHODS}")

@@ -1,0 +1,210 @@
+"""Federation orchestrator: checkpoint/resume fidelity, participation
+schedules, partial-participation semantics, eager config validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg_family import scaled, vgg
+from repro.core import VGGFamily
+from repro.data import EASY, ClientSampler, image_classification, iid_partition
+from repro.fl import (Federation, FLRunConfig, FedADPStrategy, LoopBackend,
+                      Participation, Simulator, UnifiedBackend,
+                      checkpoint_path, load_round_checkpoint, make_strategy,
+                      restore_sampler_rngs, save_round_checkpoint)
+
+FAMILY = VGGFamily()
+
+
+def _setup(archs=("vgg13", "vgg16"), n=160, width=32):
+    cfgs = [scaled(vgg(a), 0.125, width) for a in archs]
+    data = image_classification(EASY, n, seed=0)
+    test = image_classification(EASY, 80, seed=9)
+    parts = iid_partition(n, len(cfgs), seed=0)
+
+    def samplers():
+        return [ClientSampler(data, p, round_fraction=0.5, batch_size=16,
+                              seed=i) for i, p in enumerate(parts)]
+
+    return cfgs, samplers, test
+
+
+def _backend(kind, cfgs, samplers):
+    cls = UnifiedBackend if kind == "unified" else LoopBackend
+    return cls(FAMILY, cfgs, samplers, local_epochs=1, lr=0.05, momentum=0.9)
+
+
+# --------------------------------------------------------------- resume
+@pytest.mark.parametrize("kind", ["loop", "unified"])
+def test_checkpoint_resume_reproduces_run(kind, tmp_path):
+    """Interrupt a 6-round fedadp run at round 3, restore, and the resumed
+    history + final global params match the uninterrupted run (the
+    checkpoint carries round, state, and the samplers' rng streams)."""
+    cfgs, mk, test = _setup()
+    backend = _backend(kind, cfgs, mk())   # one backend: jit caches shared
+
+    def fed(rounds, **kw):
+        strategy = FedADPStrategy(FAMILY, cfgs,
+                                  [s.n_samples for s in backend.samplers])
+        return Federation(strategy, backend, rounds=rounds, eval_batch=test,
+                          eval_every=1, **kw)
+
+    key = jax.random.PRNGKey(0)
+    full = fed(6).run(key)
+
+    ckdir = str(tmp_path / kind)
+    backend.samplers = mk()                # fresh stream = a fresh 6-round job
+    fed(3, checkpoint_dir=ckdir, checkpoint_every=3).run(key)   # "interrupt"
+    backend.samplers = mk()                # resumed process starts cold...
+    resumed = fed(6).run(key, resume_from=checkpoint_path(ckdir, 3))
+
+    np.testing.assert_allclose(resumed["history"], full["history"], atol=1e-6)
+    assert len(resumed["history"]) == 6
+    for a, b in zip(jax.tree.leaves(full["global_params"]),
+                    jax.tree.leaves(resumed["global_params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+class _FakeSampler:
+    def __init__(self, seed):
+        self.rng = np.random.default_rng(seed)
+
+
+def test_checkpoint_bf16_and_rng_roundtrip(tmp_path):
+    """bf16 leaves survive the npz uint16 view round-trip, and restored
+    sampler rngs continue the stream exactly where the checkpoint cut it."""
+    state = {"w": (jnp.arange(6, dtype=jnp.bfloat16) / 3).reshape(2, 3),
+             "b": jnp.ones((4,), jnp.float32)}
+    s = _FakeSampler(5)
+    s.rng.integers(0, 10, size=7)                    # advance the stream
+    path = str(tmp_path / "ck.npz")
+    save_round_checkpoint(path, state, round_idx=2, history=[0.1, 0.2],
+                          samplers=[s])
+    expected_next = s.rng.integers(0, 1000, size=8)  # post-checkpoint draws
+
+    like = jax.tree.map(jnp.zeros_like, state)
+    state2, extra = load_round_checkpoint(path, like=like)
+    assert extra["round"] == 2 and extra["history"] == [0.1, 0.2]
+    assert state2["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(state2["w"], np.float32),
+                                  np.asarray(state["w"], np.float32))
+    s2 = _FakeSampler(0)                             # wrong seed on purpose
+    restore_sampler_rngs([s2], extra)
+    np.testing.assert_array_equal(s2.rng.integers(0, 1000, size=8),
+                                  expected_next)
+
+
+# -------------------------------------------------------- participation
+def test_participation_schedules():
+    p = Participation.sample(0.5, seed=1)
+    sels = [p.select(r, 6) for r in range(5)]
+    assert all(len(s) == 3 and s == sorted(set(s)) for s in sels)
+    # deterministic in (seed, round) and varying across rounds
+    assert [Participation.sample(0.5, seed=1).select(r, 6)
+            for r in range(5)] == sels
+    assert len({tuple(s) for s in sels}) > 1
+    assert Participation().select(3, 4) == [0, 1, 2, 3]
+    assert [Participation.cycle(0.5).select(r, 4) for r in range(3)] == \
+        [[0, 1], [2, 3], [0, 1]]
+    with pytest.raises(ValueError):
+        Participation(0.0)
+    with pytest.raises(ValueError):
+        Participation(0.5, mode="nope")
+
+
+@pytest.mark.parametrize("method", ["fedadp", "clustered", "flexifed",
+                                    "standalone"])
+def test_partial_participation_loop(method):
+    """fraction < 1 with seeded per-round sampling runs every method on
+    the loop backend; callbacks see the per-round subset."""
+    cfgs, mk, test = _setup(archs=("vgg13", "vgg13"))
+    samplers = mk()
+    strategy = make_strategy(method, FAMILY, cfgs,
+                             [s.n_samples for s in samplers])
+    records = []
+    fed = Federation(strategy, _backend("loop", cfgs, samplers), rounds=2,
+                     eval_batch=test,
+                     participation=Participation.sample(0.5, seed=2),
+                     callbacks=[records.append])
+    res = fed.run(jax.random.PRNGKey(0))
+    assert len(res["history"]) == 2
+    assert res["final_acc"] is not None
+    assert [len(r["selected"]) for r in records] == [1, 1]
+
+
+def test_unified_backend_rebind_rebuilds_engine():
+    """Rebinding the same method reuses the engine (jitted step kept);
+    rebinding a different method must rebuild it, not run stale math."""
+    cfgs, mk, _ = _setup()
+    samplers = mk()
+    n = [s.n_samples for s in samplers]
+    backend = UnifiedBackend(FAMILY, cfgs, samplers, local_epochs=1)
+    e1 = backend.bind(FedADPStrategy(FAMILY, cfgs, n)).engine
+    assert backend.bind(FedADPStrategy(FAMILY, cfgs, n)).engine is e1
+    e2 = backend.bind(make_strategy("clustered", FAMILY, cfgs, n)).engine
+    assert e2 is not e1 and e2.method == "clustered"
+
+
+def test_unified_backend_rejects_partial_participation():
+    cfgs, mk, test = _setup()
+    samplers = mk()
+    strategy = FedADPStrategy(FAMILY, cfgs,
+                              [s.n_samples for s in samplers])
+    backend = UnifiedBackend(FAMILY, cfgs, samplers, local_epochs=1)
+    with pytest.raises(ValueError, match="full participation"):
+        Federation(strategy, backend, rounds=1, eval_batch=test,
+                   participation=Participation.sample(0.5))
+    backend.bind(strategy)
+    with pytest.raises(ValueError, match="full participation"):
+        backend.run_round(backend.init_state(jax.random.PRNGKey(0)), 0, [0])
+
+
+# ----------------------------------------------------------- config/shim
+def test_flrunconfig_eager_validation():
+    for kw in (dict(method="fedsgd"), dict(filler="none"),
+               dict(narrow_mode="widen"), dict(engine="gpu"),
+               dict(participation=1.5), dict(participation=0.0),
+               dict(eval_every=0), dict(rounds=-1), dict(local_epochs=0)):
+        with pytest.raises(ValueError):
+            FLRunConfig(**kw)
+
+
+def test_simulator_cfg_mutation_takes_effect():
+    """benchmarks/unified_bench.py warms up with rounds=1 then swaps
+    sim.cfg for the timed run — the Federation must be rebuilt per run
+    (jit caches live in the backend and stay warm)."""
+    import dataclasses
+    cfgs, mk, test = _setup(archs=("vgg13",))
+    rc = FLRunConfig(method="standalone", rounds=1, local_epochs=1, lr=0.05)
+    sim = Simulator(FAMILY, cfgs, mk(), rc, test)
+    assert len(sim.run()["history"]) == 1
+    sim.cfg = dataclasses.replace(rc, rounds=3)
+    assert len(sim.run()["history"]) == 3
+    assert len(sim._backends) == 1         # backend (and its jits) reused
+
+
+def test_shared_backend_rebinds_per_run():
+    """Two Federations over one backend: each run() re-binds its own
+    strategy, so constructing the second must not hijack the first."""
+    cfgs, mk, test = _setup(archs=("vgg13", "vgg13"))
+    backend = _backend("loop", cfgs, mk())
+    n = [s.n_samples for s in backend.samplers]
+    fed_a = Federation(FedADPStrategy(FAMILY, cfgs, n), backend, rounds=1,
+                       eval_batch=test)
+    fed_b = Federation(make_strategy("standalone", FAMILY, cfgs, n), backend,
+                       rounds=1, eval_batch=test)
+    res_a = fed_a.run(jax.random.PRNGKey(0))     # after fed_b bound itself
+    assert res_a["global_params"] is not None    # fedadp ran, not standalone
+    res_b = fed_b.run(jax.random.PRNGKey(0))
+    assert res_b["global_params"] is None
+
+
+def test_final_acc_populated_when_eval_every_exceeds_rounds():
+    cfgs, mk, test = _setup(archs=("vgg13",))
+    rc = FLRunConfig(method="standalone", rounds=1, local_epochs=1,
+                     eval_every=5)
+    res = Simulator(FAMILY, cfgs, mk(), rc, test).run()
+    assert res["history"] == []
+    assert res["final_acc"] is not None
+    assert 0.0 <= res["final_acc"] <= 1.0
