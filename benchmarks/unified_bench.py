@@ -1,13 +1,16 @@
-"""Per-client loop vs cohort-parallel unified engine wall clock.
+"""Per-client loop vs cohort-parallel unified engine wall clock, per
+aggregation mode.
 
 The unified engine (fl/engine.py) replaces the Python loop over K clients
 with one stacked vmapped program; this bench measures the per-round wall
-clock of both Simulator paths across cohort sizes K in {4, 8, 16} on a
-depth-heterogeneous VGG cohort (where the two are numerically equivalent
-— tests/test_unified.py). Compile time is excluded by a 1-round warmup
-run on the SAME Simulator (grad fns and the engine's jitted step are
-cached per instance) before the timed rounds. Numbers feed
-EXPERIMENTS.md §Perf.
+clock of both Simulator paths across cohort sizes K and both aggregation
+modes (``filler`` — paper Eq. 1 — and ``coverage`` — the HeteroFL-style
+renormalized average from core/aggregation.py) on a depth-heterogeneous
+VGG cohort, where the two engines are numerically equivalent
+(tests/test_unified.py, tests/test_federation.py). Compile time is
+excluded by a 1-round warmup run on the SAME Simulator (grad fns and the
+engine's jitted steps are cached per instance) before the timed rounds.
+Numbers feed EXPERIMENTS.md §Perf.
 
 On a single device the two paths are roughly wall-clock neutral on CPU
 (the engine trades K dispatches for union-depth padding FLOPs); the win
@@ -16,11 +19,19 @@ host platform (set BEFORE jax initializes — works standalone or with
 FEDADP_BENCH_ONLY=unified) and runs the unified path shard_map-ed over
 a client mesh.
 
-CSV rows: unified/K{K}/{loop|unified},us_per_round,rounds=N
+Outputs:
+  * CSV rows ``unified/K{K}/{loop|unified}/{agg_mode},us_per_round,...``
+    plus per-(K, agg_mode) speedups,
+  * a machine-readable ``BENCH_unified.json`` (path override:
+    FEDADP_BENCH_JSON) so the perf trajectory is diffable across PRs.
+
+Env: FEDADP_BENCH_FULL=1 paper-scale protocol; FEDADP_BENCH_SMOKE=1
+tiny-K single-round run for CI (seconds, not minutes).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import sys
 
@@ -38,6 +49,7 @@ from repro.fl import FLRunConfig, Simulator
 from repro.sharding import cohort_mesh
 
 DEPTH_ARCHS = ("vgg13", "vgg15", "vgg17", "vgg19")  # depth-only cohort
+AGG_MODES = ("filler", "coverage")
 
 
 def _cohort(K: int, n_per_client: int, batch: int):
@@ -56,14 +68,23 @@ def _cohort(K: int, n_per_client: int, batch: int):
     return family, cfgs, samplers, test
 
 
-def _per_round(family, cfgs, samplers, test, engine: str, rounds: int) -> float:
-    rc = FLRunConfig(method="fedadp", rounds=1, local_epochs=1, lr=0.05,
-                     momentum=0.9, eval_every=10 ** 9, engine=engine)
+def _per_round(family, cfgs, samplers, test, engine: str, rounds: int
+               ) -> dict:
+    """{agg_mode: seconds-per-round}; one Simulator per engine so grad fns
+    / engine steps stay warm across the agg_mode sweep."""
+    base = FLRunConfig(method="fedadp", rounds=1, local_epochs=1, lr=0.05,
+                       momentum=0.9, eval_every=10 ** 9, engine=engine)
     mesh = cohort_mesh(len(cfgs)) if engine == "unified" else None
-    sim = Simulator(family, cfgs, samplers(), rc, test, mesh=mesh)
-    sim.run()                                   # warmup: pays compilation
-    sim.cfg = dataclasses.replace(rc, rounds=rounds)
-    return sim.run()["wall_s"] / rounds
+    sim = Simulator(family, cfgs, samplers(), base, test, mesh=mesh)
+    out = {}
+    for agg_mode in AGG_MODES:
+        sim.cfg = dataclasses.replace(base, agg_mode=agg_mode)
+        sim.samplers = samplers()
+        sim.run()                               # warmup: pays compilation
+        sim.cfg = dataclasses.replace(sim.cfg, rounds=rounds)
+        sim.samplers = samplers()
+        out[agg_mode] = sim.run()["wall_s"] / rounds
+    return out
 
 
 def main(csv: List[str]):
@@ -75,18 +96,43 @@ def main(csv: List[str]):
         csv.append(f"unified/devices,0,WARN=requested {_DEV} devices but "
                    f"jax has {len(jax.devices())}; run standalone or with "
                    "FEDADP_BENCH_ONLY=unified")
+    smoke = os.environ.get("FEDADP_BENCH_SMOKE")
     full = os.environ.get("FEDADP_BENCH_FULL")
-    n_per_client, batch, rounds = (256, 64, 5) if full else (64, 32, 3)
-    for K in (4, 8, 16):
+    if smoke:
+        Ks, (n_per_client, batch, rounds) = (2,), (32, 16, 1)
+    elif full:
+        Ks, (n_per_client, batch, rounds) = (4, 8, 16), (256, 64, 5)
+    else:
+        Ks, (n_per_client, batch, rounds) = (4, 8, 16), (64, 32, 3)
+    records = []
+    for K in Ks:
         family, cfgs, samplers, test = _cohort(K, n_per_client, batch)
         per = {}
         for engine in ("loop", "unified"):
             per[engine] = _per_round(family, cfgs, samplers, test, engine,
                                      rounds)
-            csv.append(f"unified/K{K}/{engine},{per[engine] * 1e6:.0f},"
-                       f"rounds={rounds}")
-        csv.append(f"unified/K{K}/speedup,"
-                   f"{per['loop'] / max(per['unified'], 1e-9):.2f},x")
+            for agg_mode, sec in per[engine].items():
+                csv.append(f"unified/K{K}/{engine}/{agg_mode},"
+                           f"{sec * 1e6:.0f},rounds={rounds}")
+                records.append({"K": K, "engine": engine,
+                                "agg_mode": agg_mode,
+                                "us_per_round": round(sec * 1e6),
+                                "rounds": rounds})
+        for agg_mode in AGG_MODES:
+            csv.append(
+                f"unified/K{K}/speedup/{agg_mode},"
+                f"{per['loop'][agg_mode] / max(per['unified'][agg_mode], 1e-9):.2f},x")
+    path = os.environ.get("FEDADP_BENCH_JSON", "BENCH_unified.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "unified_bench",
+                   "protocol": {"rounds": rounds,
+                                "n_per_client": n_per_client,
+                                "batch": batch, "local_epochs": 1,
+                                "smoke": bool(smoke), "full": bool(full),
+                                "devices": len(jax.devices()),
+                                "backend": jax.default_backend()},
+                   "rows": records}, f, indent=1)
+    csv.append(f"unified/json,0,{path}")
     return csv
 
 

@@ -1,6 +1,8 @@
 """FedADP core: the paper's contribution as composable JAX modules."""
 from repro.core.aggregation import (  # noqa: F401
-    client_weights, fedavg, fedavg_stacked, stack_trees)
+    AGG_MODES, COVERAGE_POLICIES, client_weights, coverage_and_filler,
+    coverage_mask, fedavg, fedavg_masked, fedavg_stacked, loosen,
+    stack_trees, subset_weights)
 from repro.core.fedadp import FedADP  # noqa: F401
 from repro.core.baselines import ClusteredFL, FlexiFed, Standalone, vgg_chain  # noqa: F401
 from repro.core.family import TransformerFamily, VGGFamily  # noqa: F401

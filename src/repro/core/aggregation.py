@@ -1,11 +1,35 @@
-"""Model aggregation (paper Eq. 1-2): weighted FedAvg in the unified space.
+"""Model aggregation (paper Eq. 1-2) and coverage semantics — the ONE
+place in the tree where "which coordinates does a client cover, and how
+do covered coordinates average" is defined.
 
 Two layouts:
   * list-of-trees   — server-side aggregation of K client pytrees,
   * stacked tree    — every leaf has a leading K axis (the unified-space
                       simulation layout); hot path backed by the Pallas
-                      ``fedavg`` kernel on TPU (jnp fallback elsewhere,
+                      ``fedavg`` kernels on TPU (jnp fallback elsewhere,
                       selected automatically when ``use_kernel=None``).
+
+Coverage (HeteroFL, Diao et al. 2021; survey Fan et al. 2023): FedADP's
+Eq. 1-2 averages in the *unified* space, so every coordinate a client
+doesn't own contributes filler (zeros / identity-conv taps) to the
+average. ``coverage_mask`` defines which coordinates count as covered —
+one policy, two readings:
+
+  * ``"strict"``  — ``|up(ones) - up(zeros)| > 0``: exactly where a
+                    client parameter lands; filler constants (identity
+                    -conv taps) are NOT covered. This is the trainable
+                    -coordinate mask the unified engine projects
+                    gradients with.
+  * ``"loose"``   — ``|up(ones)| > 0``: additionally counts the nonzero
+                    filler constants (identity-conv center taps) as
+                    covered — the loop reference's historical reading
+                    (``loosen`` derives it from the strict mask + filler
+                    without re-running ``up``).
+
+``fedavg_masked`` / ``fedavg_stacked(..., masks=)`` implement the
+coverage-weighted average: per coordinate, only the covering clients
+contribute, with their weights renormalized over the covering subset
+(``renorm=True``); coordinates no client covers take ``fallback``.
 """
 from __future__ import annotations
 
@@ -15,6 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+COVERAGE_POLICIES = ("loose", "strict")
+AGG_MODES = ("filler", "coverage")
+
 
 def client_weights(n_samples: Sequence[int]) -> np.ndarray:
     """W_k = n_k / n  (paper Eq. 2)."""
@@ -22,6 +49,77 @@ def client_weights(n_samples: Sequence[int]) -> np.ndarray:
     return (n / n.sum()).astype(np.float32)
 
 
+def subset_weights(n_samples: Sequence[int],
+                   selected: Optional[Sequence[int]] = None) -> np.ndarray:
+    """W_k renormalized over the participating subset (Eq. 2 on the
+    subset) — the single definition every partial-participation path
+    (loop strategies, baselines, unified engine) shares."""
+    n = np.asarray(n_samples, np.float64)
+    if selected is not None:
+        n = n[np.asarray(list(selected))]
+    return (n / n.sum()).astype(np.float32)
+
+
+# ------------------------------------------------------------- coverage
+def _mask01(tree):
+    return jax.tree.map(lambda a: (jnp.abs(a) > 0).astype(jnp.float32), tree)
+
+
+def _client_fill(family, client_cfg, value: float):
+    """A constant client-shaped tree WITHOUT running the (random) init:
+    ``eval_shape`` gives the structure, the fill is free."""
+    shapes = jax.eval_shape(lambda k: family.init(k, client_cfg),
+                            jax.random.PRNGKey(0))
+    return jax.tree.map(lambda s: jnp.full(s.shape, value, s.dtype), shapes)
+
+
+def coverage_and_filler(family, client_cfg, global_cfg, *, seed: int = 0):
+    """(strict coverage mask, filler) for embedding one client.
+
+    ``up()`` is linear in the client parameters except for the constants
+    it inserts (identity convs / zero blocks), so pushing an all-ones and
+    an all-zeros tree through it separates the two:
+
+      filler = up(zeros)                  — the inserted constants,
+      strict = |up(ones) - up(zeros)| > 0 — 1 exactly where a client
+                                            parameter lands.
+    """
+    up0 = family.up(_client_fill(family, client_cfg, 0.0), client_cfg,
+                    global_cfg, seed=seed)
+    up1 = family.up(_client_fill(family, client_cfg, 1.0), client_cfg,
+                    global_cfg, seed=seed)
+    strict = jax.tree.map(
+        lambda a, b: (jnp.abs(a - b) > 0).astype(jnp.float32), up1, up0)
+    return strict, up0
+
+
+def loosen(strict_mask, filler):
+    """loose = strict ∪ nonzero-filler sites: parameter landing sites and
+    filler constants are disjoint by construction (To-Deeper inserts whole
+    constant layers, To-Wider only duplicates client parameters), so the
+    loose reading is exactly ``|up(ones)| > 0``."""
+    return jax.tree.map(
+        lambda m, f: jnp.maximum(m, (jnp.abs(f) > 0).astype(m.dtype)),
+        strict_mask, filler)
+
+
+def coverage_mask(family, client_cfg, global_cfg, *,
+                  policy: str = "strict", seed: int = 0):
+    """Global-space 0/1 mask of the coordinates a client covers, under
+    the given policy (module docstring). "loose" is a single ``up(ones)``
+    push (matching the per-round cost of the loop reference it encodes);
+    "strict" needs the second ``up(zeros)`` push to cancel the filler."""
+    if policy not in COVERAGE_POLICIES:
+        raise ValueError(
+            f"coverage policy={policy!r}, expected one of {COVERAGE_POLICIES}")
+    if policy == "loose":
+        return _mask01(family.up(_client_fill(family, client_cfg, 1.0),
+                                 client_cfg, global_cfg, seed=seed))
+    strict, _ = coverage_and_filler(family, client_cfg, global_cfg, seed=seed)
+    return strict
+
+
+# ---------------------------------------------------------- aggregation
 def fedavg(trees: Sequence, weights) -> object:
     """omega^{t+1} = sum_k W_k omega_k  (paper Eq. 1)."""
     w = jnp.asarray(weights)
@@ -36,30 +134,79 @@ def fedavg(trees: Sequence, weights) -> object:
     return jax.tree.map(agg, *trees)
 
 
-def fedavg_stacked(stacked, weights, *, use_kernel: Optional[bool] = None):
+def fedavg_stacked(stacked, weights, *, masks=None, renorm: bool = True,
+                   fallback=None, use_kernel: Optional[bool] = None):
     """Aggregate a stacked tree: every leaf (K, ...) -> (...).
 
+    Without ``masks`` this is Eq. 1 verbatim. With ``masks`` (a stacked
+    0/1 tree of the same shape) it is the coverage-weighted average: per
+    coordinate only covering clients contribute, their weights
+    renormalized over the covering subset when ``renorm``; coordinates no
+    client covers take the matching ``fallback`` leaf (or 0).
+
     ``use_kernel=None`` auto-selects the Pallas kernel (compiled) on a TPU
-    backend and the jnp einsum fallback everywhere else; pass an explicit
-    bool to force either path.
+    backend and the jnp fallback everywhere else; pass an explicit bool to
+    force either path.
     """
     w = jnp.asarray(weights, jnp.float32)
     if use_kernel is None:
         from repro.kernels.fedavg.fedavg import on_tpu
         use_kernel = on_tpu()
 
+    if masks is None:
+        if use_kernel:
+            from repro.kernels.fedavg import ops as kops
+
+            def agg(leaf):
+                return kops.weighted_sum(leaf, w).astype(leaf.dtype)
+        else:
+            def agg(leaf):
+                flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+                out = jnp.einsum("k,kn->n", w, flat)
+                return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+        return jax.tree.map(agg, stacked)
+
     if use_kernel:
         from repro.kernels.fedavg import ops as kops
 
-        def agg(leaf):
-            return kops.weighted_sum(leaf, w).astype(leaf.dtype)
+        def masked(leaf, m):
+            return kops.weighted_sum_masked(leaf, w, m, renorm=renorm)
     else:
-        def agg(leaf):
+        def masked(leaf, m):
             flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
-            out = jnp.einsum("k,kn->n", w, flat)
-            return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+            mf = m.reshape(m.shape[0], -1).astype(jnp.float32)
+            wm = w[:, None] * mf
+            num = jnp.sum(wm * flat, axis=0)
+            if renorm:
+                den = jnp.sum(wm, axis=0)
+                num = jnp.where(den > 0,
+                                num / jnp.where(den > 0, den, 1.0), 0.0)
+            return num.reshape(leaf.shape[1:])
 
-    return jax.tree.map(agg, stacked)
+    def agg(leaf, m, fb=None):
+        out = masked(leaf, m)
+        if fb is not None:
+            covered = jnp.any(m > 0, axis=0)
+            out = jnp.where(covered, out, fb.astype(jnp.float32))
+        return out.astype(leaf.dtype)
+
+    if fallback is None:
+        return jax.tree.map(agg, stacked, masks)
+    return jax.tree.map(agg, stacked, masks, fallback)
+
+
+def fedavg_masked(trees: Sequence, weights, masks: Sequence, *,
+                  renorm: bool = True, fallback=None,
+                  use_kernel: Optional[bool] = None):
+    """List-of-trees layout of the coverage-weighted average: the
+    HeteroFL rule — average each coordinate over only the clients that
+    hold it. Delegates to ``fedavg_stacked`` so the coverage math has
+    exactly one implementation."""
+    assert len(trees) == len(masks)
+    return fedavg_stacked(stack_trees(trees), weights,
+                          masks=stack_trees(masks), renorm=renorm,
+                          fallback=fallback, use_kernel=use_kernel)
 
 
 def stack_trees(trees: Sequence):

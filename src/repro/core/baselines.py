@@ -17,7 +17,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.aggregation import client_weights, fedavg
+from repro.core.aggregation import fedavg, subset_weights
 
 
 def _cluster_ids(cfgs) -> Dict[str, List[int]]:
@@ -59,8 +59,8 @@ class ClusteredFL:
             ids = [i for i in ids if i in sel]
             if not ids:
                 continue
-            w = client_weights(self.n_samples[ids])
-            agg = fedavg([new[i] for i in ids], w)
+            agg = fedavg([new[i] for i in ids],
+                         subset_weights(self.n_samples, ids))
             for i in ids:
                 new[i] = agg
         return new
@@ -114,7 +114,7 @@ class FlexiFed:
         new = list(client_params)
         chains = self._chains(new, sel)
         common = self._common_of(chains)
-        w_all = client_weights(self.n_samples[sel])
+        w_all = subset_weights(self.n_samples, sel)
         for pos in common:
             agg = fedavg([chains[i][pos][1] for i in sel], w_all)
             for i in sel:
@@ -124,7 +124,7 @@ class FlexiFed:
             ids = [i for i in ids if i in set(sel)]
             if not ids:
                 continue
-            w = client_weights(self.n_samples[ids])
+            w = subset_weights(self.n_samples, ids)
             for pos in range(len(common), len(chains[ids[0]])):
                 agg = fedavg([chains[i][pos][1] for i in ids], w)
                 for i in ids:

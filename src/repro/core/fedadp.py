@@ -10,17 +10,25 @@ Round t:
 
 ``narrow_mode`` selects the paper's Alg. 3 ("paper") or the beyond-paper
 function-preserving fold inverse ("fold") — compared in ablations.
+
+Coverage knobs (single-sourced in ``core.aggregation``):
+  * ``coverage``  — which coordinates count as covered: "loose"
+                    (``|up(ones)| > 0``, counts identity-conv filler taps)
+                    or "strict" (parameter landing sites only).
+  * ``agg_mode``  — "filler": Eq. 1 verbatim (the filler ``up()`` inserts
+                    participates in the average); "coverage": the
+                    HeteroFL-style renormalized average over covering
+                    clients only, with uncovered coordinates keeping the
+                    server's current values.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import client_weights, fedavg
+from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
+                                    client_weights, coverage_mask, fedavg,
+                                    fedavg_masked, subset_weights)
 
 
 @dataclass
@@ -29,11 +37,25 @@ class FedADP:
     client_cfgs: Sequence[Any]
     n_samples: Sequence[int]
     narrow_mode: str = "paper"
+    coverage: str = "loose"      # the loop-reference reading
+    agg_mode: str = "filler"     # the paper's Eq. 1
     base_seed: int = 0
 
     def __post_init__(self):
+        if self.coverage not in COVERAGE_POLICIES:
+            raise ValueError(f"coverage={self.coverage!r}, expected one of "
+                             f"{COVERAGE_POLICIES}")
+        if self.agg_mode not in AGG_MODES:
+            raise ValueError(f"agg_mode={self.agg_mode!r}, expected one of "
+                             f"{AGG_MODES}")
         self.global_cfg = self.family.union(list(self.client_cfgs))
         self.weights = client_weights(self.n_samples)
+        # coverage masks are seed-invariant on depth-only cohorts (the
+        # embedding seed only steers To-Wider duplication), so the
+        # per-round mask of Step 4 can be computed once per (client,
+        # policy) instead of per round
+        self._depth_only = self.family.depth_only(list(self.client_cfgs))
+        self._mask_cache = {}
 
     def init_global(self, key):
         return self.family.init(key, self.global_cfg)
@@ -56,24 +78,56 @@ class FedADP:
                               self.global_cfg,
                               seed=self._seed(round_idx, k))
 
-    def coverage_mask(self, round_idx: int, k: int, like):
+    def coverage_mask(self, round_idx: int, k: int, *,
+                      policy: Optional[str] = None):
         """Global-space 0/1 mask of the coordinates client k's expansion
-        touches at this round: push an all-ones client tree (structured
-        like ``like``) through ``collect`` and threshold. Identity-conv
-        filler taps count as covered under this (loop-reference) reading —
-        see ``UnifiedEngine.aggregate_global`` for the stricter one."""
-        ones = jax.tree.map(jnp.ones_like, like)
-        return jax.tree.map(lambda m: (jnp.abs(m) > 0).astype(jnp.float32),
-                            self.collect(ones, round_idx, k))
+        covers at this round, under this instance's ``coverage`` policy
+        (or an explicit override) — delegates to ``core.aggregation``,
+        the single source of coverage semantics. Cached per (client,
+        policy) on depth-only cohorts, where the mask is round-invariant;
+        width-heterogeneous masks vary per round and are recomputed (a
+        per-round cache would grow without bound over a long run)."""
+        policy = policy or self.coverage
+        seed = self._seed(round_idx, k)
+        if not self._depth_only:
+            return coverage_mask(self.family, self.client_cfgs[k],
+                                 self.global_cfg, policy=policy, seed=seed)
+        key = (k, policy)
+        if key not in self._mask_cache:
+            self._mask_cache[key] = coverage_mask(
+                self.family, self.client_cfgs[k], self.global_cfg,
+                policy=policy, seed=seed)
+        return self._mask_cache[key]
 
     def aggregate(self, expanded: Sequence,
-                  selected: Optional[Sequence[int]] = None):
+                  selected: Optional[Sequence[int]] = None, *,
+                  round_idx: Optional[int] = None, global_params=None):
         """Step 4 (Eq. 1-2): FedAvg of the expanded client models, with
-        W_k renormalized over the participating subset."""
+        W_k renormalized over the participating subset.
+
+        ``agg_mode="coverage"`` replaces Eq. 1's filler-polluted average
+        with the per-coordinate renormalized average over covering
+        clients; coordinates no participant covers keep ``global_params``
+        (both required in that mode — the masks must match the seed the
+        updates were embedded with, so the round may not be guessed).
+        """
         selected = list(selected if selected is not None
                         else range(len(self.client_cfgs)))
-        w = self.weights[np.asarray(selected)]
-        return fedavg(expanded, w / w.sum())
+        w = subset_weights(self.n_samples, selected)
+        if self.agg_mode == "coverage":
+            if global_params is None:
+                raise ValueError(
+                    'agg_mode="coverage" needs global_params: coordinates '
+                    "no participant covers keep the server's values")
+            if round_idx is None:
+                raise ValueError(
+                    'agg_mode="coverage" needs round_idx: the coverage '
+                    "masks must use the seed the updates were embedded "
+                    "with")
+            masks = [self.coverage_mask(round_idx, k) for k in selected]
+            return fedavg_masked(expanded, w, masks, renorm=True,
+                                 fallback=global_params)
+        return fedavg(expanded, w)
 
     def round(self, global_params, local_train: Callable, round_idx: int,
               selected: Optional[Sequence[int]] = None):
@@ -86,4 +140,5 @@ class FedADP:
             ck = self.distribute(global_params, round_idx, k)
             ck = local_train(k, ck)
             expanded.append(self.collect(ck, round_idx, k))
-        return self.aggregate(expanded, selected)
+        return self.aggregate(expanded, selected, round_idx=round_idx,
+                              global_params=global_params)

@@ -13,17 +13,21 @@ train -> collect -> aggregate`` for one round:
                           whole round runs as one stacked vmapped XLA
                           program in the union architecture (shard_map
                           over the client axis when a mesh is given).
-                          Requires FULL participation and aligned client
-                          batch streams; partial rounds raise
-                          ``ValueError`` (DESIGN.md §7).
+                          Partial participation gathers the selected
+                          slice of the stacked cohort and draws batches
+                          from the participants' samplers only, so both
+                          backends consume identical data streams
+                          (DESIGN.md §7). Requires aligned client batch
+                          streams.
 
 Both expose the same surface to ``Federation``:
   bind(strategy) / init_state(key) / run_round(state, r, selected) /
   evaluate(state, r, batch) / client_views(state, r) / samplers.
 
-``unified_eligible`` keeps the old ``engine="auto"`` rules: unified when
-the strategy supports it, the cohort is depth-only, the client batch
-streams are guaranteed to align, and participation is full.
+``unified_eligible`` is the ``engine="auto"`` rule: unified when the
+strategy supports it, the cohort is depth-only, and the client batch
+streams are guaranteed to align. Participation and FedADP-U no longer
+keep the loop — both paths read coverage from ``core.aggregation``.
 """
 from __future__ import annotations
 
@@ -124,27 +128,34 @@ class UnifiedBackend:
         # numbers strategy.aggregate would use on the loop backend), not
         # from whatever samplers the backend currently holds
         n_samples = [int(n) for n in strategy.n_samples]
-        # keep the engine (and its jitted step) across rebinds of the SAME
-        # method/filler/weights; rebuild when the strategy's math changes
+        # keep the engine (and its jitted steps) across rebinds of the SAME
+        # method/coverage-knobs/weights; rebuild when the strategy's math
+        # changes
         key = (strategy.name, getattr(strategy, "filler", "zero"),
-               tuple(n_samples))
+               getattr(strategy, "agg_mode", "filler"),
+               getattr(strategy, "coverage", "loose"), tuple(n_samples))
         if self.engine is None or self._engine_key != key:
             self._engine_key = key
             self.engine = UnifiedEngine(
                 self.family, self.client_cfgs, n_samples,
                 lr=self.lr, momentum=self.momentum, method=strategy.name,
                 filler_mode=getattr(strategy, "filler", "zero"),
+                agg_mode=getattr(strategy, "agg_mode", "filler"),
+                coverage=getattr(strategy, "coverage", "loose"),
                 use_kernel=self.use_kernel, mesh=self.mesh,
                 embed_seed=self.seed)
         return self
 
     # ------------------------------------------------------- batch stream
-    def _stacked_round_batches(self) -> List[Dict[str, np.ndarray]]:
-        """Draw one round of local batches from every sampler and stack
-        them on a leading K axis. Consumes the SAME rng stream per sampler
-        as the loop path, so the two paths see identical data."""
-        per = [list(s.round_batches(self.local_epochs))
-               for s in self.samplers]
+    def _stacked_round_batches(self, selected: Sequence[int]
+                               ) -> List[Dict[str, np.ndarray]]:
+        """Draw one round of local batches from the PARTICIPATING
+        samplers and stack them on a leading axis (``selected`` order).
+        Consumes the SAME rng stream per sampler as the loop path — and
+        none at all for non-participants — so the two paths see identical
+        data under any participation schedule."""
+        per = [list(self.samplers[k].round_batches(self.local_epochs))
+               for k in selected]
         counts = {len(b) for b in per}
         if len(counts) != 1:
             raise ValueError(
@@ -170,13 +181,9 @@ class UnifiedBackend:
         return self.engine.embed(self.strategy.init_state(key))
 
     def run_round(self, state, round_idx: int, selected: Sequence[int]):
-        if list(selected) != list(range(len(self.client_cfgs))):
-            raise ValueError(
-                "unified backend requires full participation (stacked "
-                f"cohort program); got subset {list(selected)} of "
-                f"{len(self.client_cfgs)} clients — use LoopBackend / "
-                "engine='loop' for partial participation")
-        return self.engine.run_round(state, self._stacked_round_batches())
+        sel = list(selected)
+        return self.engine.run_round(state, self._stacked_round_batches(sel),
+                                     selected=sel)
 
     def client_views(self, state, round_idx: int) -> List:
         stacked = (self.engine.round_start(state)
@@ -192,17 +199,15 @@ class UnifiedBackend:
 
 
 def unified_eligible(strategy: Strategy, family, client_cfgs,
-                     samplers, *, full_participation: bool = True) -> bool:
+                     samplers) -> bool:
     """The ``auto`` rule: equal n_samples + batch_size + round_fraction
     means every sampler draws the same per-round take, so the stacked
     batch streams are guaranteed to align (ragged cohorts keep the loop).
-    filler="global" stays on the loop: the two paths define "uncovered"
-    differently on identity-conv filler taps (engine.aggregate_global
-    docstring). Partial participation always keeps the loop."""
+    Neither FedADP-U nor partial participation keeps the loop anymore:
+    both paths read coverage from ``core.aggregation`` and the engine
+    runs selected-subset rounds."""
     n_samples = [s.n_samples for s in samplers]
     return (strategy.name in METHODS
-            and getattr(strategy, "filler", "zero") == "zero"
-            and full_participation
             and family.depth_only(list(client_cfgs))
             and len(set(n_samples)) == 1
             and len({s.batch_size for s in samplers}) == 1

@@ -10,24 +10,41 @@ program instead of a Python loop over clients:
     would insert) and a 0/1 *trainable mask* on the ones it does,
   * local training = ``jax.vmap`` over the stacked (K, ...) parameter
     tree with mask-projected gradients and stacked optimizer state
-    (SGD + momentum from ``repro.optim``), jitted ONCE per engine,
+    (SGD + momentum from ``repro.optim``), jitted ONCE per engine and
+    participating-subset size,
   * the client axis is ``shard_map``-ed over a device mesh via the
     ``sharding/rules.py`` machinery (``stacked_client_spec``) — local
     training is embarrassingly parallel over K, so the shard-mapped body
     needs no collectives,
-  * aggregation = ``fedavg_stacked`` (Pallas ``fedavg`` kernel on TPU,
-    jnp fallback elsewhere, auto-selected).
+  * aggregation = ``fedavg_stacked`` (Pallas ``fedavg`` kernels on TPU,
+    jnp fallback elsewhere, auto-selected), with the coverage semantics
+    single-sourced in ``core.aggregation``: the strict mask is the
+    trainable-coordinate projection, the ``coverage`` policy (default
+    "loose", the loop reference's reading) decides what counts as
+    covered during aggregation, and ``agg_mode="coverage"`` switches
+    Eq. 1's filler-polluted average for the HeteroFL-style renormalized
+    average over covering clients.
 
-Faithfulness (verified in tests/test_unified.py against the per-client
-``LoopBackend`` reference path; ``UnifiedBackend`` in fl/backends.py is
-the Federation-facing wrapper around this engine — DESIGN.md §7):
+Partial participation: ``run_round(state, batches, selected=...)`` runs
+the round on the gathered ``selected`` slice of the stacked tree —
+weights/masks renormalize over the subset, per-client state scatters
+back, cluster/prefix aggregation intersects with the participants — so
+the engine supports every participation schedule the loop reference
+does, bit-compatibly on its exact domain.
+
+Faithfulness (verified in tests/test_unified.py + tests/test_federation.py
+against the per-client ``LoopBackend`` reference path; ``UnifiedBackend``
+in fl/backends.py is the Federation-facing wrapper around this engine —
+DESIGN.md §7):
 
   * EXACT for depth-heterogeneous cohorts: the filler is a pointwise
     identity in the forward pass (zero block under a pre-norm residual;
     identity conv under ReLU on non-negative activations), masked
     gradients keep it constant, and aggregating the stacked tree with
     the filler in place reproduces the paper's zero/identity-filler
-    FedAvg literally.
+    FedAvg literally; both paths read coverage from
+    ``core.aggregation.coverage_mask``, so FedADP-U and coverage-mode
+    aggregation match the loop too.
   * Width heterogeneity embeds through a FIXED To-Wider mapping
     (``embed_seed``) instead of Alg. 2's per-round random duplication —
     a documented approximation (EXPERIMENTS.md §Ablations).
@@ -37,16 +54,18 @@ Methods: ``fedadp`` (filler "zero" | "global"), ``clustered``,
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.aggregation import client_weights, fedavg_stacked, stack_trees
+from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
+                                    client_weights, coverage_and_filler,
+                                    fedavg_stacked, loosen, stack_trees,
+                                    subset_weights)
 from repro.core.baselines import _cluster_ids
 from repro.optim import sgd
 from repro.sharding.rules import stacked_client_spec
@@ -54,27 +73,15 @@ from repro.sharding.rules import stacked_client_spec
 
 def client_embedding(family, client_cfgs: Sequence, global_cfg, *,
                      seed: int = 0):
-    """Stacked (masks, filler) for embedding a cohort into ``global_cfg``.
-
-    ``up()`` is linear in the client parameters except for the constants
-    it inserts (identity convs / zero blocks), so pushing an all-ones and
-    an all-zeros tree through it separates the two:
-
-      filler  = up(zeros)                 — the inserted constants,
-      mask    = |up(ones) - up(zeros)| > 0 — 1 exactly where a client
-                                             parameter lands.
-    """
-    key = jax.random.PRNGKey(0)
+    """Stacked (strict masks, filler) for embedding a cohort into
+    ``global_cfg`` — per-client trees from
+    ``core.aggregation.coverage_and_filler``, stacked on a leading K
+    axis."""
     masks, fillers = [], []
     for cfg in client_cfgs:
-        proto = family.init(key, cfg)
-        up0 = family.up(jax.tree.map(jnp.zeros_like, proto), cfg, global_cfg,
-                        seed=seed)
-        up1 = family.up(jax.tree.map(jnp.ones_like, proto), cfg, global_cfg,
-                        seed=seed)
-        masks.append(jax.tree.map(
-            lambda a, b: (jnp.abs(a - b) > 0).astype(jnp.float32), up1, up0))
-        fillers.append(up0)
+        m, f = coverage_and_filler(family, cfg, global_cfg, seed=seed)
+        masks.append(m)
+        fillers.append(f)
     return stack_trees(masks), stack_trees(fillers)
 
 
@@ -88,6 +95,9 @@ class UnifiedEngine:
     momentum: float = 0.0
     method: str = "fedadp"
     filler_mode: str = "zero"            # fedadp only: "zero" | "global"
+    agg_mode: str = "filler"             # "filler" (Eq. 1) | "coverage"
+    coverage: str = "loose"              # what counts as covered when
+                                         # aggregating (core.aggregation)
     loss_fn: Optional[Callable] = None   # loss(params, batch) under the
                                          # GLOBAL cfg; default: family's
     use_kernel: Optional[bool] = None    # None = auto (Pallas on TPU)
@@ -96,21 +106,38 @@ class UnifiedEngine:
     embed_seed: int = 0
 
     def __post_init__(self):
+        if self.agg_mode not in AGG_MODES:
+            raise ValueError(f"agg_mode={self.agg_mode!r}, expected one of "
+                             f"{AGG_MODES}")
+        if self.coverage not in COVERAGE_POLICIES:
+            raise ValueError(f"coverage={self.coverage!r}, expected one of "
+                             f"{COVERAGE_POLICIES}")
         self.global_cfg = self.family.union(list(self.client_cfgs))
         self.weights = client_weights(self.n_samples)
         self.masks, self.filler = client_embedding(
             self.family, self.client_cfgs, self.global_cfg,
             seed=self.embed_seed)
+        # aggregation-time coverage under the configured policy: strict is
+        # the trainable mask itself, loose adds the nonzero filler taps
+        self.cov_masks = (self.masks if self.coverage == "strict"
+                          else loosen(self.masks, self.filler))
         self.clusters = _cluster_ids(self.client_cfgs)
         if self.method == "flexifed":
-            self._prefix_paths = self._flexifed_prefix_paths()
+            full = tuple(range(len(self.client_cfgs)))
+            self._prefix_cache: Dict[Tuple[int, ...], set] = {}
+            self._prefix_paths = self._prefix_for(full)
         self._opt = sgd(self.lr, self.momentum)
-        self._step = self._build_step()
+        self._steps: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------- step fn
-    def _build_step(self):
-        """One SGD step over the whole stacked cohort, jitted exactly once
-        (the per-call re-``jax.jit`` of the old sketch is gone)."""
+    def _step_for(self, k_count: int):
+        """The stacked SGD step for a cohort (or participating subset) of
+        ``k_count`` clients — jitted exactly once per subset size."""
+        if k_count not in self._steps:
+            self._steps[k_count] = self._build_step(k_count)
+        return self._steps[k_count]
+
+    def _build_step(self, k_count: int):
         if self.loss_fn is not None:
             lf = self.loss_fn
 
@@ -132,8 +159,7 @@ class UnifiedEngine:
 
         fn = step_core
         if self.mesh is not None:
-            spec = stacked_client_spec(self.mesh, self.client_axes,
-                                       len(self.client_cfgs))
+            spec = stacked_client_spec(self.mesh, self.client_axes, k_count)
             if spec != P():
                 # local training is independent per client: every operand
                 # carries the K axis, the body needs no collectives.
@@ -142,16 +168,41 @@ class UnifiedEngine:
                                out_specs=(spec, spec), check_rep=False)
         return jax.jit(fn)
 
+    # ------------------------------------------------------------- subsets
+    def _resolve(self, selected) -> Optional[list]:
+        """None = full participation; otherwise the participating subset."""
+        if selected is None:
+            return None
+        sel = list(selected)
+        return None if sel == list(range(len(self.client_cfgs))) else sel
+
+    @staticmethod
+    def _gather(tree, selected):
+        if selected is None:
+            return tree
+        idx = jnp.asarray(selected)
+        return jax.tree.map(lambda x: x[idx], tree)
+
+    @staticmethod
+    def _scatter(tree, selected, sub):
+        if selected is None:
+            return sub
+        idx = jnp.asarray(selected)
+        return jax.tree.map(lambda t, s: t.at[idx].set(s), tree, sub)
+
     # ----------------------------------------------------------- embedding
     def init_global(self, key):
         return self.family.init(key, self.global_cfg)
 
-    def round_start(self, global_params):
+    def round_start(self, global_params, selected=None):
         """Stacked per-client views of a global model: the unified-space
-        equivalent of FedADP's distribute (To-Shallower/To-Narrower)."""
+        equivalent of FedADP's distribute (To-Shallower/To-Narrower),
+        restricted to the participating subset when given."""
+        masks = self._gather(self.masks, selected)
+        filler = self._gather(self.filler, selected)
         return jax.tree.map(
             lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
-            global_params, self.masks, self.filler)
+            global_params, masks, filler)
 
     def embed(self, client_params: Sequence):
         """Stack per-client (client-space) trees into the unified space."""
@@ -163,48 +214,64 @@ class UnifiedEngine:
         return jax.tree.map(lambda x: x[k], stacked)
 
     # ------------------------------------------------------------ training
-    def train_round(self, stacked, stacked_batches: Sequence):
+    def train_round(self, stacked, stacked_batches: Sequence, *, masks=None):
         """Run one local-training round: fresh optimizer state (matching
         the per-client loop, which re-inits SGD momentum every round), one
-        step per stacked batch."""
+        step per stacked batch. ``masks`` defaults to the full-cohort
+        strict masks; pass a gathered subset for partial rounds."""
+        masks = self.masks if masks is None else masks
+        step = self._step_for(jax.tree.leaves(masks)[0].shape[0])
         opt_state = self._opt.init(stacked)
         for i, batch in enumerate(stacked_batches):
-            stacked, opt_state = self._step(
-                stacked, opt_state, self.masks, batch,
+            stacked, opt_state = step(
+                stacked, opt_state, masks, batch,
                 jnp.asarray(i, jnp.int32))
         return stacked
 
     # --------------------------------------------------------- aggregation
-    def _norm_w(self, ids) -> np.ndarray:
-        return client_weights(np.asarray(self.n_samples)[np.asarray(ids)])
+    def aggregate_global(self, stacked, global_params=None, selected=None):
+        """FedADP Eq. 1-2 over the (sub-)stacked tree, weights
+        renormalized over the participating subset.
 
-    def aggregate_global(self, stacked, global_params=None):
-        """FedADP Eq. 1-2 over the stacked tree. filler_mode="zero" keeps
-        the filler constants in the average (the paper's rule — exactly
-        what averaging ``up()`` outputs does); "global" (FedADP-U)
-        substitutes the server's current values in uncovered regions.
+        ``agg_mode="filler"``: filler_mode="zero" keeps the filler
+        constants in the average (the paper's rule — exactly what
+        averaging ``up()`` outputs does); "global" (FedADP-U) substitutes
+        the server's current values on UNCOVERED coordinates, where
+        covered is read from ``core.aggregation.coverage_mask`` under the
+        engine's ``coverage`` policy — the same mask the loop reference
+        uses, so the two paths agree by construction.
 
-        Note: for "global" this engine treats EVERY coordinate the client
-        doesn't own as uncovered — including the nonzero taps of identity
-        -conv filler — whereas the loop path's ``|collect(ones)| > 0``
-        mask counts those taps as covered and keeps the identity values.
-        The two therefore differ on VGG depth cohorts under FedADP-U
-        (engine semantics are the stricter reading); ``engine="auto"``
-        keeps FedADP-U on the loop path for this reason."""
+        ``agg_mode="coverage"``: the HeteroFL-style average — each
+        coordinate over only the clients that cover it, per-coordinate
+        weight renormalization, server values where no participant
+        covers.
+        """
+        w = subset_weights(self.n_samples, selected)
+        cov = self._gather(self.cov_masks, selected)
+        if self.agg_mode == "coverage":
+            assert global_params is not None, \
+                'agg_mode="coverage" needs the current global params'
+            return fedavg_stacked(stacked, w, masks=cov, renorm=True,
+                                  fallback=global_params,
+                                  use_kernel=self.use_kernel)
         if self.filler_mode == "global":
             assert global_params is not None
             stacked = jax.tree.map(
                 lambda p, m, g: p * m + g[None] * (1 - m),
-                stacked, self.masks, global_params)
-        return fedavg_stacked(stacked, self.weights,
-                              use_kernel=self.use_kernel)
+                stacked, cov, global_params)
+        return fedavg_stacked(stacked, w, use_kernel=self.use_kernel)
 
-    def _agg_clustered(self, stacked):
+    def _agg_clustered(self, stacked, selected=None):
+        sel = (set(range(len(self.client_cfgs))) if selected is None
+               else set(selected))
         new = stacked
         for ids in self.clusters.values():
+            ids = [i for i in ids if i in sel]
+            if not ids:
+                continue
             idx = jnp.asarray(ids)
             sub = jax.tree.map(lambda x: x[idx], stacked)
-            agg = fedavg_stacked(sub, self._norm_w(ids),
+            agg = fedavg_stacked(sub, subset_weights(self.n_samples, ids),
                                  use_kernel=self.use_kernel)
             new = jax.tree.map(
                 lambda n, a: n.at[idx].set(
@@ -212,49 +279,75 @@ class UnifiedEngine:
                 new, agg)
         return new
 
-    def _flexifed_prefix_paths(self):
-        """Chain positions shared by the WHOLE cohort (same layer id) —
-        FlexiFed's common prefix, computed from configs alone."""
-        chains = [self.family.chain_paths(c) for c in self.client_cfgs]
-        n = 0
+    def _flexifed_prefix_paths(self, sel):
+        """Chain positions shared by the WHOLE participating subset (same
+        layer id) — FlexiFed's common prefix, computed from configs
+        alone. The tree paths come from the CLIENTS' chains (identical
+        across the subset wherever the ids agree, and preserved by the
+        front-aligned embedding); indexing into the union's chain instead
+        would mis-map whenever the subset's prefix extends beyond the
+        full cohort's."""
+        chains = [self.family.chain_paths(self.client_cfgs[i]) for i in sel]
+        paths = set()
         for pos in range(min(len(c) for c in chains)):
             if len({c[pos][0] for c in chains}) == 1:
-                n += 1
+                paths.add(chains[0][pos][1])
             else:
                 break
-        gchain = self.family.chain_paths(self.global_cfg)
-        return {gchain[p][1] for p in range(n)}
+        return paths
 
-    def _agg_flexifed(self, stacked):
-        """Common prefix averaged over ALL clients, remainder within
-        same-architecture clusters (Clustered-Common)."""
-        glob = fedavg_stacked(stacked,
-                              self._norm_w(range(len(self.n_samples))),
+    def _prefix_for(self, sel) -> set:
+        key = tuple(sel)
+        if key not in self._prefix_cache:
+            self._prefix_cache[key] = self._flexifed_prefix_paths(sel)
+        return self._prefix_cache[key]
+
+    def _agg_flexifed(self, stacked, selected=None):
+        """Common prefix averaged over the PARTICIPANTS, remainder within
+        (same-architecture cluster ∩ participants) — Clustered-Common.
+        Non-participants keep their parameters."""
+        sel = (list(range(len(self.client_cfgs))) if selected is None
+               else list(selected))
+        idx = jnp.asarray(sel)
+        glob = fedavg_stacked(jax.tree.map(lambda x: x[idx], stacked),
+                              subset_weights(self.n_samples, sel),
                               use_kernel=self.use_kernel)
-        clus = self._agg_clustered(stacked)
-        prefix = self._prefix_paths
+        clus = self._agg_clustered(stacked, sel)
+        prefix = self._prefix_for(sel)
 
         def pick(path, g, c):
             keys = tuple(str(getattr(p, "key", p)) for p in path)
             if any(keys[:len(pp)] == pp for pp in prefix):
-                return jnp.broadcast_to(g[None], c.shape)
+                return c.at[idx].set(
+                    jnp.broadcast_to(g[None], (len(sel),) + g.shape))
             return c
         return jax.tree_util.tree_map_with_path(pick, glob, clus)
 
     # ---------------------------------------------------------- full round
-    def run_round(self, state, stacked_batches: Sequence):
-        """One federated round. ``state`` is the global tree for fedadp
-        and the stacked client tree for the per-client-parameter methods;
-        returns the same kind."""
+    def run_round(self, state, stacked_batches: Sequence, selected=None):
+        """One federated round over the participating subset (default:
+        full cohort). ``state`` is the global tree for fedadp and the
+        stacked client tree for the per-client-parameter methods; returns
+        the same kind. ``stacked_batches`` leaves carry a leading axis of
+        ``len(selected)`` (participants only, in ``selected`` order)."""
+        sel = self._resolve(selected)
+        masks = self._gather(self.masks, sel)
         if self.method == "fedadp":
-            trained = self.train_round(self.round_start(state),
-                                       stacked_batches)
-            return self.aggregate_global(trained, state)
-        trained = self.train_round(state, stacked_batches)
+            # round_start's body with the already-gathered masks (one
+            # gather of the union-sized mask tree per round, not two)
+            filler = self._gather(self.filler, sel)
+            start = jax.tree.map(
+                lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
+                state, masks, filler)
+            trained = self.train_round(start, stacked_batches, masks=masks)
+            return self.aggregate_global(trained, state, selected=sel)
+        trained = self.train_round(self._gather(state, sel),
+                                   stacked_batches, masks=masks)
+        new = self._scatter(state, sel, trained)
         if self.method == "clustered":
-            return self._agg_clustered(trained)
+            return self._agg_clustered(new, sel)
         if self.method == "flexifed":
-            return self._agg_flexifed(trained)
+            return self._agg_flexifed(new, sel)
         if self.method == "standalone":
-            return trained
+            return new
         raise ValueError(self.method)

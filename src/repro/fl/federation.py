@@ -144,11 +144,6 @@ class Federation:
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0):
         self.participation = participation or Participation()
-        if not self.participation.full and backend.name == "unified":
-            raise ValueError(
-                "UnifiedBackend requires full participation (the round is "
-                "one stacked cohort program); use LoopBackend for "
-                f"fraction={self.participation.fraction}")
         if rounds < 0:
             raise ValueError(f"rounds={rounds!r} must be >= 0")
         if eval_every < 1:

@@ -12,7 +12,7 @@ Methods: fedadp | flexifed | clustered | standalone  (Section IV).
 
 Protocol knobs follow Section IV.A.4: K clients, local epochs E over 20%
 of the client's data per round, SGD(lr). ``participation`` (beyond-paper)
-selects a seeded per-round client subset when < 1 (loop engine only).
+selects a seeded per-round client subset when < 1 (both engines).
 
 Execution backends (EXPERIMENTS.md §Perf):
   * engine="loop"     — reference path: a Python loop over clients, each
@@ -29,6 +29,12 @@ Beyond-paper knobs (ablations in EXPERIMENTS.md):
   * narrow_mode:  "paper" (Alg. 3) | "fold" (function-preserving inverse)
   * filler:       "zero" (paper) | "global" (FedADP-U) — a FedADP
                   strategy option (fl/strategy.py).
+  * coverage:     "loose" (reference reading: identity-conv filler taps
+                  count as covered) | "strict" (parameter landing sites
+                  only) — core.aggregation's single coverage semantics.
+  * agg_mode:     "filler" (Eq. 1 verbatim) | "coverage" (HeteroFL-style
+                  per-coordinate renormalized average over covering
+                  clients; uncovered coordinates keep server values).
 
 All config values are validated eagerly at ``FLRunConfig`` construction.
 """
@@ -40,6 +46,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core import AGG_MODES, COVERAGE_POLICIES
 from repro.data.federated import ClientSampler
 from repro.fl.backends import LoopBackend, UnifiedBackend, unified_eligible
 from repro.fl.federation import Federation, Participation
@@ -57,6 +64,8 @@ class FLRunConfig:
     momentum: float = 0.0
     narrow_mode: str = "paper"
     filler: str = "zero"
+    coverage: str = "loose"
+    agg_mode: str = "filler"
     seed: int = 0
     eval_every: int = 1
     engine: str = "auto"                 # loop | unified | auto
@@ -75,6 +84,12 @@ class FLRunConfig:
         if self.narrow_mode not in NARROW_MODES:
             raise ValueError(f"narrow_mode={self.narrow_mode!r}, expected "
                              f"one of {NARROW_MODES}")
+        if self.coverage not in COVERAGE_POLICIES:
+            raise ValueError(f"coverage={self.coverage!r}, expected one of "
+                             f"{COVERAGE_POLICIES}")
+        if self.agg_mode not in AGG_MODES:
+            raise ValueError(f"agg_mode={self.agg_mode!r}, expected one of "
+                             f"{AGG_MODES}")
         if self.engine not in _ENGINES:
             raise ValueError(
                 f"engine={self.engine!r}, expected one of {_ENGINES}")
@@ -117,13 +132,14 @@ class Simulator:
             return self.cfg.engine
         strategy = strategy if strategy is not None else self._strategy()
         return ("unified" if unified_eligible(
-            strategy, self.family, self.client_cfgs, self.samplers,
-            full_participation=self.cfg.participation >= 1.0) else "loop")
+            strategy, self.family, self.client_cfgs, self.samplers)
+            else "loop")
 
     def _strategy(self):
         return make_strategy(
             self.cfg.method, self.family, self.client_cfgs, self.n_samples,
             narrow_mode=self.cfg.narrow_mode, filler=self.cfg.filler,
+            coverage=self.cfg.coverage, agg_mode=self.cfg.agg_mode,
             base_seed=self.cfg.seed)
 
     def _backend(self, kind: str):

@@ -67,6 +67,8 @@ class Strategy(Protocol):
 class FedADPStrategy:
     """FedADP (Algorithm 1) as a Strategy. State = the global tree.
 
+    Coverage knobs (semantics single-sourced in ``core.aggregation``):
+
     ``filler`` selects the aggregation rule for regions a client doesn't
     cover (DESIGN.md §4):
       * "zero"    — the paper: the zero/identity filler ``up()`` inserts
@@ -76,18 +78,27 @@ class FedADPStrategy:
                     global tree before averaging), so they are not pulled
                     toward the filler.  Formerly a one-off method body in
                     the simulator; now just a strategy option.
+    ``coverage`` picks which coordinates count as covered ("loose" — the
+    reference reading, identity-conv taps included — or "strict").
+    ``agg_mode="coverage"`` replaces Eq. 1 with the HeteroFL-style
+    renormalized average over covering clients (uncovered coordinates
+    keep the server's values; ``filler`` is then irrelevant).
     """
     name = "fedadp"
     kind = "global"
 
     def __init__(self, family, client_cfgs, n_samples, *,
                  narrow_mode: str = "paper", filler: str = "zero",
+                 coverage: str = "loose", agg_mode: str = "filler",
                  base_seed: int = 0):
         if filler not in FILLERS:
             raise ValueError(f"filler={filler!r}, expected one of {FILLERS}")
         self.algo = FedADP(family, client_cfgs, n_samples,
-                           narrow_mode=narrow_mode, base_seed=base_seed)
+                           narrow_mode=narrow_mode, coverage=coverage,
+                           agg_mode=agg_mode, base_seed=base_seed)
         self.filler = filler
+        self.coverage = coverage
+        self.agg_mode = agg_mode
         self.family = family
         self.client_cfgs = list(self.algo.client_cfgs)
         self.n_samples = list(n_samples)
@@ -105,15 +116,18 @@ class FedADPStrategy:
 
     def collect(self, state, round_idx: int, k: int, trained):
         up = self.algo.collect(trained, round_idx, k)
-        if self.filler == "zero":
+        if self.filler == "zero" or self.agg_mode == "coverage":
+            # coverage-mode aggregation reads its own masks — the update
+            # needs no fold here
             return up
-        mask = self.algo.coverage_mask(round_idx, k, trained)
+        mask = self.algo.coverage_mask(round_idx, k)
         return jax.tree.map(lambda u, m, g: u * m + g * (1 - m),
                             up, mask, state)
 
     def aggregate(self, state, round_idx: int, updates: Sequence[Update]):
         selected = [k for k, _ in updates]
-        return self.algo.aggregate([u for _, u in updates], selected)
+        return self.algo.aggregate([u for _, u in updates], selected,
+                                   round_idx=round_idx, global_params=state)
 
     def client_view(self, state, k: int, round_idx: int = 0):
         return self.algo.distribute(state, round_idx, k)
@@ -183,11 +197,13 @@ class FlexiFedStrategy(_PerClientStrategy):
 
 def make_strategy(method: str, family, client_cfgs, n_samples, *,
                   narrow_mode: str = "paper", filler: str = "zero",
+                  coverage: str = "loose", agg_mode: str = "filler",
                   base_seed: int = 0) -> Strategy:
     """Strategy factory keyed on the method names ``FLRunConfig`` uses."""
     if method == "fedadp":
         return FedADPStrategy(family, client_cfgs, n_samples,
                               narrow_mode=narrow_mode, filler=filler,
+                              coverage=coverage, agg_mode=agg_mode,
                               base_seed=base_seed)
     if method == "standalone":
         return StandaloneStrategy(family, client_cfgs, n_samples)

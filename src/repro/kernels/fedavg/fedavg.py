@@ -35,6 +35,22 @@ def _kernel(x_ref, w_ref, o_ref):
     o_ref[...] = jnp.sum(x * w, axis=0, keepdims=True).astype(o_ref.dtype)
 
 
+def _masked_kernel(x_ref, w_ref, m_ref, o_ref, *, renorm: bool):
+    # x_ref/m_ref: (K, T) blocks; w_ref: (K, 1); o_ref: (1, T).
+    # out[n] = sum_k w[k] m[k,n] x[k,n]  (/ sum_k w[k] m[k,n] when renorm;
+    # coordinates no client covers produce 0 — the caller substitutes its
+    # fallback there).
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # (K, 1)
+    m = m_ref[...].astype(jnp.float32)
+    wm = w * m                                  # (K, T)
+    num = jnp.sum(wm * x, axis=0, keepdims=True)
+    if renorm:
+        den = jnp.sum(wm, axis=0, keepdims=True)
+        num = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+    o_ref[...] = num.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def weighted_sum_2d(x, w, *, block: int = 4096,
                     interpret: Optional[bool] = None):
@@ -56,4 +72,39 @@ def weighted_sum_2d(x, w, *, block: int = 4096,
         out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
         interpret=interpret,
     )(x, w.reshape(K, 1))
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "renorm"))
+def weighted_sum_masked_2d(x, w, m, *, block: int = 4096,
+                           interpret: Optional[bool] = None,
+                           renorm: bool = True):
+    """x, m: (K, N) with N a multiple of 128; w: (K,) -> (N,) fp32.
+
+    Per-coordinate coverage-weighted aggregation: the mask m selects which
+    clients own each coordinate, and ``renorm`` divides by the covering
+    weight mass ``sum_k w[k] m[k, n]`` (HeteroFL-style renormalization).
+    Same blocking as ``weighted_sum_2d`` with the K axis VMEM-resident;
+    the mask stream doubles the HBM traffic but the reduction stays
+    memory-bound and single-pass.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    K, N = x.shape
+    assert m.shape == (K, N), (m.shape, x.shape)
+    block = min(block, N)
+    assert N % LANE == 0 and N % block == 0, (N, block)
+    grid = (N // block,)
+    out = pl.pallas_call(
+        functools.partial(_masked_kernel, renorm=renorm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(x, w.reshape(K, 1), m)
     return out[0]

@@ -1,12 +1,32 @@
-"""Jitted public wrapper: aggregate arbitrary-shaped stacked tensors."""
+"""Jitted public wrappers: aggregate arbitrary-shaped stacked tensors."""
 from __future__ import annotations
 
+import math
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.fedavg.fedavg import LANE, weighted_sum_2d
+from repro.kernels.fedavg.fedavg import (LANE, weighted_sum_2d,
+                                         weighted_sum_masked_2d)
+
+
+def _flatten_pad(stacked):
+    """(K, *shape) -> lane-padded (K, N) plus the original (n, shape)."""
+    K = stacked.shape[0]
+    shape = stacked.shape[1:]
+    n = math.prod(shape) if shape else 1
+    flat = stacked.reshape(K, n)
+    pad = (-n) % LANE
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat, n, shape
+
+
+def _block_for(n_flat: int, block: int) -> int:
+    blk = min(block, n_flat)
+    while n_flat % blk:
+        blk //= 2
+    return max(blk, LANE) if n_flat >= LANE else n_flat
 
 
 def weighted_sum(stacked, w, *, block: int = 4096,
@@ -17,16 +37,26 @@ def weighted_sum(stacked, w, *, block: int = 4096,
     kernel, and restores the original shape. ``interpret=None`` compiles
     on TPU and falls back to interpreter mode elsewhere.
     """
-    K = stacked.shape[0]
-    shape = stacked.shape[1:]
-    n = int(jnp.prod(jnp.asarray(shape))) if shape else 1
-    flat = stacked.reshape(K, n)
-    pad = (-n) % LANE
-    if pad:
-        flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    blk = min(block, flat.shape[1])
-    while flat.shape[1] % blk:
-        blk //= 2
-    out = weighted_sum_2d(flat, w, block=max(blk, LANE) if flat.shape[1] >= LANE else flat.shape[1],
+    flat, n, shape = _flatten_pad(stacked)
+    out = weighted_sum_2d(flat, w, block=_block_for(flat.shape[1], block),
                           interpret=interpret)
+    return out[:n].reshape(shape)
+
+
+def weighted_sum_masked(stacked, w, masks, *, block: int = 4096,
+                        interpret: Optional[bool] = None,
+                        renorm: bool = True):
+    """stacked, masks: (K, *shape); w: (K,) -> (*shape,) fp32.
+
+    Coverage-weighted aggregation: out = sum_k w_k m_k x_k, divided per
+    coordinate by ``sum_k w_k m_k`` when ``renorm`` (coordinates covered
+    by no client come back 0 — callers substitute their own fallback).
+    The zero padding keeps padded coordinates uncovered, so they slice
+    away cleanly.
+    """
+    flat, n, shape = _flatten_pad(stacked)
+    mflat, _, _ = _flatten_pad(masks)
+    out = weighted_sum_masked_2d(flat, w, mflat,
+                                 block=_block_for(flat.shape[1], block),
+                                 interpret=interpret, renorm=renorm)
     return out[:n].reshape(shape)

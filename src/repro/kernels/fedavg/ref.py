@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fedavg aggregation kernel."""
+"""Pure-jnp oracles for the fedavg aggregation kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -8,3 +8,13 @@ def weighted_sum_ref(x, w):
     """x: (K, N); w: (K,) -> (N,) fp32."""
     return jnp.einsum("k,kn->n", w.astype(jnp.float32),
                       x.astype(jnp.float32))
+
+
+def weighted_sum_masked_ref(x, w, m, *, renorm: bool = True):
+    """x, m: (K, N); w: (K,) -> (N,) fp32 — coverage-weighted average."""
+    wm = w.astype(jnp.float32)[:, None] * m.astype(jnp.float32)
+    num = jnp.sum(wm * x.astype(jnp.float32), axis=0)
+    if not renorm:
+        return num
+    den = jnp.sum(wm, axis=0)
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)

@@ -1,0 +1,175 @@
+"""Coverage-aware aggregation invariants (core.aggregation — the single
+source of coverage semantics; ISSUE 3).
+
+Property-style via seeded parametrized loops (no ``hypothesis`` on this
+box):
+  * per-coordinate renormalized weights sum to 1 wherever >= 1 client
+    covers (the coverage-weighted average is convex there),
+  * ``agg_mode="coverage"`` == plain FedAvg on homogeneous cohorts,
+  * loose and strict coverage masks agree everywhere EXCEPT the
+    identity-conv filler taps,
+  * the masked Pallas kernel (interpret mode on CPU) == the jnp fallback
+    to 1e-6.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg_family import VGGConfig, scaled, vgg
+from repro.core import (FedADP, VGGFamily, client_weights,
+                        coverage_and_filler, coverage_mask, fedavg,
+                        fedavg_masked, fedavg_stacked, loosen, stack_trees,
+                        subset_weights)
+
+FAMILY = VGGFamily()
+
+
+def _random_stack(key, k, shape):
+    return jax.random.normal(key, (k,) + shape)
+
+
+def _random_masks(key, k, shape, p=0.5):
+    return (jax.random.uniform(key, (k,) + shape) < p).astype(jnp.float32)
+
+
+# ------------------------------------------------- renormalization sums to 1
+@pytest.mark.parametrize("seed", range(4))
+def test_renormalized_weights_convex_where_covered(seed):
+    """Wherever >= 1 client covers a coordinate, the effective
+    per-coordinate weights w_k m_k / sum_j w_j m_j sum to 1 — checked by
+    aggregating constant trees: the masked average of all-ones inputs
+    must be exactly 1 on covered coordinates and equal the fallback on
+    uncovered ones."""
+    key = jax.random.PRNGKey(seed)
+    k, shape = 3 + seed % 3, (5, 7)
+    masks = _random_masks(jax.random.fold_in(key, 1), k, shape, p=0.4)
+    w = client_weights(list(range(1, k + 1)))
+    ones = jnp.ones((k,) + shape)
+    out = fedavg_stacked({"x": ones}, w, masks={"x": masks},
+                         fallback={"x": jnp.full(shape, -7.0)},
+                         use_kernel=False)["x"]
+    covered = np.asarray(masks).max(0) > 0
+    np.testing.assert_allclose(np.asarray(out)[covered], 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out)[~covered], -7.0, atol=1e-6)
+    # and the average of arbitrary inputs stays in the covering hull
+    x = _random_stack(jax.random.fold_in(key, 2), k, shape)
+    avg = np.asarray(fedavg_stacked({"x": x}, w, masks={"x": masks},
+                                    use_kernel=False)["x"])
+    xnp, mnp = np.asarray(x), np.asarray(masks)
+    lo = np.where(mnp > 0, xnp, np.inf).min(axis=0)
+    hi = np.where(mnp > 0, xnp, -np.inf).max(axis=0)
+    assert np.all(avg[covered] >= lo[covered] - 1e-5)
+    assert np.all(avg[covered] <= hi[covered] + 1e-5)
+
+
+# ------------------------------------------- homogeneous == plain FedAvg
+@pytest.mark.parametrize("seed", range(3))
+def test_coverage_mode_equals_fedavg_on_homogeneous_cohort(seed):
+    """On a cohort of identical architectures every mask is all-ones, so
+    the HeteroFL-style renormalized average IS Eq. 1 — both at the
+    aggregation level and through FedADP.aggregate."""
+    key = jax.random.PRNGKey(100 + seed)
+    cfg = _tiny("same", ((6,), (6, 6)))
+    cfgs = [cfg, dataclasses.replace(cfg), dataclasses.replace(cfg)]
+    trees = [FAMILY.init(jax.random.fold_in(key, i), cfg) for i in range(3)]
+    n_samples = [2 + seed, 4, 1]
+    plain = FedADP(FAMILY, cfgs, n_samples)
+    cov = FedADP(FAMILY, cfgs, n_samples, agg_mode="coverage")
+    gp = plain.init_global(jax.random.fold_in(key, 9))
+    a = plain.aggregate(trees, round_idx=0, global_params=gp)
+    b = cov.aggregate(trees, round_idx=0, global_params=gp)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+    exp = fedavg(trees, client_weights(n_samples))
+    for la, lb in zip(jax.tree.leaves(exp), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+
+
+def test_subset_weights_renormalize():
+    n = [10, 30, 20, 40]
+    np.testing.assert_allclose(subset_weights(n), client_weights(n))
+    np.testing.assert_allclose(subset_weights(n, [1, 3]), [0.3 / 0.7, 0.4 / 0.7],
+                               rtol=1e-6)
+    np.testing.assert_allclose(subset_weights(n, [2]), [1.0])
+
+
+# --------------------------------------------------- loose vs strict masks
+def _tiny(name, stages):
+    return VGGConfig(name=name, stages=stages, classifier=(12,),
+                     n_classes=4, image_size=8)
+
+
+@pytest.mark.parametrize("archs", [("vgg13", "vgg16"), ("vgg13", "vgg19")])
+def test_loose_strict_divergence_is_exactly_identity_taps(archs):
+    """loose - strict is 0/1, nonzero ONLY where the filler is nonzero
+    (identity-conv center taps), and ``loosen`` reproduces the loose
+    policy of ``coverage_mask`` exactly."""
+    cfgs = [scaled(vgg(a), 0.125, 16) for a in archs]
+    gcfg = FAMILY.union(cfgs)
+    for cfg in cfgs:
+        strict, filler = coverage_and_filler(FAMILY, cfg, gcfg)
+        loose = coverage_mask(FAMILY, cfg, gcfg, policy="loose")
+        loose2 = loosen(strict, filler)
+        for a, b in zip(jax.tree.leaves(loose), jax.tree.leaves(loose2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for lm, sm, fl in zip(jax.tree.leaves(loose), jax.tree.leaves(strict),
+                              jax.tree.leaves(filler)):
+            diff = np.asarray(lm) - np.asarray(sm)
+            assert set(np.unique(diff)) <= {0.0, 1.0}
+            np.testing.assert_array_equal(
+                diff > 0, (np.abs(np.asarray(fl)) > 0) & (np.asarray(sm) == 0))
+
+
+def test_full_depth_client_is_fully_covered_under_both_policies():
+    cfgs = [_tiny("a", ((6,), (6,))), _tiny("b", ((6, 6), (6, 6)))]
+    gcfg = FAMILY.union(cfgs)
+    for policy in ("loose", "strict"):
+        m = coverage_mask(FAMILY, cfgs[1], gcfg, policy=policy)
+        assert min(float(x.min()) for x in jax.tree.leaves(m)) == 1.0
+
+
+# --------------------------------------------------- kernel vs jnp fallback
+@pytest.mark.parametrize("renorm", [True, False])
+def test_weighted_sum_masked_kernel_matches_jnp(renorm):
+    """Masked Pallas kernel (interpret mode on CPU) == jnp fallback to
+    1e-6, on a pytree with lane-unaligned leaf shapes (exercises the pad
+    path; padded coordinates are uncovered by construction)."""
+    key = jax.random.PRNGKey(0)
+    trees, masks = [], []
+    for k in range(3):
+        kk = jax.random.fold_in(key, k)
+        trees.append({
+            "w": jax.random.normal(kk, (7, 13)),
+            "b": jax.random.normal(jax.random.fold_in(kk, 1), (5,)),
+            "c": jax.random.normal(jax.random.fold_in(kk, 2), (2, 3, 128)),
+        })
+        masks.append(jax.tree.map(
+            lambda x: (jax.random.uniform(jax.random.fold_in(kk, 3),
+                                          x.shape) < 0.6).astype(jnp.float32),
+            trees[-1]))
+    stacked, smasks = stack_trees(trees), stack_trees(masks)
+    w = client_weights([3, 1, 2])
+    a = fedavg_stacked(stacked, w, masks=smasks, renorm=renorm,
+                       use_kernel=True)
+    b = fedavg_stacked(stacked, w, masks=smasks, renorm=renorm,
+                       use_kernel=False)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+    # fedavg_masked (list layout) is the same math
+    c = fedavg_masked(trees, w, masks, renorm=renorm, use_kernel=True)
+    for la, lb in zip(jax.tree.leaves(c), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+
+
+def test_all_ones_masks_reduce_to_plain_fedavg():
+    key = jax.random.PRNGKey(5)
+    stacked = {"w": jax.random.normal(key, (4, 6, 9))}
+    masks = jax.tree.map(jnp.ones_like, stacked)
+    w = client_weights([1, 2, 3, 4])
+    a = fedavg_stacked(stacked, w, masks=masks, use_kernel=False)
+    b = fedavg_stacked(stacked, w, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               atol=1e-6)

@@ -1,0 +1,82 @@
+"""Federated data layer: dirichlet_partition feasibility guard and
+ClientSampler tail-batch semantics (ISSUE 3 satellite bugfixes)."""
+import numpy as np
+import pytest
+
+from repro.data.federated import ClientSampler, dirichlet_partition
+
+
+# ------------------------------------------------------------- dirichlet
+def test_dirichlet_partition_feasible_regression():
+    labels = np.repeat(np.arange(4), 50)          # 200 samples, 4 classes
+    parts = dirichlet_partition(labels, 4, alpha=0.5, seed=0, min_size=8)
+    assert len(parts) == 4
+    assert all(len(p) >= 8 for p in parts)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(200))
+
+
+def test_dirichlet_partition_infeasible_raises_not_hangs():
+    """k * min_size > n can never be satisfied: must raise a ValueError
+    naming the offending parameters after the retry cap, not loop
+    forever."""
+    labels = np.repeat(np.arange(2), 5)           # 10 samples
+    with pytest.raises(ValueError) as e:
+        dirichlet_partition(labels, 5, alpha=0.5, seed=0, min_size=8,
+                            max_retries=50)
+    msg = str(e.value)
+    assert "min_size=8" in msg and "k=5" in msg and "alpha=0.5" in msg
+
+
+def test_dirichlet_partition_retry_cap_is_bounded():
+    """A feasible-but-unlikely setting (alpha=0.01 concentrates whole
+    classes on one client; only a perfectly balanced split passes) stops
+    at the cap instead of spinning — seed 2's first draws all fail."""
+    labels = np.repeat(np.arange(2), 8)           # 16 samples, k=2
+    with pytest.raises(ValueError, match="max_retries|retries"):
+        dirichlet_partition(labels, 2, alpha=0.01, seed=2, min_size=8,
+                            max_retries=3)
+
+
+# ---------------------------------------------------------- ClientSampler
+def _data(n):
+    return {"x": np.arange(n, dtype=np.float32), "y": np.zeros(n, np.int32)}
+
+
+def _count(batches):
+    sizes = [len(b["x"]) for b in batches]
+    return len(sizes), sizes
+
+
+def test_round_batches_pins_step_count_and_drops_nothing():
+    """35 drawn samples at batch_size 16 -> 16,16,3 (tail >= min_batch
+    kept); 33 -> 16,17 (1-sample tail merged into the previous batch).
+    Either way every drawn sample is yielded exactly once per epoch."""
+    for n, want_sizes in ((35, [16, 16, 3]), (33, [16, 17])):
+        s = ClientSampler(_data(n), np.arange(n), round_fraction=1.0,
+                          batch_size=16, seed=0)
+        batches = list(s.round_batches())
+        steps, sizes = _count(batches)
+        assert sizes == want_sizes, (n, sizes)
+        assert steps == s.steps_per_epoch()
+        seen = np.sort(np.concatenate([b["x"] for b in batches]))
+        np.testing.assert_array_equal(seen, np.arange(n, dtype=np.float32))
+
+
+def test_round_batches_single_sample_client_contributes_a_step():
+    """A client whose whole per-round draw is below min_batch used to be
+    silently dropped (zero steps that round); now the draw is yielded
+    as-is."""
+    s = ClientSampler(_data(1), np.arange(1), round_fraction=1.0,
+                      batch_size=16, seed=0)
+    batches = list(s.round_batches(epochs=2))
+    assert [len(b["x"]) for b in batches] == [1, 1]
+    assert s.steps_per_epoch() == 1
+
+
+def test_round_batches_epochs_and_exact_multiples_unchanged():
+    s = ClientSampler(_data(64), np.arange(64), round_fraction=0.5,
+                      batch_size=16, seed=1)
+    batches = list(s.round_batches(epochs=2))
+    assert [len(b["x"]) for b in batches] == [16, 16] * 2
+    assert s.steps_per_epoch() == 2

@@ -146,24 +146,91 @@ def test_unified_backend_rebind_rebuilds_engine():
     assert e2 is not e1 and e2.method == "clustered"
 
 
-def test_unified_backend_rejects_partial_participation():
-    cfgs, mk, test = _setup()
-    samplers = mk()
-    strategy = FedADPStrategy(FAMILY, cfgs,
-                              [s.n_samples for s in samplers])
-    backend = UnifiedBackend(FAMILY, cfgs, samplers, local_epochs=1)
-    with pytest.raises(ValueError, match="full participation"):
-        Federation(strategy, backend, rounds=1, eval_batch=test,
-                   participation=Participation.sample(0.5))
-    backend.bind(strategy)
-    with pytest.raises(ValueError, match="full participation"):
-        backend.run_round(backend.init_state(jax.random.PRNGKey(0)), 0, [0])
+def _tiny_vgg(name, stages):
+    from repro.configs.vgg_family import VGGConfig
+    return VGGConfig(name=name, stages=stages, classifier=(16,),
+                     n_classes=4, image_size=8)
+
+
+def _tiny_setup():
+    """A 3-client depth-heterogeneous VGG cohort small enough to jit the
+    whole method x participation matrix on the CPU CI box."""
+    import dataclasses
+    cfgs = [_tiny_vgg("t2", ((8,), (8,))), _tiny_vgg("t3", ((8,), (8, 8))),
+            _tiny_vgg("t4", ((8, 8), (8, 8)))]
+    spec = dataclasses.replace(EASY, image_size=8, n_classes=4)
+    data = image_classification(spec, 96, seed=0)
+    test = image_classification(spec, 48, seed=9)
+    parts = iid_partition(96, len(cfgs), seed=0)
+
+    def samplers():
+        return [ClientSampler(data, p, round_fraction=0.5, batch_size=8,
+                              seed=i) for i, p in enumerate(parts)]
+
+    return cfgs, samplers, test
+
+
+def test_unified_matches_loop_per_method_and_participation():
+    """The acceptance matrix: every method (fedadp zero / global /
+    coverage-aggregated, clustered, flexifed, standalone) x participation
+    (full, sample, cycle) runs on the UnifiedBackend and matches the
+    LoopBackend to 1e-5 on a depth-heterogeneous VGG cohort — both
+    backends consume identical per-round data, non-participants' sampler
+    streams do not advance, and coverage semantics are single-sourced in
+    core.aggregation."""
+    from repro.models import vgg as V
+    cfgs, mk, test = _tiny_setup()
+    assert FAMILY.depth_only(cfgs)
+    gcfg = FAMILY.union(cfgs)
+    loopb = LoopBackend(FAMILY, cfgs, mk(), local_epochs=1, lr=0.05,
+                        momentum=0.9)
+    unib = UnifiedBackend(FAMILY, cfgs, mk(), local_epochs=1, lr=0.05,
+                          momentum=0.9)
+
+    def run(backend, method, participation, **kw):
+        backend.samplers = mk()          # fresh identical streams per run
+        strategy = make_strategy(method, FAMILY, cfgs,
+                                 [s.n_samples for s in backend.samplers],
+                                 **kw)
+        fed = Federation(strategy, backend, rounds=2, eval_batch=test,
+                         participation=participation)
+        return fed.run(jax.random.PRNGKey(0))
+
+    matrix = [("fedadp", {}), ("fedadp", dict(filler="global")),
+              ("fedadp", dict(agg_mode="coverage")),
+              ("clustered", {}), ("flexifed", {}), ("standalone", {})]
+    participations = [("full", Participation()),
+                      ("sample", Participation.sample(0.6, seed=2)),
+                      ("cycle", Participation.cycle(0.6))]
+    for method, kw in matrix:
+        for pname, part in participations:
+            tag = f"{method}/{kw or 'zero'}/{pname}"
+            rl = run(loopb, method, part, **kw)
+            ru = run(unib, method, part, **kw)
+            np.testing.assert_allclose(rl["history"], ru["history"],
+                                       atol=1e-5, err_msg=tag)
+            if method == "fedadp":
+                for a, b in zip(jax.tree.leaves(rl["global_params"]),
+                                jax.tree.leaves(ru["global_params"])):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32), np.asarray(b, np.float32),
+                        atol=1e-5, err_msg=tag)
+            else:
+                # loop params are client-space, engine params are the
+                # embedded global-space views: compare client functions
+                for k in range(len(cfgs)):
+                    la = V.apply(rl["client_params"][k], cfgs[k],
+                                 test["x"][:8])
+                    lb = V.apply(ru["client_params"][k], gcfg, test["x"][:8])
+                    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                               atol=1e-5, err_msg=tag)
 
 
 # ----------------------------------------------------------- config/shim
 def test_flrunconfig_eager_validation():
     for kw in (dict(method="fedsgd"), dict(filler="none"),
                dict(narrow_mode="widen"), dict(engine="gpu"),
+               dict(coverage="fuzzy"), dict(agg_mode="median"),
                dict(participation=1.5), dict(participation=0.0),
                dict(eval_every=0), dict(rounds=-1), dict(local_epochs=0)):
         with pytest.raises(ValueError):
