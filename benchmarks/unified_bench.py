@@ -1,16 +1,18 @@
 """Per-client loop vs cohort-parallel unified engine wall clock, per
-aggregation mode.
+aggregation mode and cohort kind.
 
 The unified engine (fl/engine.py) replaces the Python loop over K clients
 with one stacked vmapped program; this bench measures the per-round wall
-clock of both Simulator paths across cohort sizes K and both aggregation
+clock of both Simulator paths across cohort sizes K, both aggregation
 modes (``filler`` — paper Eq. 1 — and ``coverage`` — the HeteroFL-style
-renormalized average from core/aggregation.py) on a depth-heterogeneous
-VGG cohort, where the two engines are numerically equivalent
-(tests/test_unified.py, tests/test_federation.py). Compile time is
-excluded by a 1-round warmup run on the SAME Simulator (grad fns and the
-engine's jitted steps are cached per instance) before the timed rounds.
-Numbers feed EXPERIMENTS.md §Perf.
+renormalized average from core/aggregation.py) and both cohort kinds —
+``depth`` (depth-only heterogeneity) and ``width`` (depth AND width mixed
+via the paper's -Wider variants; ISSUE 4: segment-projected training +
+per-round embed seeds) — where the two engines are numerically
+equivalent (tests/test_unified.py, tests/test_federation.py). Compile
+time is excluded by a 1-round warmup run on the SAME Simulator (grad fns
+and the engine's jitted steps are cached per instance) before the timed
+rounds. Numbers feed EXPERIMENTS.md §Perf.
 
 On a single device the two paths are roughly wall-clock neutral on CPU
 (the engine trades K dispatches for union-depth padding FLOPs); the win
@@ -49,12 +51,17 @@ from repro.fl import FLRunConfig, Simulator
 from repro.sharding import cohort_mesh
 
 DEPTH_ARCHS = ("vgg13", "vgg15", "vgg17", "vgg19")  # depth-only cohort
+# depth AND width mixed: the -wider variants widen stage 4's first conv,
+# a layer every depth variant owns, so the cohort stays
+# segment-representable (family.segment_representable)
+WIDTH_ARCHS = ("vgg13", "vgg16-wider", "vgg17", "vgg19-wider")
+COHORTS = {"depth": DEPTH_ARCHS, "width": WIDTH_ARCHS}
 AGG_MODES = ("filler", "coverage")
 
 
-def _cohort(K: int, n_per_client: int, batch: int):
+def _cohort(K: int, n_per_client: int, batch: int, archs=DEPTH_ARCHS):
     family = VGGFamily()
-    cfgs = [scaled(vgg(DEPTH_ARCHS[k % len(DEPTH_ARCHS)]), 0.125, 64)
+    cfgs = [scaled(vgg(archs[k % len(archs)]), 0.125, 64)
             for k in range(K)]
     n = n_per_client * K
     data = image_classification(EASY, n, seed=0)
@@ -105,23 +112,26 @@ def main(csv: List[str]):
     else:
         Ks, (n_per_client, batch, rounds) = (4, 8, 16), (64, 32, 3)
     records = []
-    for K in Ks:
-        family, cfgs, samplers, test = _cohort(K, n_per_client, batch)
-        per = {}
-        for engine in ("loop", "unified"):
-            per[engine] = _per_round(family, cfgs, samplers, test, engine,
-                                     rounds)
-            for agg_mode, sec in per[engine].items():
-                csv.append(f"unified/K{K}/{engine}/{agg_mode},"
-                           f"{sec * 1e6:.0f},rounds={rounds}")
-                records.append({"K": K, "engine": engine,
-                                "agg_mode": agg_mode,
-                                "us_per_round": round(sec * 1e6),
-                                "rounds": rounds})
-        for agg_mode in AGG_MODES:
-            csv.append(
-                f"unified/K{K}/speedup/{agg_mode},"
-                f"{per['loop'][agg_mode] / max(per['unified'][agg_mode], 1e-9):.2f},x")
+    for cohort, archs in COHORTS.items():
+        prefix = "unified" if cohort == "depth" else f"unified/{cohort}"
+        for K in Ks:
+            family, cfgs, samplers, test = _cohort(K, n_per_client, batch,
+                                                   archs)
+            per = {}
+            for engine in ("loop", "unified"):
+                per[engine] = _per_round(family, cfgs, samplers, test,
+                                         engine, rounds)
+                for agg_mode, sec in per[engine].items():
+                    csv.append(f"{prefix}/K{K}/{engine}/{agg_mode},"
+                               f"{sec * 1e6:.0f},rounds={rounds}")
+                    records.append({"cohort": cohort, "K": K,
+                                    "engine": engine, "agg_mode": agg_mode,
+                                    "us_per_round": round(sec * 1e6),
+                                    "rounds": rounds})
+            for agg_mode in AGG_MODES:
+                csv.append(
+                    f"{prefix}/K{K}/speedup/{agg_mode},"
+                    f"{per['loop'][agg_mode] / max(per['unified'][agg_mode], 1e-9):.2f},x")
     path = os.environ.get("FEDADP_BENCH_JSON", "BENCH_unified.json")
     with open(path, "w") as f:
         json.dump({"bench": "unified_bench",

@@ -1,12 +1,13 @@
 """Cohort-parallel FedADP: the unified backend vs the per-client loop.
 
-A depth-heterogeneous VGG cohort (the setting where the unified-space
-embedding is EXACT — DESIGN.md §2) is trained twice with identical data
-and SGD+momentum through the same ``Federation`` + ``FedADPStrategy``,
-swapping only the execution backend: once through the reference
-per-client ``LoopBackend``, once as a single stacked vmapped program
-(``UnifiedBackend`` around fl/engine.py), shard_map-ed over the client
-axis when more than one device is available.
+A depth+width-heterogeneous VGG cohort (both dimensions are
+loop-equivalent in the unified space — segment operators, DESIGN.md §2)
+is trained twice with identical data and SGD+momentum through the same
+``Federation`` + ``FedADPStrategy``, swapping only the execution
+backend: once through the reference per-client ``LoopBackend``, once as
+a single stacked vmapped program (``UnifiedBackend`` around
+fl/engine.py), shard_map-ed over the client axis when more than one
+device is available.
 
   PYTHONPATH=src python examples/unified_cohort.py
 """
@@ -20,8 +21,8 @@ from repro.sharding import cohort_mesh
 
 
 def main(*, rounds=4, local_epochs=1, eval_every=2, width=64,
-         archs=("vgg13", "vgg15", "vgg17", "vgg19"), per_arch=2,
-         n_per_client=160, n_test=400):
+         archs=("vgg13", "vgg16-wider", "vgg17", "vgg19-wider"),
+         per_arch=2, n_per_client=160, n_test=400):
     family = VGGFamily()
     client_cfgs = [scaled(vgg(a), 0.125, width)
                    for a in archs for _ in range(per_arch)]

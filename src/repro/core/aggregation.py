@@ -103,6 +103,39 @@ def loosen(strict_mask, filler):
         strict_mask, filler)
 
 
+_SHAPE_MEMO: dict = {}
+
+
+def global_shapes(family, global_cfg):
+    """``jax.eval_shape`` of the family's init at ``global_cfg``, memoized
+    per (family type, config) — configs are frozen/hashable, shapes never
+    change, and the seed-keyed callers (per-round multiplicity, segment
+    specs) would otherwise re-trace the full model every round."""
+    key = (type(family).__name__, global_cfg)
+    if key not in _SHAPE_MEMO:
+        _SHAPE_MEMO[key] = jax.eval_shape(
+            lambda k: family.init(k, global_cfg), jax.random.PRNGKey(0))
+        while len(_SHAPE_MEMO) > 64:
+            _SHAPE_MEMO.pop(next(iter(_SHAPE_MEMO)))
+    return _SHAPE_MEMO[key]
+
+
+def multiplicity(family, client_cfg, global_cfg, *, seed: int = 0):
+    """Per-coordinate duplication counts m_kj of a client's width
+    embedding (1 everywhere for depth-only embeddings): how many union
+    coordinates share the client coordinate that lands on j, derived
+    from the family's ``segment_spec``. The multiplicity-aware coverage
+    average weights client k's contribution at j by ``W_k m_kj⁻¹`` so a
+    To-Wider-duplicated channel's total weight stays W_k instead of
+    scaling with its copy count. Families without segment metadata fall
+    back to all-ones (plain 0/1-mask semantics)."""
+    from repro.core import segments as sg
+    shapes = global_shapes(family, global_cfg)
+    spec_fn = getattr(family, "segment_spec", None)
+    spec = spec_fn(client_cfg, global_cfg, seed=seed) if spec_fn else {}
+    return sg.multiplicity_tree(spec, shapes)
+
+
 def coverage_mask(family, client_cfg, global_cfg, *,
                   policy: str = "strict", seed: int = 0):
     """Global-space 0/1 mask of the coordinates a client covers, under
@@ -134,15 +167,20 @@ def fedavg(trees: Sequence, weights) -> object:
     return jax.tree.map(agg, *trees)
 
 
-def fedavg_stacked(stacked, weights, *, masks=None, renorm: bool = True,
-                   fallback=None, use_kernel: Optional[bool] = None):
+def fedavg_stacked(stacked, weights, *, masks=None, mult=None,
+                   renorm: bool = True, fallback=None,
+                   use_kernel: Optional[bool] = None):
     """Aggregate a stacked tree: every leaf (K, ...) -> (...).
 
     Without ``masks`` this is Eq. 1 verbatim. With ``masks`` (a stacked
     0/1 tree of the same shape) it is the coverage-weighted average: per
     coordinate only covering clients contribute, their weights
     renormalized over the covering subset when ``renorm``; coordinates no
-    client covers take the matching ``fallback`` leaf (or 0).
+    client covers take the matching ``fallback`` leaf (or 0). With
+    ``mult`` (a stacked tree of per-coordinate duplication counts, see
+    ``multiplicity``) the per-coordinate client weight becomes
+    ``W_k m_k / mult_k`` — the multiplicity-aware average for width
+    embeddings, fused into the same kernel pass.
 
     ``use_kernel=None`` auto-selects the Pallas kernel (compiled) on a TPU
     backend and the jnp fallback everywhere else; pass an explicit bool to
@@ -154,6 +192,7 @@ def fedavg_stacked(stacked, weights, *, masks=None, renorm: bool = True,
         use_kernel = on_tpu()
 
     if masks is None:
+        assert mult is None, "mult needs masks (coverage aggregation)"
         if use_kernel:
             from repro.kernels.fedavg import ops as kops
 
@@ -170,13 +209,17 @@ def fedavg_stacked(stacked, weights, *, masks=None, renorm: bool = True,
     if use_kernel:
         from repro.kernels.fedavg import ops as kops
 
-        def masked(leaf, m):
-            return kops.weighted_sum_masked(leaf, w, m, renorm=renorm)
+        def masked(leaf, m, mu):
+            return kops.weighted_sum_masked(leaf, w, m, mult=mu,
+                                            renorm=renorm)
     else:
-        def masked(leaf, m):
+        def masked(leaf, m, mu):
             flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
             mf = m.reshape(m.shape[0], -1).astype(jnp.float32)
             wm = w[:, None] * mf
+            if mu is not None:
+                muf = mu.reshape(mu.shape[0], -1).astype(jnp.float32)
+                wm = wm / jnp.where(muf > 0, muf, 1.0)
             num = jnp.sum(wm * flat, axis=0)
             if renorm:
                 den = jnp.sum(wm, axis=0)
@@ -184,29 +227,43 @@ def fedavg_stacked(stacked, weights, *, masks=None, renorm: bool = True,
                                 num / jnp.where(den > 0, den, 1.0), 0.0)
             return num.reshape(leaf.shape[1:])
 
-    def agg(leaf, m, fb=None):
-        out = masked(leaf, m)
+    def agg(leaf, m, mu, fb):
+        out = masked(leaf, m, mu)
         if fb is not None:
             covered = jnp.any(m > 0, axis=0)
             out = jnp.where(covered, out, fb.astype(jnp.float32))
         return out.astype(leaf.dtype)
 
-    if fallback is None:
-        return jax.tree.map(agg, stacked, masks)
-    return jax.tree.map(agg, stacked, masks, fallback)
+    xs, treedef = jax.tree.flatten(stacked)
+
+    def aligned(tree, name):
+        if tree is None:
+            return [None] * len(xs)
+        leaves, td = jax.tree.flatten(tree)
+        assert td == treedef, (f"{name} tree structure does not match "
+                               f"stacked: {td} vs {treedef}")
+        return leaves
+
+    return jax.tree.unflatten(treedef, [
+        agg(*args) for args in zip(xs, aligned(masks, "masks"),
+                                   aligned(mult, "mult"),
+                                   aligned(fallback, "fallback"))])
 
 
 def fedavg_masked(trees: Sequence, weights, masks: Sequence, *,
-                  renorm: bool = True, fallback=None,
-                  use_kernel: Optional[bool] = None):
+                  mult: Optional[Sequence] = None, renorm: bool = True,
+                  fallback=None, use_kernel: Optional[bool] = None):
     """List-of-trees layout of the coverage-weighted average: the
     HeteroFL rule — average each coordinate over only the clients that
-    hold it. Delegates to ``fedavg_stacked`` so the coverage math has
-    exactly one implementation."""
+    hold it (optionally multiplicity-aware via ``mult``, a list of
+    per-client duplication-count trees). Delegates to ``fedavg_stacked``
+    so the coverage math has exactly one implementation."""
     assert len(trees) == len(masks)
     return fedavg_stacked(stack_trees(trees), weights,
-                          masks=stack_trees(masks), renorm=renorm,
-                          fallback=fallback, use_kernel=use_kernel)
+                          masks=stack_trees(masks),
+                          mult=stack_trees(mult) if mult is not None else None,
+                          renorm=renorm, fallback=fallback,
+                          use_kernel=use_kernel)
 
 
 def stack_trees(trees: Sequence):

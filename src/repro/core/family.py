@@ -41,6 +41,34 @@ class VGGFamily:
         norm = {dataclasses.replace(c, name="", stages=()) for c in cfgs}
         return len(norm) == 1
 
+    def segment_representable(self, cfgs: Sequence[VGGConfig]) -> bool:
+        """True when every client's embedding into the cohort union is a
+        segment operator (``core.segments``) — the unified engine's
+        eligibility domain, superseding the old ``depth_only`` gate.
+        Depth and width may both vary; non-structural fields must match,
+        stage/classifier arity must match, and trailing union positions
+        a client doesn't own must carry the client's stage-final width
+        (the regime ``down()``'s within-stage walk is defined on)."""
+        cfgs = list(cfgs)
+        norm = {dataclasses.replace(c, name="", stages=(), classifier=())
+                for c in cfgs}
+        if len(norm) != 1:
+            return False
+        if (len({len(c.stages) for c in cfgs}) != 1
+                or len({len(c.classifier) for c in cfgs}) != 1):
+            return False
+        union = union_config(cfgs)
+        for c in cfgs:
+            for si, ws in enumerate(c.stages):
+                uw = union.stages[si]
+                if any(uw[li] != ws[-1] for li in range(len(ws), len(uw))):
+                    return False
+        return True
+
+    def segment_spec(self, client_cfg: VGGConfig, global_cfg: VGGConfig, *,
+                     seed: int = 0):
+        return vggops.segment_spec(client_cfg, global_cfg, seed=seed)
+
     def chain_paths(self, cfg: VGGConfig):
         """Sequential chain as (layer-id, params-tree path) pairs — the
         engine's FlexiFed grouping uses the ids to find the shared prefix
@@ -90,6 +118,19 @@ class TransformerFamily:
         the depth-and-label fields away and compare whole."""
         norm = {dataclasses.replace(c, name="", n_layers=0) for c in cfgs}
         return len(norm) == 1
+
+    def segment_representable(self, cfgs) -> bool:
+        """Depth (n_layers) and FFN width (d_ff) may vary — both embed
+        as segment operators (zero blocks / deterministic duplication).
+        Expert count is affine (router-bias shift), d_rnn and d_model
+        stay out of scope (DESIGN.md §Arch-applicability), so any other
+        config difference keeps the loop."""
+        norm = {dataclasses.replace(c, name="", n_layers=0, d_ff=0)
+                for c in cfgs}
+        return len(norm) == 1
+
+    def segment_spec(self, client_cfg, global_cfg, *, seed: int = 0):
+        return tfamily.segment_spec(client_cfg, global_cfg, seed=seed)
 
     def chain_paths(self, cfg):
         raise NotImplementedError(

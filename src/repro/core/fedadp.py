@@ -19,16 +19,23 @@ Coverage knobs (single-sourced in ``core.aggregation``):
                     participates in the average); "coverage": the
                     HeteroFL-style renormalized average over covering
                     clients only, with uncovered coordinates keeping the
-                    server's current values.
+                    server's current values. On width-heterogeneous
+                    cohorts the coverage average is multiplicity-aware:
+                    client k's weight at a coordinate its embedding
+                    duplicated m times is W_k/m, so a client channel's
+                    total weight stays W_k regardless of copy count.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
                                     client_weights, coverage_mask, fedavg,
-                                    fedavg_masked, subset_weights)
+                                    fedavg_masked, multiplicity,
+                                    subset_weights)
+from repro.core.netchange import round_embed_seed, seed_lru
 
 
 @dataclass
@@ -51,19 +58,28 @@ class FedADP:
         self.global_cfg = self.family.union(list(self.client_cfgs))
         self.weights = client_weights(self.n_samples)
         # coverage masks are seed-invariant on depth-only cohorts (the
-        # embedding seed only steers To-Wider duplication), so the
-        # per-round mask of Step 4 can be computed once per (client,
-        # policy) instead of per round
+        # embedding seed only steers To-Wider duplication), so they cache
+        # per (client, policy); width-heterogeneous masks are deterministic
+        # in the per-round seed, so they cache per (client, policy, seed)
+        # in a bounded LRU instead of being rebuilt every round
         self._depth_only = self.family.depth_only(list(self.client_cfgs))
-        self._mask_cache = {}
+        self._static_masks: dict = {}               # depth-only: unbounded,
+                                                    # seed-invariant entries
+        self._mask_cache: OrderedDict = OrderedDict()
+        self._mult_cache: OrderedDict = OrderedDict()
 
     def init_global(self, key):
         return self.family.init(key, self.global_cfg)
 
     def _seed(self, round_idx: int, k: int) -> int:
         # one seed per (round, client): the distribute-fold and collect-widen
-        # mappings of a round are mutual inverses.
-        return (self.base_seed * 1_000_003 + round_idx * 997 + k) % (2**31)
+        # mappings of a round are mutual inverses. Shared formula with the
+        # unified engine (netchange.round_embed_seed) so both paths draw
+        # identical To-Wider mappings.
+        return round_embed_seed(self.base_seed, round_idx, k)
+
+    def _cached(self, cache: OrderedDict, key, build):
+        return seed_lru(cache, key, build, n_clients=len(self.client_cfgs))
 
     def distribute(self, global_params, round_idx: int, k: int):
         """Step 1: NetChange(omega^t, omega_k)."""
@@ -83,21 +99,38 @@ class FedADP:
         """Global-space 0/1 mask of the coordinates client k's expansion
         covers at this round, under this instance's ``coverage`` policy
         (or an explicit override) — delegates to ``core.aggregation``,
-        the single source of coverage semantics. Cached per (client,
-        policy) on depth-only cohorts, where the mask is round-invariant;
-        width-heterogeneous masks vary per round and are recomputed (a
-        per-round cache would grow without bound over a long run)."""
+        the single source of coverage semantics. Masks are deterministic
+        in the embedding seed, so they cache per (client, policy) on
+        depth-only cohorts (seed-invariant there) and per (client,
+        policy, round seed) otherwise — one ``coverage_mask`` build per
+        distinct seed, in a bounded LRU."""
         policy = policy or self.coverage
         seed = self._seed(round_idx, k)
-        if not self._depth_only:
+
+        def build():
             return coverage_mask(self.family, self.client_cfgs[k],
                                  self.global_cfg, policy=policy, seed=seed)
-        key = (k, policy)
-        if key not in self._mask_cache:
-            self._mask_cache[key] = coverage_mask(
-                self.family, self.client_cfgs[k], self.global_cfg,
-                policy=policy, seed=seed)
-        return self._mask_cache[key]
+
+        if self._depth_only:
+            # seed-invariant: at most (clients × policies) entries, never
+            # evicted — a bounded cache would rebuild them on big cohorts
+            key = (k, policy)
+            if key not in self._static_masks:
+                self._static_masks[key] = build()
+            return self._static_masks[key]
+        return self._cached(self._mask_cache, (k, policy, seed), build)
+
+    def coverage_multiplicity(self, round_idx: int, k: int):
+        """Per-coordinate duplication counts of client k's expansion at
+        this round (``aggregation.multiplicity``) — None on depth-only
+        cohorts, where every count is 1. Cached like the masks."""
+        if self._depth_only:
+            return None
+        seed = self._seed(round_idx, k)
+        return self._cached(
+            self._mult_cache, (k, seed),
+            lambda: multiplicity(self.family, self.client_cfgs[k],
+                                 self.global_cfg, seed=seed))
 
     def aggregate(self, expanded: Sequence,
                   selected: Optional[Sequence[int]] = None, *,
@@ -125,8 +158,11 @@ class FedADP:
                     "masks must use the seed the updates were embedded "
                     "with")
             masks = [self.coverage_mask(round_idx, k) for k in selected]
-            return fedavg_masked(expanded, w, masks, renorm=True,
-                                 fallback=global_params)
+            mults = [self.coverage_multiplicity(round_idx, k)
+                     for k in selected]
+            return fedavg_masked(expanded, w, masks,
+                                 mult=(None if mults[0] is None else mults),
+                                 renorm=True, fallback=global_params)
         return fedavg(expanded, w)
 
     def round(self, global_params, local_train: Callable, round_idx: int,

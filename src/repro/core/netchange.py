@@ -42,6 +42,35 @@ import numpy as np
 
 # ----------------------------------------------------------------- mappings
 
+NARROW_MODES = ("paper", "fold")
+
+
+def round_embed_seed(base_seed: int, round_idx: int, k: int) -> int:
+    """The per-(round, client) NetChange seed — ONE formula shared by the
+    per-client loop (``FedADP._seed``) and the unified engine, so both
+    paths draw identical To-Wider duplication mappings. The distribute
+    fold and collect widen of a round are mutual inverses because they
+    share this seed."""
+    return (base_seed * 1_000_003 + round_idx * 997 + k) % (2 ** 31)
+
+
+def seed_lru(cache, key, build, *, n_clients: int = 0):
+    """Bounded get-or-build for seed-keyed embedding caches (coverage
+    masks, segment matrices): per-round seeds are unbounded over a run's
+    lifetime, so the maps must evict — LRU with ``max(128, 4·K)``
+    entries, so one round of a big cohort never evicts itself. One
+    helper — sizing rule included — shared by ``FedADP`` and
+    ``UnifiedEngine`` so the two seed caches cannot diverge."""
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+    val = cache[key] = build()
+    maxsize = max(128, 4 * n_clients)
+    while len(cache) > maxsize:
+        cache.popitem(last=False)
+    return val
+
+
 def dup_mapping(old: int, new: int, *, tag: str = "", seed: int = 0) -> np.ndarray:
     """Mapping m: [new] -> [old]. First ``old`` slots are the identity; the
     remaining ``new - old`` duplicate sources are chosen uniformly (Alg. 2

@@ -23,6 +23,7 @@ top-k (noted).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import netchange as nc
+from repro.core import segments as sg
 from repro.models import transformer as T
 
 
@@ -237,6 +239,77 @@ def _transform_block(block, from_cfg: ModelConfig, to_cfg: ModelConfig,
         out["rg"] = _transform_rg(out["rg"], from_cfg.d_rnn, to_cfg.d_rnn,
                                   tag, seed, mode)
     return out
+
+
+@functools.lru_cache(maxsize=32)
+def _param_shapes(cfg: ModelConfig):
+    # configs are frozen/hashable and per-round seed-keyed callers would
+    # otherwise re-trace the full model every round
+    return jax.eval_shape(lambda k: T.init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def segment_spec(from_cfg: ModelConfig, to_cfg: ModelConfig, *,
+                 seed: int = 0):
+    """Width-segment metadata of ``up(·, from_cfg, to_cfg, seed=seed)``
+    (``core.segments``) for every LINEAR width dimension
+    ``_transform_block`` moves: FFN d_ff, MoE expert width d_ff_expert,
+    shared-expert width, RG-LRU d_rnn. Per widened leaf: in-role
+    duplication on the hidden axis (−1), out-role split on the
+    down-projection rows (−2), both on the recurrent square matrices —
+    with each block's own deterministic mapping (same tags
+    ``_transform_block`` uses, so the ids match ``up`` exactly).
+
+    Expert-COUNT duplication is NOT emitted: its router-bias −log(group)
+    shift makes the embedding affine per expert group, so cohorts
+    differing there carry no segment metadata (multiplicity stays 1 on
+    expert-duplicated coordinates; the unified engine's
+    ``segment_representable`` excludes them anyway)."""
+    spec = {}
+    mf, mt = from_cfg.moe, to_cfg.moe
+    ffn = (from_cfg.d_ff, to_cfg.d_ff)
+    effn = (mf.d_ff_expert, mt.d_ff_expert) if mf and mt else (0, 0)
+    sffn = ((mf.n_shared * mf.d_ff_shared, mt.n_shared * mt.d_ff_shared)
+            if mf and mt else (0, 0))
+    rnn = ((from_cfg.d_rnn, to_cfg.d_rnn)
+           if from_cfg.ssm and to_cfg.ssm else (0, 0))
+    if all(a == b for a, b in (ffn, effn, sffn, rnn)):
+        return spec
+    shapes = _param_shapes(to_cfg)
+
+    def segs(role, ax, mapping):
+        if role == "both":
+            return [sg.AxisSeg(-2, mapping, out_role=True),
+                    sg.AxisSeg(-1, mapping, out_role=False)]
+        return [sg.AxisSeg(ax, mapping, out_role=(role == "out"))]
+
+    def visit(path, leaf):
+        keys = sg.path_keys(path)
+        if len(keys) < 3 or keys[0] not in ("units", "rem"):
+            return leaf
+        tag0 = ("u" if keys[0] == "units" else "r") + f"/{keys[1]}"
+        rest = keys[2:]
+        hit = None
+        if rest[0] == "mlp" and len(rest) == 2 and rest[1] in _MLP_SPEC:
+            hit = (ffn, tag0 + "/ffn", _MLP_SPEC[rest[1]])
+        elif (rest[0] == "moe" and len(rest) == 2
+                and rest[1] in ("wg", "wu", "wd")):
+            hit = (effn, tag0 + "/effn", _MLP_SPEC[rest[1]])
+        elif (len(rest) == 3 and rest[:2] == ("moe", "shared")
+                and rest[2] in _MLP_SPEC):
+            hit = (sffn, tag0 + "/sffn", _MLP_SPEC[rest[2]])
+        elif rest[0] == "rg" and len(rest) == 2 and rest[1] in _RG_SPEC:
+            hit = (rnn, tag0 + "/rnn", _RG_SPEC[rest[1]])
+        if hit is None:
+            return leaf
+        (old, new), tag, (role, ax) = hit
+        if old != new:
+            spec[keys] = segs(role, ax,
+                              nc.dup_mapping(old, new, tag=tag, seed=seed))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return spec
 
 
 # ------------------------------------------------------------------ up/down

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.configs.vgg_family import VGGConfig
 from repro.core import netchange as nc
+from repro.core import segments as sg
 
 
 def _chain(cfg: VGGConfig) -> List[Tuple]:
@@ -63,14 +64,21 @@ def _spatial_after_convs(cfg: VGGConfig) -> int:
     return cfg.image_size // (2 ** len(cfg.stages))
 
 
-def _widen_next_in(nxt, nxt_node, mapping, old, cfg, *, fold=False):
-    """Duplicate (or fold) the incoming channels of the next layer."""
+def _widen_next_in(nxt, nxt_node, mapping, old, cfg, *, fold=False,
+                   flatten=False):
+    """Duplicate (or fold) the incoming channels of the next layer.
+    ``flatten`` marks the conv→fc boundary (the widened node is a conv
+    and the next is the first fc): rows are (spatial, channel) pairs,
+    channel fastest. fc→fc/out adjustments are plain row ops."""
     w = nxt["w"]
     if nxt_node[0] == "conv":
         nxt["w"] = (nc.narrow_fold_out(w, mapping, old, axis=2) if fold
                     else nc.widen_out(w, mapping, old, axis=2))
         return nxt
-    # fc after flatten: rows are (spatial, channel) pairs, channel fastest
+    if not flatten:
+        nxt["w"] = (nc.narrow_fold_out(w, mapping, old, axis=0) if fold
+                    else nc.widen_out(w, mapping, old, axis=0))
+        return nxt
     sp = _spatial_after_convs(cfg) ** 2
     w3 = w.reshape(sp, -1, w.shape[1])
     w3 = (nc.narrow_fold_out(w3, mapping, old, axis=1) if fold
@@ -79,10 +87,13 @@ def _widen_next_in(nxt, nxt_node, mapping, old, cfg, *, fold=False):
     return nxt
 
 
-def _narrow_next_in_paper(nxt, nxt_node, n_tar, cfg):
+def _narrow_next_in_paper(nxt, nxt_node, n_tar, cfg, *, flatten=False):
     w = nxt["w"]
     if nxt_node[0] == "conv":
         nxt["w"] = nc.narrow_out_paper(w, n_tar, axis=2)
+        return nxt
+    if not flatten:
+        nxt["w"] = nc.narrow_out_paper(w, n_tar, axis=0)
         return nxt
     sp = _spatial_after_convs(cfg) ** 2
     w3 = w.reshape(sp, -1, w.shape[1])
@@ -92,6 +103,22 @@ def _narrow_next_in_paper(nxt, nxt_node, n_tar, cfg):
 
 def _copy(params):
     return jax.tree.map(lambda x: x, params)
+
+
+def _mid_widths(from_cfg: VGGConfig, to_cfg: VGGConfig) -> Dict[Tuple, int]:
+    """Chain-node -> width AFTER To-Deeper but BEFORE To-Wider (inserted
+    identity convs carry their stage's last client width) — the "old"
+    side of every To-Wider mapping. The ONE definition ``up()`` and
+    ``segment_spec`` share, so the spec cannot drift from the embedding
+    it describes."""
+    mid = tuple(
+        tuple(list(from_cfg.stages[si]) + [from_cfg.stages[si][-1]]
+              * (len(to_cfg.stages[si]) - len(from_cfg.stages[si])))
+        for si in range(len(to_cfg.stages)))
+    return {**{("conv", si, li): mid[si][li]
+               for si in range(len(mid)) for li in range(len(mid[si]))},
+            **{("fc", fi): from_cfg.classifier[fi]
+               for fi in range(len(from_cfg.classifier))}}
 
 
 def up(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0):
@@ -107,18 +134,9 @@ def up(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0):
             stage[f"c{li}"] = {
                 "w": nc.identity_conv(ch, dtype=stage["c0"]["w"].dtype),
                 "b": jnp.zeros((ch,), stage["c0"]["b"].dtype)}
-    mid_cfg_stages = tuple(
-        tuple(list(from_cfg.stages[si]) +
-              [from_cfg.stages[si][-1]] * (len(to_cfg.stages[si]) - len(from_cfg.stages[si])))
-        for si in range(len(to_cfg.stages)))
-
     # --- To-Wider over the whole chain (Alg. 2)
     chain = _chain(to_cfg)
-    cur_widths = {**{("conv", si, li): mid_cfg_stages[si][li]
-                     for si in range(len(mid_cfg_stages))
-                     for li in range(len(mid_cfg_stages[si]))},
-                  **{("fc", fi): from_cfg.classifier[fi]
-                     for fi in range(len(from_cfg.classifier))}}
+    cur_widths = _mid_widths(from_cfg, to_cfg)
     for idx, node in enumerate(chain[:-1]):
         old = cur_widths[node if node[0] != "conv" else ("conv", node[1], node[2])]
         new = _width_of(to_cfg, node)
@@ -133,9 +151,76 @@ def up(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0):
         _set(params, node, layer)
         nxt_node = chain[idx + 1]
         nxt = dict(_get(params, nxt_node))
-        nxt = _widen_next_in(nxt, nxt_node, mapping, old, to_cfg, fold=False)
+        nxt = _widen_next_in(nxt, nxt_node, mapping, old, to_cfg, fold=False,
+                             flatten=(node[0] == "conv"))
         _set(params, nxt_node, nxt)
     return params
+
+
+def segment_spec(from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0):
+    """Width-segment metadata of ``up(·, from_cfg, to_cfg, seed=seed)``:
+    per client-owned union leaf, which axes To-Wider duplicated and the
+    segment id of every union index along them (``core.segments``).
+
+    Mirrors ``up()``'s chain walk exactly: a node's own mapping widens
+    its output axis (in-role duplication on w and b), and the *previous*
+    chain node's mapping widens its input axis (out-role split on w) —
+    including when the previous node is an inserted identity conv, whose
+    widening still duplicates the next client layer's input channels.
+    The conv→fc flatten boundary lifts the channel mapping to (spatial,
+    channel) rows, channel fastest, matching ``_widen_next_in``."""
+    spec = {}
+    chain = _chain(to_cfg)
+    cur_widths = _mid_widths(from_cfg, to_cfg)
+
+    def is_client(node):
+        if node[0] == "conv":
+            return node[2] < len(from_cfg.stages[node[1]])
+        return True
+
+    def path_of(node):
+        if node[0] == "conv":
+            return ("stages", f"s{node[1]}", f"c{node[2]}")
+        if node[0] == "fc":
+            return ("fc", f"f{node[1]}")
+        return ("out",)
+
+    prev = prev_node = None          # previous chain node's (mapping, new)
+    for node in chain:
+        segs_w, segs_b = [], []
+        if prev is not None and is_client(node):
+            mapping_p, new_p = prev
+            if node[0] == "conv":
+                segs_w.append(sg.AxisSeg(2, mapping_p, out_role=True))
+            elif prev_node[0] == "conv":
+                # fc after flatten: rows are (spatial, channel), channel
+                # fastest — lift the channel segments to row granularity
+                sp = _spatial_after_convs(to_cfg) ** 2
+                ids = (np.arange(sp)[:, None] * new_p
+                       + np.asarray(mapping_p)[None, :]).reshape(-1)
+                segs_w.append(sg.AxisSeg(0, ids.astype(np.int32),
+                                         out_role=True))
+            else:
+                segs_w.append(sg.AxisSeg(0, mapping_p, out_role=True))
+        own = None
+        if node != ("out",):
+            old = cur_widths[node]
+            new = _width_of(to_cfg, node)
+            if new != old:
+                tag = "/".join(map(str, node))
+                own = (nc.dup_mapping(old, new, tag=tag, seed=seed), new)
+        if own is not None and is_client(node):
+            out_axis = 3 if node[0] == "conv" else 1
+            segs_w.append(sg.AxisSeg(out_axis, own[0], out_role=False))
+            segs_b.append(sg.AxisSeg(0, own[0], out_role=False))
+        if is_client(node):
+            p = path_of(node)
+            if segs_w:
+                spec[p + ("w",)] = segs_w
+            if segs_b:
+                spec[p + ("b",)] = segs_b
+        prev, prev_node = own, node
+    return spec
 
 
 def down(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0,
@@ -167,13 +252,15 @@ def down(params, from_cfg: VGGConfig, to_cfg: VGGConfig, *, seed: int = 0,
         if mode == "paper":
             layer["w"] = nc.narrow_in(layer["w"], new, axis=out_axis)
             layer["b"] = nc.narrow_in(layer["b"], new, axis=0)
-            nxt = _narrow_next_in_paper(nxt, nxt_node, new, from_cfg)
+            nxt = _narrow_next_in_paper(nxt, nxt_node, new, from_cfg,
+                                        flatten=(node[0] == "conv"))
         else:
             tag = "/".join(map(str, node))
             mapping = nc.dup_mapping(new, old, tag=tag, seed=seed)
             layer["w"] = nc.narrow_fold_in(layer["w"], mapping, new, axis=out_axis)
             layer["b"] = nc.narrow_fold_in(layer["b"], mapping, new, axis=0)
-            nxt = _widen_next_in(nxt, nxt_node, mapping, new, from_cfg, fold=True)
+            nxt = _widen_next_in(nxt, nxt_node, mapping, new, from_cfg,
+                                 fold=True, flatten=(node[0] == "conv"))
         _set(params, node, layer)
         _set(params, nxt_node, nxt)
 

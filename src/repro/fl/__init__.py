@@ -3,7 +3,8 @@ from repro.fl.strategy import (  # noqa: F401
     ClusteredStrategy, FedADPStrategy, FlexiFedStrategy, StandaloneStrategy,
     Strategy, make_strategy)
 from repro.fl.backends import (  # noqa: F401
-    LoopBackend, UnifiedBackend, unified_eligible)
+    LoopBackend, UnifiedBackend, unified_eligible,
+    unified_ineligible_reason)
 from repro.fl.federation import (  # noqa: F401
     Federation, Participation, checkpoint_path, load_round_checkpoint,
     restore_sampler_rngs, save_round_checkpoint)

@@ -25,9 +25,13 @@ Both expose the same surface to ``Federation``:
   evaluate(state, r, batch) / client_views(state, r) / samplers.
 
 ``unified_eligible`` is the ``engine="auto"`` rule: unified when the
-strategy supports it, the cohort is depth-only, and the client batch
-streams are guaranteed to align. Participation and FedADP-U no longer
-keep the loop — both paths read coverage from ``core.aggregation``.
+strategy supports it, the cohort's embedding is segment-representable
+(depth AND width heterogeneity — the old ``depth_only`` gate is gone),
+and the client batch streams are guaranteed to align. Participation and
+FedADP-U no longer keep the loop — both paths read coverage from
+``core.aggregation``. ``unified_ineligible_reason`` names the first
+failing condition so an ``engine="auto"`` fallback is diagnosable
+instead of silent.
 """
 from __future__ import annotations
 
@@ -102,7 +106,8 @@ class LoopBackend:
 
 class UnifiedBackend:
     """Cohort-parallel execution through ``UnifiedEngine`` (one stacked
-    program; exact for depth-only cohorts — fl/engine.py docstring)."""
+    program; loop-equivalent on segment-representable depth- and
+    width-heterogeneous cohorts — fl/engine.py docstring)."""
     name = "unified"
 
     def __init__(self, family, client_cfgs: Sequence, samplers: List, *,
@@ -131,9 +136,16 @@ class UnifiedBackend:
         # keep the engine (and its jitted steps) across rebinds of the SAME
         # method/coverage-knobs/weights; rebuild when the strategy's math
         # changes
+        # the NetChange seed comes from the STRATEGY when it has one
+        # (FedADP.base_seed — the loop derives its per-round To-Wider
+        # mappings from it, so the engine must too; backend `seed` is the
+        # fallback for per-client-state strategies, which only embed once)
+        embed_seed = getattr(strategy, "base_seed", self.seed)
         key = (strategy.name, getattr(strategy, "filler", "zero"),
                getattr(strategy, "agg_mode", "filler"),
-               getattr(strategy, "coverage", "loose"), tuple(n_samples))
+               getattr(strategy, "coverage", "loose"),
+               getattr(strategy, "narrow_mode", "paper"), embed_seed,
+               tuple(n_samples))
         if self.engine is None or self._engine_key != key:
             self._engine_key = key
             self.engine = UnifiedEngine(
@@ -142,8 +154,9 @@ class UnifiedBackend:
                 filler_mode=getattr(strategy, "filler", "zero"),
                 agg_mode=getattr(strategy, "agg_mode", "filler"),
                 coverage=getattr(strategy, "coverage", "loose"),
+                narrow_mode=getattr(strategy, "narrow_mode", "paper"),
                 use_kernel=self.use_kernel, mesh=self.mesh,
-                embed_seed=self.seed)
+                embed_seed=embed_seed)
         return self
 
     # ------------------------------------------------------- batch stream
@@ -183,10 +196,10 @@ class UnifiedBackend:
     def run_round(self, state, round_idx: int, selected: Sequence[int]):
         sel = list(selected)
         return self.engine.run_round(state, self._stacked_round_batches(sel),
-                                     selected=sel)
+                                     selected=sel, round_idx=round_idx)
 
     def client_views(self, state, round_idx: int) -> List:
-        stacked = (self.engine.round_start(state)
+        stacked = (self.engine.round_start(state, round_idx=round_idx)
                    if self.strategy.kind == "global" else state)
         return [self.engine.client_view(stacked, k)
                 for k in range(len(self.client_cfgs))]
@@ -198,18 +211,40 @@ class UnifiedBackend:
         return float(np.mean(accs))
 
 
+def unified_ineligible_reason(strategy: Strategy, family, client_cfgs,
+                              samplers) -> Optional[str]:
+    """Why ``engine="auto"`` would keep the loop for this run — None when
+    the unified engine applies. The conditions: a unified-engine method,
+    a segment-representable cohort embedding (depth and width both
+    qualify; the old ``depth_only`` gate is deleted), and aligned client
+    batch streams (equal n_samples + batch_size + round_fraction means
+    every sampler draws the same per-round take). Neither FedADP-U nor
+    partial participation keeps the loop anymore: both paths read
+    coverage from ``core.aggregation`` and the engine runs
+    selected-subset rounds."""
+    if strategy.name not in METHODS:
+        return (f"strategy {strategy.name!r} is not a unified-engine "
+                f"method (supported: {', '.join(METHODS)})")
+    cfgs = list(client_cfgs)
+    rep = getattr(family, "segment_representable", None)
+    representable = rep(cfgs) if rep is not None else family.depth_only(cfgs)
+    if not representable:
+        return ("cohort embedding is not segment-representable (only "
+                "depth and supported width dimensions may vary — "
+                "family.segment_representable)")
+    if len({s.n_samples for s in samplers}) != 1:
+        return ("ragged client datasets (unequal n_samples) — stacked "
+                "batch streams would not align")
+    if len({s.batch_size for s in samplers}) != 1:
+        return "unequal client batch sizes — stacked batches must align"
+    if len({getattr(s, "round_fraction", None) for s in samplers}) != 1:
+        return ("unequal per-round data fractions — stacked batch "
+                "streams would not align")
+    return None
+
+
 def unified_eligible(strategy: Strategy, family, client_cfgs,
                      samplers) -> bool:
-    """The ``auto`` rule: equal n_samples + batch_size + round_fraction
-    means every sampler draws the same per-round take, so the stacked
-    batch streams are guaranteed to align (ragged cohorts keep the loop).
-    Neither FedADP-U nor partial participation keeps the loop anymore:
-    both paths read coverage from ``core.aggregation`` and the engine
-    runs selected-subset rounds."""
-    n_samples = [s.n_samples for s in samplers]
-    return (strategy.name in METHODS
-            and family.depth_only(list(client_cfgs))
-            and len(set(n_samples)) == 1
-            and len({s.batch_size for s in samplers}) == 1
-            and len({getattr(s, "round_fraction", None)
-                     for s in samplers}) == 1)
+    """The ``engine="auto"`` rule — see ``unified_ineligible_reason``."""
+    return unified_ineligible_reason(strategy, family, client_cfgs,
+                                     samplers) is None

@@ -7,10 +7,16 @@ program instead of a Python loop over clients:
   * client k's model = the global architecture with a constant *filler*
     on the parameters the client doesn't have (zero blocks for pre-norm
     residual transformers, identity convs for VGG — whatever ``up()``
-    would insert) and a 0/1 *trainable mask* on the ones it does,
+    would insert) and a 0/1 *trainable mask* on the ones it does; width
+    heterogeneity adds the *segment operators* of ``core.segments``:
+    ``up()`` is linear (``u = E p + filler``), E duplicates client
+    channels into union segments,
   * local training = ``jax.vmap`` over the stacked (K, ...) parameter
-    tree with mask-projected gradients and stacked optimizer state
-    (SGD + momentum from ``repro.optim``), jitted ONCE per engine and
+    tree with gradients transformed by ``E Eᵀ`` (per-axis segment sums,
+    1/c² on Net2Net split axes) then mask-projected — exactly the
+    pushforward of the client-shape gradient, so union-space SGD(+
+    momentum, from ``repro.optim``) *equals* client-shape SGD: the
+    stacked state stays ``E p_k`` throughout. Jitted ONCE per engine and
     participating-subset size,
   * the client axis is ``shard_map``-ed over a device mesh via the
     ``sharding/rules.py`` machinery (``stacked_client_spec``) — local
@@ -23,7 +29,8 @@ program instead of a Python loop over clients:
     "loose", the loop reference's reading) decides what counts as
     covered during aggregation, and ``agg_mode="coverage"`` switches
     Eq. 1's filler-polluted average for the HeteroFL-style renormalized
-    average over covering clients.
+    average over covering clients — multiplicity-aware on width cohorts
+    (per-coordinate weight W_k/m_k, same single kernel pass).
 
 Partial participation: ``run_round(state, batches, selected=...)`` runs
 the round on the gathered ``selected`` slice of the stacked tree —
@@ -42,18 +49,25 @@ DESIGN.md §7):
     identity conv under ReLU on non-negative activations), masked
     gradients keep it constant, and aggregating the stacked tree with
     the filler in place reproduces the paper's zero/identity-filler
-    FedAvg literally; both paths read coverage from
-    ``core.aggregation.coverage_mask``, so FedADP-U and coverage-mode
-    aggregation match the loop too.
-  * Width heterogeneity embeds through a FIXED To-Wider mapping
-    (``embed_seed``) instead of Alg. 2's per-round random duplication —
-    a documented approximation (EXPERIMENTS.md §Ablations).
+    FedAvg literally.
+  * EXACT (to float tolerance) for width-heterogeneous cohorts whose
+    embedding is segment-representable (``family.segment_representable``
+    — the old ``depth_only`` gate is gone): fedadp rounds draw the SAME
+    per-(round, client) To-Wider mappings as the loop
+    (``netchange.round_embed_seed``), round start is the literal
+    ``up(down(·))`` under the strategy's ``narrow_mode``, training keeps
+    the stack in image(E) via the segment-projected gradients, and both
+    paths read coverage + multiplicity from ``core.aggregation``.
+    Per-client-state methods embed once at the fixed ``embed_seed`` (so
+    same-architecture clients share one mapping and cluster/prefix
+    averages commute with E).
 
 Methods: ``fedadp`` (filler "zero" | "global"), ``clustered``,
 ``flexifed`` (VGG chain), ``standalone``.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -62,11 +76,13 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import segments as sg
 from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
                                     client_weights, coverage_and_filler,
-                                    fedavg_stacked, loosen, stack_trees,
-                                    subset_weights)
+                                    fedavg_stacked, global_shapes, loosen,
+                                    stack_trees, subset_weights)
 from repro.core.baselines import _cluster_ids
+from repro.core.netchange import NARROW_MODES, round_embed_seed, seed_lru
 from repro.optim import sgd
 from repro.sharding.rules import stacked_client_spec
 
@@ -98,12 +114,15 @@ class UnifiedEngine:
     agg_mode: str = "filler"             # "filler" (Eq. 1) | "coverage"
     coverage: str = "loose"              # what counts as covered when
                                          # aggregating (core.aggregation)
+    narrow_mode: str = "paper"           # fedadp distribute: Alg. 3 | fold
     loss_fn: Optional[Callable] = None   # loss(params, batch) under the
                                          # GLOBAL cfg; default: family's
     use_kernel: Optional[bool] = None    # None = auto (Pallas on TPU)
     mesh: Optional[Mesh] = None          # shard the client axis over this
     client_axes: Tuple[str, ...] = ("clients",)
-    embed_seed: int = 0
+    embed_seed: int = 0                  # base NetChange seed; fedadp
+                                         # rounds derive per-(round, k)
+                                         # seeds from it (round_embed_seed)
 
     def __post_init__(self):
         if self.agg_mode not in AGG_MODES:
@@ -112,15 +131,51 @@ class UnifiedEngine:
         if self.coverage not in COVERAGE_POLICIES:
             raise ValueError(f"coverage={self.coverage!r}, expected one of "
                              f"{COVERAGE_POLICIES}")
+        if self.narrow_mode not in NARROW_MODES:
+            raise ValueError(f"narrow_mode={self.narrow_mode!r}, expected "
+                             f"one of {NARROW_MODES}")
         self.global_cfg = self.family.union(list(self.client_cfgs))
         self.weights = client_weights(self.n_samples)
-        self.masks, self.filler = client_embedding(
-            self.family, self.client_cfgs, self.global_cfg,
-            seed=self.embed_seed)
-        # aggregation-time coverage under the configured policy: strict is
-        # the trainable mask itself, loose adds the nonzero filler taps
-        self.cov_masks = (self.masks if self.coverage == "strict"
-                          else loosen(self.masks, self.filler))
+        self._depth_only = self.family.depth_only(list(self.client_cfgs))
+        if not self._depth_only:
+            rep = getattr(self.family, "segment_representable", None)
+            if rep is None or not rep(list(self.client_cfgs)):
+                raise ValueError(
+                    "unified engine needs a depth-only or segment-"
+                    "representable cohort (family.segment_representable); "
+                    "use the loop backend for this cohort")
+        self._gshapes = global_shapes(self.family, self.global_cfg)
+        # the static segment structure (which leaves/axes are widened) is
+        # seed-invariant — only the matrix VALUES change per round seed
+        if self._depth_only:
+            self._axes_map: Dict = {}
+        else:
+            specs = [self.family.segment_spec(cfg, self.global_cfg,
+                                              seed=self.embed_seed)
+                     for cfg in self.client_cfgs]
+            self._axes_map = sg.union_axes(specs, self._gshapes)
+        self._seg_axes = {"/".join(p): a for p, a in self._axes_map.items()}
+        self._mask_cache: Dict[int, Tuple] = {}        # per k: seed-invariant
+        self._seg_cache: OrderedDict = OrderedDict()   # per (k, seed)
+        self._cov_cache: OrderedDict = OrderedDict()   # per (k, seed)
+        # fixed-seed cohort embedding: per-client-state methods live here
+        # permanently; for fedadp it is the depth-only fast path (where
+        # the embedding is seed-invariant anyway). The strict mask (and
+        # with it the strict coverage reading) is seed-invariant even on
+        # width cohorts — To-Wider lands a client parameter on EVERY
+        # union channel of a widened axis no matter the mapping.
+        trip = [self._client_mask(k) for k in range(len(self.client_cfgs))]
+        self.masks = stack_trees([t[0] for t in trip])
+        self.filler = stack_trees([t[1] for t in trip])
+        self.cov_masks = stack_trees([t[2] for t in trip])
+        if self._depth_only:
+            self._seg_mats0: Dict = {}
+            self._mult0 = None
+        else:
+            segs = [self._client_seg(k, self.embed_seed)
+                    for k in range(len(self.client_cfgs))]
+            self._seg_mats0 = sg.stack_matrices([s[0] for s in segs])
+            self._mult0 = stack_trees([s[1] for s in segs])
         self.clusters = _cluster_ids(self.client_cfgs)
         if self.method == "flexifed":
             full = tuple(range(len(self.client_cfgs)))
@@ -128,6 +183,51 @@ class UnifiedEngine:
             self._prefix_paths = self._prefix_for(full)
         self._opt = sgd(self.lr, self.momentum)
         self._steps: Dict[int, Callable] = {}
+
+    # ----------------------------------------------------------- embedding
+    def _lru(self, cache: OrderedDict, key, build):
+        return seed_lru(cache, key, build, n_clients=len(self.client_cfgs))
+
+    def _client_mask(self, k: int):
+        """(strict mask, filler, cov) at the fixed ``embed_seed`` — the
+        strict mask is seed-invariant always; filler and the loose cov
+        reading are seed-invariant on depth-only cohorts (the only place
+        the fixed filler/cov are used for fedadp)."""
+        if k not in self._mask_cache:
+            mask, filler = coverage_and_filler(
+                self.family, self.client_cfgs[k], self.global_cfg,
+                seed=self.embed_seed)
+            cov = mask if self.coverage == "strict" else loosen(mask, filler)
+            self._mask_cache[k] = (mask, filler, cov)
+        return self._mask_cache[k]
+
+    def _client_seg(self, k: int, seed: int):
+        """(E Eᵀ matrices, multiplicity tree) for client k at one seed —
+        plain numpy from ``segment_spec``, no jnp pushes; bounded LRU."""
+        def build():
+            spec = self.family.segment_spec(self.client_cfgs[k],
+                                            self.global_cfg, seed=seed)
+            return (sg.client_matrices(spec, self._axes_map, self._gshapes,
+                                       kind="grad"),
+                    sg.multiplicity_tree(spec, self._gshapes))
+        return self._lru(self._seg_cache, (k, seed), build)
+
+    def _client_cov(self, k: int, seed: int):
+        """Aggregation-coverage mask at a round seed. Strict = the
+        seed-invariant trainable mask; loose needs the round's filler
+        (widened identity-conv taps move with the mapping) — one extra
+        pair of ``up`` pushes per (client, seed), cached."""
+        if self._depth_only or self.coverage == "strict":
+            return self._client_mask(k)[2]
+
+        def build():
+            mask, filler = coverage_and_filler(
+                self.family, self.client_cfgs[k], self.global_cfg, seed=seed)
+            return loosen(mask, filler)
+        return self._lru(self._cov_cache, (k, seed), build)
+
+    def _round_seed(self, round_idx: int, k: int) -> int:
+        return round_embed_seed(self.embed_seed, round_idx, k)
 
     # ------------------------------------------------------------- step fn
     def _step_for(self, k_count: int):
@@ -150,9 +250,15 @@ class UnifiedEngine:
                 return gf(p, b)[1]
 
         opt = self._opt
+        seg_axes = self._seg_axes
 
-        def step_core(params, opt_state, masks, batch, step_idx):
+        def step_core(params, opt_state, masks, seg_mats, batch, step_idx):
             grads = jax.vmap(grads_one)(params, batch)
+            # width: E Eᵀ per leaf keeps the update in image(E) and equal
+            # to the client-shape SGD step; depth: the 0/1 mask keeps the
+            # filler constant. The two commute (masks are constant along
+            # segment axes).
+            grads = sg.project_stacked(grads, seg_axes, seg_mats)
             grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype),
                                  grads, masks)
             return opt.update(grads, opt_state, params, step_idx)
@@ -164,7 +270,7 @@ class UnifiedEngine:
                 # local training is independent per client: every operand
                 # carries the K axis, the body needs no collectives.
                 fn = shard_map(step_core, mesh=self.mesh,
-                               in_specs=(spec, spec, spec, spec, P()),
+                               in_specs=(spec, spec, spec, spec, spec, P()),
                                out_specs=(spec, spec), check_rep=False)
         return jax.jit(fn)
 
@@ -194,18 +300,38 @@ class UnifiedEngine:
     def init_global(self, key):
         return self.family.init(key, self.global_cfg)
 
-    def round_start(self, global_params, selected=None):
+    def round_start(self, global_params, selected=None, round_idx: int = 0):
         """Stacked per-client views of a global model: the unified-space
         equivalent of FedADP's distribute (To-Shallower/To-Narrower),
-        restricted to the participating subset when given."""
-        masks = self._gather(self.masks, selected)
-        filler = self._gather(self.filler, selected)
-        return jax.tree.map(
-            lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
-            global_params, masks, filler)
+        restricted to the participating subset when given. Depth-only
+        cohorts use the fused mask/filler arithmetic (``up(down(g))`` is
+        literally ``g·m + f·(1−m)`` there); width cohorts run the
+        literal per-client ``up(down(g))`` at the round's seeds under
+        ``narrow_mode`` — the same NetChange work the loop's distribute
+        + collect would do, with training still stacked."""
+        if self._depth_only:
+            masks = self._gather(self.masks, selected)
+            filler = self._gather(self.filler, selected)
+            return jax.tree.map(
+                lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
+                global_params, masks, filler)
+        ks = (list(range(len(self.client_cfgs))) if selected is None
+              else list(selected))
+        views = []
+        for k in ks:
+            s = self._round_seed(round_idx, k)
+            down = self.family.down(global_params, self.global_cfg,
+                                    self.client_cfgs[k], seed=s,
+                                    mode=self.narrow_mode)
+            views.append(self.family.up(down, self.client_cfgs[k],
+                                        self.global_cfg, seed=s))
+        return stack_trees(views)
 
     def embed(self, client_params: Sequence):
-        """Stack per-client (client-space) trees into the unified space."""
+        """Stack per-client (client-space) trees into the unified space
+        at the FIXED ``embed_seed`` — the per-client-state layout, where
+        same-architecture clients must share one mapping so cluster and
+        prefix averages commute with the embedding."""
         return stack_trees([
             self.family.up(p, cfg, self.global_cfg, seed=self.embed_seed)
             for p, cfg in zip(client_params, self.client_cfgs)])
@@ -214,22 +340,26 @@ class UnifiedEngine:
         return jax.tree.map(lambda x: x[k], stacked)
 
     # ------------------------------------------------------------ training
-    def train_round(self, stacked, stacked_batches: Sequence, *, masks=None):
+    def train_round(self, stacked, stacked_batches: Sequence, *, masks=None,
+                    seg_mats=None):
         """Run one local-training round: fresh optimizer state (matching
         the per-client loop, which re-inits SGD momentum every round), one
-        step per stacked batch. ``masks`` defaults to the full-cohort
-        strict masks; pass a gathered subset for partial rounds."""
+        step per stacked batch. ``masks``/``seg_mats`` default to the
+        fixed-seed full-cohort embedding; pass gathered/per-round values
+        for partial or fedadp width rounds."""
         masks = self.masks if masks is None else masks
+        seg_mats = self._seg_mats0 if seg_mats is None else seg_mats
         step = self._step_for(jax.tree.leaves(masks)[0].shape[0])
         opt_state = self._opt.init(stacked)
         for i, batch in enumerate(stacked_batches):
             stacked, opt_state = step(
-                stacked, opt_state, masks, batch,
+                stacked, opt_state, masks, seg_mats, batch,
                 jnp.asarray(i, jnp.int32))
         return stacked
 
     # --------------------------------------------------------- aggregation
-    def aggregate_global(self, stacked, global_params=None, selected=None):
+    def aggregate_global(self, stacked, global_params=None, selected=None,
+                         *, cov=None, mult=None):
         """FedADP Eq. 1-2 over the (sub-)stacked tree, weights
         renormalized over the participating subset.
 
@@ -243,19 +373,28 @@ class UnifiedEngine:
 
         ``agg_mode="coverage"``: the HeteroFL-style average — each
         coordinate over only the clients that cover it, per-coordinate
-        weight renormalization, server values where no participant
-        covers.
+        weight renormalization (multiplicity-aware on width cohorts:
+        W_k/m_k per duplicated coordinate), server values where no
+        participant covers.
+
+        ``cov``/``mult`` override the fixed-seed embedding's masks for
+        per-round-seeded fedadp width rounds.
         """
         w = subset_weights(self.n_samples, selected)
-        cov = self._gather(self.cov_masks, selected)
         if self.agg_mode == "coverage":
             assert global_params is not None, \
                 'agg_mode="coverage" needs the current global params'
-            return fedavg_stacked(stacked, w, masks=cov, renorm=True,
-                                  fallback=global_params,
+            if cov is None:
+                cov = self._gather(self.cov_masks, selected)
+            if mult is None and self._mult0 is not None:
+                mult = self._gather(self._mult0, selected)
+            return fedavg_stacked(stacked, w, masks=cov, mult=mult,
+                                  renorm=True, fallback=global_params,
                                   use_kernel=self.use_kernel)
         if self.filler_mode == "global":
             assert global_params is not None
+            if cov is None:
+                cov = self._gather(self.cov_masks, selected)
             stacked = jax.tree.map(
                 lambda p, m, g: p * m + g[None] * (1 - m),
                 stacked, cov, global_params)
@@ -286,7 +425,11 @@ class UnifiedEngine:
         across the subset wherever the ids agree, and preserved by the
         front-aligned embedding); indexing into the union's chain instead
         would mis-map whenever the subset's prefix extends beyond the
-        full cohort's."""
+        full cohort's. Layer ids carry widths, so the prefix stops at
+        the first width divergence; on the prefix every participant's
+        embedding is the same operator (same tag/widths/fixed seed), so
+        averaging embedded prefixes equals embedding the averaged
+        prefix."""
         chains = [self.family.chain_paths(self.client_cfgs[i]) for i in sel]
         paths = set()
         for pos in range(min(len(c) for c in chains)):
@@ -324,25 +467,50 @@ class UnifiedEngine:
         return jax.tree_util.tree_map_with_path(pick, glob, clus)
 
     # ---------------------------------------------------------- full round
-    def run_round(self, state, stacked_batches: Sequence, selected=None):
+    def run_round(self, state, stacked_batches: Sequence, selected=None,
+                  round_idx: int = 0):
         """One federated round over the participating subset (default:
         full cohort). ``state`` is the global tree for fedadp and the
         stacked client tree for the per-client-parameter methods; returns
         the same kind. ``stacked_batches`` leaves carry a leading axis of
-        ``len(selected)`` (participants only, in ``selected`` order)."""
+        ``len(selected)`` (participants only, in ``selected`` order).
+        ``round_idx`` seeds fedadp's per-round To-Wider mappings (the
+        loop's ``FedADP._seed`` numbers — identical on both paths)."""
         sel = self._resolve(selected)
-        masks = self._gather(self.masks, sel)
         if self.method == "fedadp":
-            # round_start's body with the already-gathered masks (one
-            # gather of the union-sized mask tree per round, not two)
-            filler = self._gather(self.filler, sel)
-            start = jax.tree.map(
-                lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
-                state, masks, filler)
-            trained = self.train_round(start, stacked_batches, masks=masks)
-            return self.aggregate_global(trained, state, selected=sel)
+            if self._depth_only:
+                # round_start's body with the already-gathered masks (one
+                # gather of the union-sized mask tree per round, not two)
+                masks = self._gather(self.masks, sel)
+                filler = self._gather(self.filler, sel)
+                start = jax.tree.map(
+                    lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
+                    state, masks, filler)
+                trained = self.train_round(start, stacked_batches,
+                                           masks=masks, seg_mats={})
+                return self.aggregate_global(trained, state, selected=sel)
+            ks = (list(range(len(self.client_cfgs))) if sel is None else sel)
+            seeds = [self._round_seed(round_idx, k) for k in ks]
+            segs = [self._client_seg(k, s) for k, s in zip(ks, seeds)]
+            masks = self._gather(self.masks, sel)     # seed-invariant
+            seg_mats = sg.stack_matrices([s[0] for s in segs])
+            start = self.round_start(state, sel, round_idx)
+            trained = self.train_round(start, stacked_batches, masks=masks,
+                                       seg_mats=seg_mats)
+            need_cov = (self.agg_mode == "coverage"
+                        or self.filler_mode == "global")
+            cov = (stack_trees([self._client_cov(k, s)
+                                for k, s in zip(ks, seeds)])
+                   if need_cov else None)
+            mult = (stack_trees([s[1] for s in segs])
+                    if self.agg_mode == "coverage" else None)
+            return self.aggregate_global(trained, state, selected=sel,
+                                         cov=cov, mult=mult)
+        masks = self._gather(self.masks, sel)
+        seg_mats = self._gather(self._seg_mats0, sel)
         trained = self.train_round(self._gather(state, sel),
-                                   stacked_batches, masks=masks)
+                                   stacked_batches, masks=masks,
+                                   seg_mats=seg_mats)
         new = self._scatter(state, sel, trained)
         if self.method == "clustered":
             return self._agg_clustered(new, sel)

@@ -20,10 +20,13 @@ Execution backends (EXPERIMENTS.md §Perf):
   * engine="unified"  — cohort-parallel path (UnifiedBackend around
                         fl/engine.py): one stacked vmapped program in the
                         union architecture, shard_map-able over a device
-                        mesh. Exact for depth-heterogeneous cohorts
+                        mesh. Loop-equivalent on segment-representable
+                        cohorts — depth AND width heterogeneity
                         (DESIGN.md §2).
   * engine="auto"     — unified when eligible (backends.unified_eligible),
-                        loop otherwise.
+                        loop otherwise; the fallback reason is logged once
+                        (logger "repro.fl",
+                        backends.unified_ineligible_reason).
 
 Beyond-paper knobs (ablations in EXPERIMENTS.md):
   * narrow_mode:  "paper" (Alg. 3) | "fold" (function-preserving inverse)
@@ -34,12 +37,17 @@ Beyond-paper knobs (ablations in EXPERIMENTS.md):
                   only) — core.aggregation's single coverage semantics.
   * agg_mode:     "filler" (Eq. 1 verbatim) | "coverage" (HeteroFL-style
                   per-coordinate renormalized average over covering
-                  clients; uncovered coordinates keep server values).
+                  clients; uncovered coordinates keep server values;
+                  multiplicity-aware on width-heterogeneous cohorts).
+  * embed_seed:   base seed of the NetChange To-Wider mappings (None =
+                  follow `seed`); both engines derive identical
+                  per-(round, client) mappings from it.
 
 All config values are validated eagerly at ``FLRunConfig`` construction.
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -48,11 +56,14 @@ import numpy as np
 
 from repro.core import AGG_MODES, COVERAGE_POLICIES
 from repro.data.federated import ClientSampler
-from repro.fl.backends import LoopBackend, UnifiedBackend, unified_eligible
+from repro.fl.backends import (LoopBackend, UnifiedBackend,
+                               unified_ineligible_reason)
 from repro.fl.federation import Federation, Participation
 from repro.fl.strategy import FILLERS, METHODS, NARROW_MODES, make_strategy
 
 _ENGINES = ("loop", "unified", "auto")
+
+_log = logging.getLogger("repro.fl")
 
 
 @dataclass
@@ -67,6 +78,13 @@ class FLRunConfig:
     coverage: str = "loose"
     agg_mode: str = "filler"
     seed: int = 0
+    embed_seed: Optional[int] = None     # NetChange embedding base seed
+                                         # (To-Wider mappings); None =
+                                         # follow `seed`. Loop and unified
+                                         # engines derive IDENTICAL
+                                         # per-(round, client) mappings
+                                         # from it (round_embed_seed) —
+                                         # a user-settable contract
     eval_every: int = 1
     engine: str = "auto"                 # loop | unified | auto
     use_kernel: Optional[bool] = None    # unified path: None = auto (TPU)
@@ -103,6 +121,15 @@ class FLRunConfig:
         if self.local_epochs < 1:
             raise ValueError(
                 f"local_epochs={self.local_epochs!r} must be >= 1")
+        if self.embed_seed is not None and (
+                isinstance(self.embed_seed, bool)
+                or not isinstance(self.embed_seed, int)):
+            raise ValueError(f"embed_seed={self.embed_seed!r} must be an "
+                             "int (or None to follow `seed`)")
+
+    @property
+    def resolved_embed_seed(self) -> int:
+        return self.seed if self.embed_seed is None else self.embed_seed
 
 
 class Simulator:
@@ -125,36 +152,46 @@ class Simulator:
         # itself is rebuilt per run so `sim.cfg` mutations (e.g. replacing
         # `rounds` between a warmup and a timed run) take effect.
         self._backends: Dict[tuple, Any] = {}
+        self._fallback_logged = False
 
     # ------------------------------------------------------ engine choice
     def _resolve_engine(self, strategy=None) -> str:
         if self.cfg.engine != "auto":
             return self.cfg.engine
         strategy = strategy if strategy is not None else self._strategy()
-        return ("unified" if unified_eligible(
+        reason = unified_ineligible_reason(
             strategy, self.family, self.client_cfgs, self.samplers)
-            else "loop")
+        if reason is None:
+            return "unified"
+        if not self._fallback_logged:
+            # once per Simulator: the auto fallback used to be silent and
+            # undiagnosable
+            _log.info("engine='auto' falls back to the loop backend: %s",
+                      reason)
+            self._fallback_logged = True
+        return "loop"
 
     def _strategy(self):
         return make_strategy(
             self.cfg.method, self.family, self.client_cfgs, self.n_samples,
             narrow_mode=self.cfg.narrow_mode, filler=self.cfg.filler,
             coverage=self.cfg.coverage, agg_mode=self.cfg.agg_mode,
-            base_seed=self.cfg.seed)
+            base_seed=self.cfg.resolved_embed_seed)
 
     def _backend(self, kind: str):
         cfg = self.cfg
         # key only on what each backend actually depends on, so e.g. a
         # seed sweep on the loop engine keeps its warm grad fns
         bkey = (kind, cfg.local_epochs, cfg.lr, cfg.momentum) + (
-            (cfg.use_kernel, cfg.seed) if kind == "unified" else ())
+            (cfg.use_kernel, cfg.resolved_embed_seed)
+            if kind == "unified" else ())
         if bkey not in self._backends:
             if kind == "unified":
                 self._backends[bkey] = UnifiedBackend(
                     self.family, self.client_cfgs, self.samplers,
                     local_epochs=cfg.local_epochs, lr=cfg.lr,
                     momentum=cfg.momentum, use_kernel=cfg.use_kernel,
-                    mesh=self.mesh, seed=cfg.seed)
+                    mesh=self.mesh, seed=cfg.resolved_embed_seed)
             else:
                 self._backends[bkey] = LoopBackend(
                     self.family, self.client_cfgs, self.samplers,

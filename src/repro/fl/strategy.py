@@ -34,12 +34,13 @@ from typing import Any, List, Protocol, Sequence, Tuple, runtime_checkable
 import jax
 
 from repro.core import ClusteredFL, FedADP, FlexiFed, Standalone, vgg_chain
+from repro.core.netchange import NARROW_MODES  # noqa: F401  (re-export; the
+                                               # canonical home is core)
 
 Update = Tuple[int, Any]          # (client index, collected update)
 
 METHODS = ("fedadp", "clustered", "flexifed", "standalone")
 FILLERS = ("zero", "global")
-NARROW_MODES = ("paper", "fold")
 
 
 @runtime_checkable
@@ -99,6 +100,10 @@ class FedADPStrategy:
         self.filler = filler
         self.coverage = coverage
         self.agg_mode = agg_mode
+        self.narrow_mode = narrow_mode   # backends read these: the unified
+        self.base_seed = base_seed       # engine must down() the same way
+                                         # and draw the same per-round
+                                         # To-Wider mappings as the loop
         self.family = family
         self.client_cfgs = list(self.algo.client_cfgs)
         self.n_samples = list(n_samples)

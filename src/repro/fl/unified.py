@@ -10,9 +10,10 @@ once, optional ``shard_map`` over the client axis, and ``fedavg_stacked``
 
 Faithfulness: EXACT for depth-heterogeneous cohorts (the filler is the
 same identity/zero constant FedADP's ``up()`` produces; verified in
-tests/test_unified.py). Width heterogeneity is embedded through a fixed
-To-Wider mapping rather than Alg. 2's per-round random duplication — a
-documented approximation (EXPERIMENTS.md §Ablations).
+tests/test_unified.py). Width-heterogeneous cohorts run through the
+engine's segment operators with per-round To-Wider mappings — pass
+``round_idx`` to ``round()`` to advance them (the engine draws the same
+``netchange.round_embed_seed`` mappings the loop reference would).
 """
 from __future__ import annotations
 
@@ -43,10 +44,12 @@ class UnifiedFedADP:
     def init_global(self, key):
         return self._engine.init_global(key)
 
-    def round(self, global_params, stacked_batches: List, *, epochs: int = 1):
+    def round(self, global_params, stacked_batches: List, *, epochs: int = 1,
+              round_idx: int = 0):
         """stacked_batches: list of pytrees whose leaves carry a leading K
-        axis (one slice per client). One FedADP round, fully vmapped."""
-        params = self._engine.round_start(global_params)
-        params = self._engine.train_round(
-            params, [b for _ in range(epochs) for b in stacked_batches])
-        return self._engine.aggregate_global(params)
+        axis (one slice per client). One FedADP round, fully vmapped —
+        delegated to the engine so round start, segment-projected
+        training and aggregation share one round seed."""
+        return self._engine.run_round(
+            global_params, [b for _ in range(epochs) for b in stacked_batches],
+            round_idx=round_idx)

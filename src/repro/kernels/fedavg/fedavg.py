@@ -51,6 +51,24 @@ def _masked_kernel(x_ref, w_ref, m_ref, o_ref, *, renorm: bool):
     o_ref[...] = num.astype(o_ref.dtype)
 
 
+def _masked_mult_kernel(x_ref, w_ref, m_ref, mu_ref, o_ref, *, renorm: bool):
+    # The multiplicity-aware coverage pass: per-coordinate client weight
+    # w[k] m[k,n] / mu[k,n] (mu = how many union coordinates duplicate the
+    # same client coordinate — a duplicated channel's total weight stays
+    # w[k]). Same single streaming pass, one extra (K, T) operand; mu <= 0
+    # (zero padding) is treated as 1, harmless because m is 0 there too.
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # (K, 1)
+    m = m_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    wm = w * m / jnp.where(mu > 0, mu, 1.0)     # (K, T)
+    num = jnp.sum(wm * x, axis=0, keepdims=True)
+    if renorm:
+        den = jnp.sum(wm, axis=0, keepdims=True)
+        num = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+    o_ref[...] = num.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def weighted_sum_2d(x, w, *, block: int = 4096,
                     interpret: Optional[bool] = None):
@@ -107,4 +125,40 @@ def weighted_sum_masked_2d(x, w, m, *, block: int = 4096,
         out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
         interpret=interpret,
     )(x, w.reshape(K, 1), m)
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "renorm"))
+def weighted_sum_masked_mult_2d(x, w, m, mu, *, block: int = 4096,
+                                interpret: Optional[bool] = None,
+                                renorm: bool = True):
+    """x, m, mu: (K, N) with N a multiple of 128; w: (K,) -> (N,) fp32.
+
+    Multiplicity-aware coverage aggregation: client k's per-coordinate
+    weight is ``w[k] m[k,n] / mu[k,n]`` (``mu`` = duplication counts of
+    the width embedding), renormalized by the covering mass when
+    ``renorm``. Same blocking and single streaming pass as
+    ``weighted_sum_masked_2d`` with one more (K, T) operand — still
+    memory-bound, every HBM byte touched once.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    K, N = x.shape
+    assert m.shape == (K, N) and mu.shape == (K, N), (m.shape, mu.shape)
+    block = min(block, N)
+    assert N % LANE == 0 and N % block == 0, (N, block)
+    grid = (N // block,)
+    out = pl.pallas_call(
+        functools.partial(_masked_mult_kernel, renorm=renorm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(x, w.reshape(K, 1), m, mu)
     return out[0]

@@ -7,7 +7,8 @@ from typing import Optional
 import jax.numpy as jnp
 
 from repro.kernels.fedavg.fedavg import (LANE, weighted_sum_2d,
-                                         weighted_sum_masked_2d)
+                                         weighted_sum_masked_2d,
+                                         weighted_sum_masked_mult_2d)
 
 
 def _flatten_pad(stacked):
@@ -43,20 +44,28 @@ def weighted_sum(stacked, w, *, block: int = 4096,
     return out[:n].reshape(shape)
 
 
-def weighted_sum_masked(stacked, w, masks, *, block: int = 4096,
+def weighted_sum_masked(stacked, w, masks, *, mult=None, block: int = 4096,
                         interpret: Optional[bool] = None,
                         renorm: bool = True):
-    """stacked, masks: (K, *shape); w: (K,) -> (*shape,) fp32.
+    """stacked, masks [, mult]: (K, *shape); w: (K,) -> (*shape,) fp32.
 
     Coverage-weighted aggregation: out = sum_k w_k m_k x_k, divided per
     coordinate by ``sum_k w_k m_k`` when ``renorm`` (coordinates covered
     by no client come back 0 — callers substitute their own fallback).
-    The zero padding keeps padded coordinates uncovered, so they slice
-    away cleanly.
+    With ``mult`` (per-coordinate duplication counts of the width
+    embedding) the client weight becomes ``w_k m_k / mult_k`` — the
+    multiplicity-aware variant, fused in the same streaming pass. The
+    zero padding keeps padded coordinates uncovered, so they slice away
+    cleanly (mult's zero padding is neutralized inside the kernel).
     """
     flat, n, shape = _flatten_pad(stacked)
     mflat, _, _ = _flatten_pad(masks)
-    out = weighted_sum_masked_2d(flat, w, mflat,
-                                 block=_block_for(flat.shape[1], block),
-                                 interpret=interpret, renorm=renorm)
+    blk = _block_for(flat.shape[1], block)
+    if mult is None:
+        out = weighted_sum_masked_2d(flat, w, mflat, block=blk,
+                                     interpret=interpret, renorm=renorm)
+    else:
+        muflat, _, _ = _flatten_pad(mult)
+        out = weighted_sum_masked_mult_2d(flat, w, mflat, muflat, block=blk,
+                                          interpret=interpret, renorm=renorm)
     return out[:n].reshape(shape)

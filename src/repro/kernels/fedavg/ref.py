@@ -10,9 +10,14 @@ def weighted_sum_ref(x, w):
                       x.astype(jnp.float32))
 
 
-def weighted_sum_masked_ref(x, w, m, *, renorm: bool = True):
-    """x, m: (K, N); w: (K,) -> (N,) fp32 — coverage-weighted average."""
+def weighted_sum_masked_ref(x, w, m, *, mult=None, renorm: bool = True):
+    """x, m [, mult]: (K, N); w: (K,) -> (N,) fp32 — coverage-weighted
+    average; with ``mult`` the per-coordinate client weight is
+    ``w_k m_k / mult_k`` (multiplicity-aware)."""
     wm = w.astype(jnp.float32)[:, None] * m.astype(jnp.float32)
+    if mult is not None:
+        mu = mult.astype(jnp.float32)
+        wm = wm / jnp.where(mu > 0, mu, 1.0)
     num = jnp.sum(wm * x.astype(jnp.float32), axis=0)
     if not renorm:
         return num

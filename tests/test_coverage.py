@@ -164,6 +164,77 @@ def test_weighted_sum_masked_kernel_matches_jnp(renorm):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
 
 
+@pytest.mark.parametrize("renorm", [True, False])
+def test_weighted_sum_masked_mult_kernel_matches_jnp(renorm):
+    """Multiplicity-weighted masked kernel (per-coordinate client weight
+    W_k m_k / mult_k, interpret mode on CPU) == the jnp fallback AND the
+    pure-jnp oracle to 1e-6, on lane-unaligned leaf shapes (pad path:
+    mult's zero padding must be neutral)."""
+    from repro.kernels.fedavg import ops as kops
+    from repro.kernels.fedavg.ref import weighted_sum_masked_ref
+    key = jax.random.PRNGKey(2)
+    trees, masks, mults = [], [], []
+    for k in range(3):
+        kk = jax.random.fold_in(key, k)
+        trees.append({
+            "w": jax.random.normal(kk, (7, 13)),
+            "b": jax.random.normal(jax.random.fold_in(kk, 1), (5,)),
+            "c": jax.random.normal(jax.random.fold_in(kk, 2), (2, 3, 128)),
+        })
+        masks.append(jax.tree.map(
+            lambda x: (jax.random.uniform(jax.random.fold_in(kk, 3),
+                                          x.shape) < 0.6).astype(jnp.float32),
+            trees[-1]))
+        mults.append(jax.tree.map(
+            lambda x: jax.random.randint(jax.random.fold_in(kk, 4),
+                                         x.shape, 1, 4).astype(jnp.float32),
+            trees[-1]))
+    stacked, smasks, smults = (stack_trees(trees), stack_trees(masks),
+                               stack_trees(mults))
+    w = client_weights([3, 1, 2])
+    a = fedavg_stacked(stacked, w, masks=smasks, mult=smults, renorm=renorm,
+                       use_kernel=True)
+    b = fedavg_stacked(stacked, w, masks=smasks, mult=smults, renorm=renorm,
+                       use_kernel=False)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+    # against the 2-D oracle, leaf by leaf
+    for name in ("w", "b", "c"):
+        x = stacked[name].reshape(3, -1)
+        m = smasks[name].reshape(3, -1)
+        mu = smults[name].reshape(3, -1)
+        ref = weighted_sum_masked_ref(x, jnp.asarray(w), m, mult=mu,
+                                      renorm=renorm)
+        got = kops.weighted_sum_masked(stacked[name], jnp.asarray(w),
+                                       smasks[name], mult=smults[name],
+                                       renorm=renorm)
+        np.testing.assert_allclose(np.asarray(got).reshape(-1),
+                                   np.asarray(ref), atol=1e-6)
+    # all-ones multiplicity reduces to the plain masked average
+    ones = jax.tree.map(jnp.ones_like, smults)
+    c = fedavg_stacked(stacked, w, masks=smasks, mult=ones, renorm=renorm,
+                       use_kernel=True)
+    d = fedavg_stacked(stacked, w, masks=smasks, renorm=renorm,
+                       use_kernel=True)
+    for la, lb in zip(jax.tree.leaves(c), jax.tree.leaves(d)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+
+
+def test_multiplicity_weight_splits_across_duplicates():
+    """The semantic in one picture: client A covers a coordinate pair as
+    TWO duplicates of one channel (mult 2), client B covers each with a
+    distinct channel (mult 1). With renorm, A's effective weight per
+    coordinate halves: out = (w_A/2·x_A + w_B·x_B) / (w_A/2 + w_B)."""
+    x = jnp.asarray([[2.0, 2.0], [6.0, 6.0]])
+    m = jnp.ones((2, 2))
+    mu = jnp.asarray([[2.0, 2.0], [1.0, 1.0]])
+    w = jnp.asarray([0.5, 0.5])
+    out = fedavg_stacked({"x": x}, w, masks={"x": m}, mult={"x": mu},
+                         use_kernel=False)["x"]
+    want = (0.25 * 2.0 + 0.5 * 6.0) / 0.75
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+
 def test_all_ones_masks_reduce_to_plain_fedavg():
     key = jax.random.PRNGKey(5)
     stacked = {"w": jax.random.normal(key, (4, 6, 9))}

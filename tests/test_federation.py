@@ -11,7 +11,8 @@ from repro.data import EASY, ClientSampler, image_classification, iid_partition
 from repro.fl import (Federation, FLRunConfig, FedADPStrategy, LoopBackend,
                       Participation, Simulator, UnifiedBackend,
                       checkpoint_path, load_round_checkpoint, make_strategy,
-                      restore_sampler_rngs, save_round_checkpoint)
+                      restore_sampler_rngs, save_round_checkpoint,
+                      unified_eligible, unified_ineligible_reason)
 
 FAMILY = VGGFamily()
 
@@ -226,15 +227,187 @@ def test_unified_matches_loop_per_method_and_participation():
                                                atol=1e-5, err_msg=tag)
 
 
+def _tiny_width_setup():
+    """A 3-client depth+WIDTH heterogeneous VGG cohort (ISSUE 4): the
+    unified engine must now be loop-equivalent here too — segment
+    operators, per-round embed seeds, multiplicity-aware coverage."""
+    import dataclasses
+    cfgs = [_tiny_vgg("w1", ((8,), (8,))),
+            _tiny_vgg("w2", ((8,), (12, 8))),
+            _tiny_vgg("w3", ((12, 8), (12, 8)))]
+    spec = dataclasses.replace(EASY, image_size=8, n_classes=4)
+    data = image_classification(spec, 96, seed=0)
+    test = image_classification(spec, 48, seed=9)
+    parts = iid_partition(96, len(cfgs), seed=0)
+
+    def samplers():
+        return [ClientSampler(data, p, round_fraction=0.5, batch_size=8,
+                              seed=i) for i, p in enumerate(parts)]
+
+    return cfgs, samplers, test
+
+
+def test_unified_matches_loop_width_vgg_matrix():
+    """The width acceptance matrix: every method (fedadp paper / fold /
+    global / coverage-aggregated, clustered, flexifed, standalone) x
+    participation (full, sample) runs on the UnifiedBackend and matches
+    the LoopBackend to 1e-4 on a WIDTH+depth heterogeneous VGG cohort.
+    The depth_only gate is deleted: the cohort is unified-eligible even
+    though widths differ."""
+    from repro.models import vgg as V
+    cfgs, mk, test = _tiny_width_setup()
+    assert not FAMILY.depth_only(cfgs)
+    assert FAMILY.segment_representable(cfgs)
+    strat = make_strategy("fedadp", FAMILY, cfgs, [32, 32, 32])
+    assert unified_eligible(strat, FAMILY, cfgs, mk())
+    assert unified_ineligible_reason(strat, FAMILY, cfgs, mk()) is None
+    gcfg = FAMILY.union(cfgs)
+    loopb = LoopBackend(FAMILY, cfgs, mk(), local_epochs=1, lr=0.05,
+                        momentum=0.9)
+    unib = UnifiedBackend(FAMILY, cfgs, mk(), local_epochs=1, lr=0.05,
+                          momentum=0.9)
+
+    def run(backend, method, participation, **kw):
+        backend.samplers = mk()
+        strategy = make_strategy(method, FAMILY, cfgs,
+                                 [s.n_samples for s in backend.samplers],
+                                 **kw)
+        fed = Federation(strategy, backend, rounds=2, eval_batch=test,
+                         participation=participation)
+        return fed.run(jax.random.PRNGKey(0))
+
+    matrix = [("fedadp", {}), ("fedadp", dict(narrow_mode="fold")),
+              ("fedadp", dict(filler="global")),
+              ("fedadp", dict(agg_mode="coverage")),
+              ("clustered", {}), ("flexifed", {}), ("standalone", {})]
+    participations = [("full", Participation()),
+                      ("sample", Participation.sample(0.6, seed=2))]
+    for method, kw in matrix:
+        for pname, part in participations:
+            tag = f"width/{method}/{kw or 'zero'}/{pname}"
+            rl = run(loopb, method, part, **kw)
+            ru = run(unib, method, part, **kw)
+            np.testing.assert_allclose(rl["history"], ru["history"],
+                                       atol=1e-4, err_msg=tag)
+            if method == "fedadp":
+                for a, b in zip(jax.tree.leaves(rl["global_params"]),
+                                jax.tree.leaves(ru["global_params"])):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32), np.asarray(b, np.float32),
+                        atol=1e-4, err_msg=tag)
+            else:
+                # loop params are client-space, engine params the embedded
+                # union-space views: compare client functions
+                for k in range(len(cfgs)):
+                    la = V.apply(rl["client_params"][k], cfgs[k],
+                                 test["x"][:8])
+                    lb = V.apply(ru["client_params"][k], gcfg, test["x"][:8])
+                    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                               atol=1e-4, err_msg=tag)
+
+
+def test_unified_matches_loop_width_transformer_ffn():
+    """Width-heterogeneous Transformer-FFN cohort (d_ff + depth differ):
+    fedadp loop vs unified to 1e-4 under full and sampled
+    participation."""
+    from repro.configs import get_config, reduced
+    from repro.core import TransformerFamily, tfamily
+    from repro.data.synthetic import lm_sequences
+    family = TransformerFamily()
+    base = reduced(get_config("glm4-9b"), n_units=2, d_model=32)
+    cfgs = [tfamily.make_variant(base, n_units=2, ffn_scale=0.5),
+            tfamily.make_variant(base, n_units=1, ffn_scale=1.0)]
+    assert not family.depth_only(cfgs)
+    assert family.segment_representable(cfgs)
+    seqs = np.asarray(lm_sequences(base.vocab_size, 48, 16, seed=0))
+    data = {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+    test = {"tokens": seqs[:8, :-1], "labels": seqs[:8, 1:]}
+    parts = iid_partition(48, len(cfgs), seed=0)
+
+    def mk():
+        return [ClientSampler(data, p, round_fraction=0.5, batch_size=8,
+                              seed=i) for i, p in enumerate(parts)]
+
+    strat = make_strategy("fedadp", family, cfgs, [24, 24])
+    assert unified_eligible(strat, family, cfgs, mk())
+    for pname, part in [("full", Participation()),
+                        ("sample", Participation.sample(0.5, seed=3))]:
+        out = {}
+        for kind, cls in (("loop", LoopBackend), ("unified", UnifiedBackend)):
+            b = cls(family, cfgs, mk(), local_epochs=1, lr=0.05, momentum=0.9)
+            strategy = make_strategy("fedadp", family, cfgs,
+                                     [s.n_samples for s in b.samplers])
+            out[kind] = Federation(strategy, b, rounds=2, eval_batch=test,
+                                   participation=part).run(
+                                       jax.random.PRNGKey(0))
+        np.testing.assert_allclose(out["loop"]["history"],
+                                   out["unified"]["history"], atol=1e-4,
+                                   err_msg=pname)
+        for a, b in zip(jax.tree.leaves(out["loop"]["global_params"]),
+                        jax.tree.leaves(out["unified"]["global_params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=1e-4,
+                                       err_msg=pname)
+
+
+def test_unified_ineligible_reason_names_the_gate():
+    """Every remaining loop-only condition gets a diagnosable reason;
+    eligible cohorts (including width-mixed ones) return None."""
+    cfgs, mk, _ = _tiny_width_setup()
+    strat = make_strategy("fedadp", FAMILY, cfgs, [32, 32, 32])
+    assert unified_ineligible_reason(strat, FAMILY, cfgs, mk()) is None
+
+    class OddStrategy:
+        name = "median-of-means"
+    assert "not a unified-engine method" in unified_ineligible_reason(
+        OddStrategy(), FAMILY, cfgs, mk())
+
+    # non-representable: widths diverge where a client is also shallower
+    bad = [_tiny_vgg("n1", ((16,),)), _tiny_vgg("n2", ((16, 8),))]
+    assert not FAMILY.segment_representable(bad)
+    assert "segment-representable" in unified_ineligible_reason(
+        make_strategy("fedadp", FAMILY, bad, [1, 1]), FAMILY, bad, mk()[:2])
+
+    ragged = mk()
+    ragged[0].batch_size = 4
+    assert "batch sizes" in unified_ineligible_reason(strat, FAMILY, cfgs,
+                                                      ragged)
+    frac = mk()
+    frac[1].round_fraction = 0.25
+    assert "fractions" in unified_ineligible_reason(strat, FAMILY, cfgs, frac)
+
+
+def test_simulator_auto_logs_fallback_reason_once(caplog):
+    """engine="auto" falling back to the loop is no longer silent: the
+    Simulator logs the ineligibility reason exactly once."""
+    cfgs, mk, test = _setup(archs=("vgg13", "vgg13"))
+    samplers = mk()
+    samplers[0].batch_size = 4            # ragged: keeps the loop
+    rc = FLRunConfig(method="standalone", rounds=0, local_epochs=1)
+    sim = Simulator(FAMILY, cfgs, samplers, rc, test)
+    with caplog.at_level("INFO", logger="repro.fl"):
+        assert sim._resolve_engine() == "loop"
+        assert sim._resolve_engine() == "loop"
+    msgs = [r.getMessage() for r in caplog.records
+            if "falls back" in r.getMessage()]
+    assert len(msgs) == 1
+    assert "batch sizes" in msgs[0]
+
+
 # ----------------------------------------------------------- config/shim
 def test_flrunconfig_eager_validation():
     for kw in (dict(method="fedsgd"), dict(filler="none"),
                dict(narrow_mode="widen"), dict(engine="gpu"),
                dict(coverage="fuzzy"), dict(agg_mode="median"),
                dict(participation=1.5), dict(participation=0.0),
-               dict(eval_every=0), dict(rounds=-1), dict(local_epochs=0)):
+               dict(eval_every=0), dict(rounds=-1), dict(local_epochs=0),
+               dict(embed_seed="7"), dict(embed_seed=1.5),
+               dict(embed_seed=True)):
         with pytest.raises(ValueError):
             FLRunConfig(**kw)
+    # embed_seed follows `seed` unless set explicitly
+    assert FLRunConfig(seed=3).resolved_embed_seed == 3
+    assert FLRunConfig(seed=3, embed_seed=11).resolved_embed_seed == 11
 
 
 def test_simulator_cfg_mutation_takes_effect():

@@ -1,0 +1,251 @@
+"""Segment operators (core/segments.py; ISSUE 4): the width embedding
+as an explicit linear map.
+
+Property-style via seeded parametrized loops (no ``hypothesis`` on this
+box):
+  * ``up()`` is affine and its linear part's pushforward-pullback
+    ``E Eᵀ`` equals the family's ``segment_spec`` gradient operator —
+    checked against jax autodiff of ``up`` itself (vjp then jvp),
+  * ``down(up(p))`` with ``narrow_mode="fold"`` is exact on width moves,
+  * the segment-mean projection is idempotent, commutes with the 0/1
+    mask projection, and equals ``up(down_fold(·))`` on covered
+    coordinates,
+  * multiplicity trees count To-Wider duplication exactly,
+  * the loop path builds coverage masks once per distinct embedding seed
+    (``FedADP._mask_cache`` keyed on the per-round seed).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.vgg_family import VGGConfig
+from repro.core import (FedADP, TransformerFamily, VGGFamily,
+                        coverage_and_filler, multiplicity, tfamily)
+from repro.core import segments as sg
+
+
+def _tiny(name, stages, classifier=(10,)):
+    return VGGConfig(name=name, stages=stages, classifier=classifier,
+                     n_classes=4, image_size=8)
+
+
+def _vgg_width_pair():
+    fam = VGGFamily()
+    cfgs = [_tiny("a", ((6,), (8, 8)), classifier=(10,)),
+            _tiny("b", ((6, 6), (12, 8)), classifier=(16,))]
+    return fam, cfgs, fam.union(cfgs)
+
+
+def _tfm_width_pair():
+    fam = TransformerFamily()
+    base = reduced(get_config("glm4-9b"), n_units=2, d_model=32)
+    cfgs = [tfamily.make_variant(base, n_units=2, ffn_scale=0.5),
+            tfamily.make_variant(base, n_units=1, ffn_scale=1.0)]
+    return fam, cfgs, fam.union(cfgs)
+
+
+def _tfm_rnn_pair():
+    """RG-LRU d_rnn width — loop-only today (segment_representable is
+    False), but its embedding is still linear and the spec must describe
+    it exactly (loop-side multiplicity in coverage aggregation)."""
+    fam = TransformerFamily()
+    base = reduced(get_config("recurrentgemma-9b"), n_units=1, d_model=32)
+    cfgs = [tfamily.make_variant(base, d_rnn=base.d_rnn // 2),
+            tfamily.make_variant(base)]
+    return fam, cfgs, fam.union(cfgs)
+
+
+def _tfm_moe_pair():
+    """MoE expert width d_ff_expert (+ d_ff) — ditto: linear, loop-only."""
+    fam = TransformerFamily()
+    base = reduced(get_config("mixtral-8x7b"), n_units=1, d_model=32)
+    cfgs = [tfamily.make_variant(base, ffn_scale=0.5),
+            tfamily.make_variant(base)]
+    return fam, cfgs, fam.union(cfgs)
+
+
+def _rand_like(shapes, seed):
+    key = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree.flatten(shapes)
+    out = [jax.random.normal(jax.random.fold_in(key, i), s.shape)
+           .astype(s.dtype) for i, s in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _max_diff(a, b, weight=None):
+    ws = (jax.tree.leaves(weight) if weight is not None
+          else [1.0] * len(jax.tree.leaves(a)))
+    return max(float(jnp.abs((x - y) * w).max()) for x, y, w in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b), ws))
+
+
+@pytest.mark.parametrize("maker", [_vgg_width_pair, _tfm_width_pair,
+                                   _tfm_rnn_pair, _tfm_moe_pair],
+                         ids=["vgg", "tffn", "trnn", "tmoe"])
+@pytest.mark.parametrize("seed", [0, 11])
+def test_grad_operator_matches_autodiff_of_up(maker, seed):
+    """``segment_spec``'s E Eᵀ (with the 0/1 mask handling depth) IS the
+    pushforward of the client-shape gradient: for any union cotangent g,
+    ``jvp(up)(vjp(up)(g))`` equals mask ∘ segment-project(g). This is the
+    exact condition under which stacked union-space SGD equals the
+    per-client loop."""
+    fam, cfgs, gcfg = maker()
+    for cfg in cfgs:
+        spec = fam.segment_spec(cfg, gcfg, seed=seed)
+        p = fam.init(jax.random.PRNGKey(1), cfg)
+
+        def up(q):
+            return fam.up(q, cfg, gcfg, seed=seed)
+
+        gshapes = jax.eval_shape(lambda k: fam.init(k, gcfg),
+                                 jax.random.PRNGKey(0))
+        g = _rand_like(gshapes, 7 + seed)
+        _, vjp = jax.vjp(up, p)
+        (pbar,) = vjp(g)
+        _, eet = jax.jvp(up, (p,), (pbar,))
+        mask, _ = coverage_and_filler(fam, cfg, gcfg, seed=seed)
+        got = jax.tree.map(lambda x, m: x * m,
+                           sg.project_client(g, spec, kind="grad"), mask)
+        want = jax.tree.map(lambda x, m: x * m, eet, mask)
+        assert _max_diff(want, got) < 1e-5
+
+
+@pytest.mark.parametrize("maker", [_vgg_width_pair, _tfm_width_pair,
+                                   _tfm_rnn_pair, _tfm_moe_pair],
+                         ids=["vgg", "tffn", "trnn", "tmoe"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_down_up_fold_roundtrip_exact_on_width(maker, seed):
+    """``down(up(p), mode="fold")`` with the same seed recovers the
+    client tree exactly: fold is the left inverse of the width
+    embedding (mean over duplicated copies, sum over split copies)."""
+    fam, cfgs, gcfg = maker()
+    for cfg in cfgs:
+        p = fam.init(jax.random.fold_in(jax.random.PRNGKey(2), seed), cfg)
+        back = fam.down(fam.up(p, cfg, gcfg, seed=seed), gcfg, cfg,
+                        seed=seed, mode="fold")
+        assert _max_diff(p, back) < 1e-6
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_segment_mean_projection_idempotent_and_commutes(seed):
+    """The mean projector P = E (EᵀE)⁻¹ Eᵀ is idempotent (P P = P),
+    commutes with the 0/1 mask projection (masks are constant along
+    segment axes), and equals ``up(down_fold(·))`` on strictly covered
+    coordinates."""
+    fam, cfgs, gcfg = _vgg_width_pair()
+    gshapes = jax.eval_shape(lambda k: fam.init(k, gcfg),
+                             jax.random.PRNGKey(0))
+    u = _rand_like(gshapes, 31 + seed)
+    for cfg in cfgs:
+        spec = fam.segment_spec(cfg, gcfg, seed=seed)
+        mask, _ = coverage_and_filler(fam, cfg, gcfg, seed=seed)
+        p1 = sg.project_client(u, spec, kind="mean")
+        p2 = sg.project_client(p1, spec, kind="mean")
+        assert _max_diff(p1, p2) < 1e-5
+        a = jax.tree.map(lambda x, m: x * m, p1, mask)
+        b = sg.project_client(jax.tree.map(lambda x, m: x * m, u, mask),
+                              spec, kind="mean")
+        assert _max_diff(a, b) < 1e-5
+        ud = fam.up(fam.down(u, gcfg, cfg, seed=seed, mode="fold"),
+                    cfg, gcfg, seed=seed)
+        assert _max_diff(ud, p1, weight=mask) < 1e-5
+
+
+def test_multiplicity_counts_duplication():
+    """Multiplicity = per-coordinate duplication counts: ones on leaves
+    the embedding never widens, per-segment group sizes on widened axes
+    (summing the inverse over a segment gives exactly 1 client channel),
+    and all-ones for a depth-only embedding."""
+    fam, cfgs, gcfg = _vgg_width_pair()
+    cfg = cfgs[0]                        # widened client
+    mult = multiplicity(fam, cfg, gcfg, seed=4)
+    spec = fam.segment_spec(cfg, gcfg, seed=4)
+    # every count is a positive integer >= 1
+    for leaf in jax.tree.leaves(mult):
+        arr = np.asarray(leaf)
+        assert np.all(arr >= 1) and np.allclose(arr, np.round(arr))
+    # on a widened conv's output axis the counts are the segment sizes:
+    # sum over union channels of 1/mult recovers the client channel count
+    path = ("stages", "s1", "c0", "b")
+    assert path in spec and not spec[path][0].out_role
+    counts = spec[path][0].counts
+    b_mult = np.asarray(mult["stages"]["s1"]["c0"]["b"])
+    np.testing.assert_array_equal(b_mult, counts)
+    assert float(np.sum(1.0 / b_mult)) == pytest.approx(
+        cfg.stages[1][0], abs=1e-6)
+    # depth-only: all ones
+    deep = [_tiny("d1", ((6,), (8,)), classifier=(10,)),
+            _tiny("d2", ((6,), (8, 8)), classifier=(10,))]
+    g2 = fam.union(deep)
+    m2 = multiplicity(fam, deep[0], g2, seed=9)
+    assert all(float(x.min()) == 1.0 and float(x.max()) == 1.0
+               for x in jax.tree.leaves(m2))
+
+
+def test_loop_mask_cache_one_build_per_distinct_seed(monkeypatch):
+    """Width-heterogeneous cohorts no longer rebuild coverage masks
+    every round: ``FedADP._mask_cache`` keys on the per-round embedding
+    seed, so repeated lookups of the same (round, client) hit the cache
+    and a new round triggers exactly one build per client."""
+    import repro.core.fedadp as fmod
+    fam, cfgs, gcfg = _vgg_width_pair()
+    algo = FedADP(fam, cfgs, [1, 1], agg_mode="coverage")
+    assert not algo._depth_only
+    calls = []
+    real = fmod.coverage_mask
+
+    def counting(*a, **kw):
+        calls.append(kw.get("seed"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(fmod, "coverage_mask", counting)
+    for _ in range(3):                       # same round, repeated lookups
+        algo.coverage_mask(0, 0)
+        algo.coverage_mask(0, 1)
+    assert len(calls) == 2                   # one build per distinct seed
+    algo.coverage_mask(1, 0)                 # new round = new seed
+    algo.coverage_mask(1, 0)
+    assert len(calls) == 3
+    assert len(set(calls)) == 3
+    # depth-only cohorts collapse every seed to one entry per (k, policy)
+    deep = [_tiny("d1", ((6,), (8,))), _tiny("d2", ((6,), (8, 8)))]
+    algo2 = FedADP(fam, deep, [1, 1])
+    calls.clear()
+    algo2.coverage_mask(0, 0)
+    algo2.coverage_mask(5, 0)                # different round, same mask
+    assert len(calls) == 1
+
+
+def test_mask_cache_is_bounded():
+    """The seed-keyed cache must not grow without bound over a long
+    run — it is an LRU capped at max(128, 4·K) (``netchange.seed_lru``,
+    the one sizing rule the loop and engine caches share)."""
+    fam, cfgs, _ = _vgg_width_pair()
+    algo = FedADP(fam, cfgs, [1, 1])
+    cap = max(128, 4 * len(cfgs))
+    for r in range(cap + 7):
+        algo.coverage_mask(r, 0)
+    assert len(algo._mask_cache) <= cap
+
+
+def test_stacked_project_matches_per_client():
+    """``project_stacked`` (the engine's in-step form, identity-padded
+    matrices stacked over K) == per-client ``project_client``."""
+    fam, cfgs, gcfg = _vgg_width_pair()
+    gshapes = jax.eval_shape(lambda k: fam.init(k, gcfg),
+                             jax.random.PRNGKey(0))
+    specs = [fam.segment_spec(c, gcfg, seed=2) for c in cfgs]
+    axes_map = sg.union_axes(specs, gshapes)
+    mats = [sg.client_matrices(s, axes_map, gshapes, kind="grad")
+            for s in specs]
+    stacked_mats = sg.stack_matrices(mats)
+    axes_str = {"/".join(p): a for p, a in axes_map.items()}
+    gs = [_rand_like(gshapes, 40 + i) for i in range(len(cfgs))]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *gs)
+    got = sg.project_stacked(stacked, axes_str, stacked_mats)
+    for k, (g, spec) in enumerate(zip(gs, specs)):
+        want = sg.project_client(g, spec, kind="grad")
+        gk = jax.tree.map(lambda x: x[k], got)
+        assert _max_diff(want, gk) < 1e-5
