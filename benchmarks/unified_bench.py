@@ -21,9 +21,20 @@ host platform (set BEFORE jax initializes — works standalone or with
 FEDADP_BENCH_ONLY=unified) and runs the unified path shard_map-ed over
 a client mesh.
 
+An ``agg_layout`` microbench (ISSUE 5) times the aggregation pass ALONE
+— ``fedavg_stacked`` on the union cohort with coverage masks + fallback
+— in both layouts: ``leaf`` (the per-leaf reference dispatch, one kernel
+launch per union leaf) vs ``plane`` (the packed ``core.plane`` path, the
+whole model in ONE fused kernel pass). Rows carry the ``agg_layout``
+column and a ``dispatches`` count; the engine rows are tagged with the
+layout their round actually runs (``plane`` for unified since ISSUE 5,
+``tree`` for the loop).
+
 Outputs:
   * CSV rows ``unified/K{K}/{loop|unified}/{agg_mode},us_per_round,...``
-    plus per-(K, agg_mode) speedups,
+    plus per-(K, agg_mode) speedups, and
+    ``unified/agg/K{K}/{leaf|plane}/{agg_mode},us_per_call,...`` for the
+    aggregation-layout microbench,
   * a machine-readable ``BENCH_unified.json`` (path override:
     FEDADP_BENCH_JSON) so the perf trajectory is diffable across PRs.
 
@@ -94,6 +105,63 @@ def _per_round(family, cfgs, samplers, test, engine: str, rounds: int
     return out
 
 
+def _agg_microbench(csv: List[str], records: List[dict], Ks, reps: int):
+    """Aggregation-dominated rounds, both layouts: per-leaf dispatch vs
+    the packed plane pass, on the union cohort's coverage average (masks
+    + fallback — the heaviest variant both layouts fuse)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.aggregation import (fedavg_stacked, global_shapes,
+                                        stack_trees, subset_weights)
+    from repro.fl.engine import UnifiedEngine
+
+    for K in Ks:
+        cfgs = [scaled(vgg(DEPTH_ARCHS[k % len(DEPTH_ARCHS)]), 0.125, 64)
+                for k in range(K)]
+        eng = UnifiedEngine(VGGFamily(), cfgs, [1] * K, method="fedadp",
+                            agg_mode="coverage")
+        shapes = global_shapes(eng.family, eng.global_cfg)
+        n_leaves = len(jax.tree.leaves(shapes))
+        key = jax.random.PRNGKey(0)
+
+        def rand(i):
+            leaves, td = jax.tree.flatten(shapes)
+            return jax.tree.unflatten(td, [
+                jax.random.normal(jax.random.fold_in(key, 97 * i + j),
+                                  s.shape).astype(s.dtype)
+                for j, s in enumerate(leaves)])
+
+        stacked = stack_trees([rand(i) for i in range(K)])
+        fallback = rand(K)
+        w = subset_weights([1] * K)
+        for agg_mode in AGG_MODES:
+            kw = ({} if agg_mode == "filler"
+                  else dict(masks=eng.cov_masks, fallback=fallback))
+            per = {}
+            for layout in ("leaf", "plane"):
+                out = fedavg_stacked(stacked, w, layout=layout, **kw)
+                jax.block_until_ready(out)          # pay compilation
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    out = fedavg_stacked(stacked, w, layout=layout, **kw)
+                jax.block_until_ready(out)
+                sec = (time.perf_counter() - t0) / reps
+                per[layout] = sec
+                dispatches = 1 if layout == "plane" else n_leaves
+                csv.append(f"unified/agg/K{K}/{layout}/{agg_mode},"
+                           f"{sec * 1e6:.0f},reps={reps}")
+                records.append({"cohort": "agg", "K": K, "engine": "agg",
+                                "agg_mode": agg_mode, "agg_layout": layout,
+                                "us_per_call": round(sec * 1e6),
+                                "dispatches": dispatches, "reps": reps})
+            csv.append(
+                f"unified/agg/K{K}/speedup/{agg_mode},"
+                f"{per['leaf'] / max(per['plane'], 1e-9):.2f},x")
+
+
 def main(csv: List[str]):
     import jax
     if _DEV and len(jax.devices()) != int(_DEV):
@@ -107,10 +175,13 @@ def main(csv: List[str]):
     full = os.environ.get("FEDADP_BENCH_FULL")
     if smoke:
         Ks, (n_per_client, batch, rounds) = (2,), (32, 16, 1)
+        agg_Ks, agg_reps = (2,), 5
     elif full:
         Ks, (n_per_client, batch, rounds) = (4, 8, 16), (256, 64, 5)
+        agg_Ks, agg_reps = (4, 8), 50
     else:
         Ks, (n_per_client, batch, rounds) = (4, 8, 16), (64, 32, 3)
+        agg_Ks, agg_reps = (4, 8), 30
     records = []
     for cohort, archs in COHORTS.items():
         prefix = "unified" if cohort == "depth" else f"unified/{cohort}"
@@ -126,12 +197,16 @@ def main(csv: List[str]):
                                f"{sec * 1e6:.0f},rounds={rounds}")
                     records.append({"cohort": cohort, "K": K,
                                     "engine": engine, "agg_mode": agg_mode,
+                                    "agg_layout": ("plane"
+                                                   if engine == "unified"
+                                                   else "tree"),
                                     "us_per_round": round(sec * 1e6),
                                     "rounds": rounds})
             for agg_mode in AGG_MODES:
                 csv.append(
                     f"{prefix}/K{K}/speedup/{agg_mode},"
                     f"{per['loop'][agg_mode] / max(per['unified'][agg_mode], 1e-9):.2f},x")
+    _agg_microbench(csv, records, agg_Ks, agg_reps)
     path = os.environ.get("FEDADP_BENCH_JSON", "BENCH_unified.json")
     with open(path, "w") as f:
         json.dump({"bench": "unified_bench",

@@ -1,1 +1,2 @@
-from repro.checkpoint.store import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    load_plane, load_pytree, save_plane, save_pytree)

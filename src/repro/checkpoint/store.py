@@ -4,6 +4,12 @@ Path-keyed (stable across pytree registration details), dtype-preserving,
 and atomic (write temp + rename). Sufficient for single-host jobs and the
 FL server state; a production multi-host deployment would swap in a
 sharded array-io backend behind the same two calls.
+
+``save_plane``/``load_plane`` persist a packed parameter plane
+(``core.plane``) as ONE contiguous array plus its ``PlaneSpec`` layout in
+the manifest — bit-exact resume (the plane is f32; the spec records each
+leaf's storage dtype so ``unpack`` restores the original tree), with the
+same temp+rename atomicity.
 """
 from __future__ import annotations
 
@@ -64,6 +70,38 @@ def save_pytree(path: str, tree, *, extra: Dict[str, Any] | None = None):
     np.savez(tmp, __manifest__=json.dumps(manifest),
              **{k.replace("/", "§"): _to_native(v) for k, v in flat.items()})
     os.replace(tmp, path)
+
+
+def save_plane(path: str, plane, spec, *, extra: Dict[str, Any] | None = None):
+    """Persist a packed ``(P,)`` or ``(K, P)`` plane + its ``PlaneSpec``:
+    one payload array, the layout (paths/shapes/dtypes) in the JSON
+    manifest. Round-trips bit-exactly (``load_plane``)."""
+    arr = np.asarray(plane)
+    manifest = {
+        "plane": {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                  "spec": spec.to_manifest()},
+        "extra": extra or {},
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, __manifest__=json.dumps(manifest),
+             __plane__=_to_native(arr))
+    os.replace(tmp, path)
+
+
+def load_plane(path: str):
+    """Load a plane checkpoint -> ``(plane, PlaneSpec, extra)``. The
+    returned array is bit-identical to what ``save_plane`` was given;
+    ``core.plane.unpack`` with the returned spec restores the tree."""
+    from repro.core.plane import PlaneSpec
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(str(data["__manifest__"]))
+    meta = manifest["plane"]
+    arr = _from_native(data["__plane__"], meta["dtype"])
+    assert list(arr.shape) == meta["shape"], (arr.shape, meta["shape"])
+    return arr, PlaneSpec.from_manifest(meta["spec"]), manifest["extra"]
 
 
 def load_pytree(path: str, like=None):

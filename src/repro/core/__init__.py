@@ -3,7 +3,11 @@ from repro.core.aggregation import (  # noqa: F401
     AGG_MODES, COVERAGE_POLICIES, client_weights, coverage_and_filler,
     coverage_mask, fedavg, fedavg_masked, fedavg_stacked, loosen,
     multiplicity, stack_trees, subset_weights)
-from repro.core.netchange import NARROW_MODES, round_embed_seed  # noqa: F401
+from repro.core.plane import (  # noqa: F401
+    PlaneSpec, cohort_planes, pack, pack_stacked, pack_trees,
+    ragged_leaf_error, requantize, unpack, unpack_stacked)
+from repro.core.netchange import (  # noqa: F401
+    KeyedCache, NARROW_MODES, round_embed_seed)
 from repro.core.fedadp import FedADP  # noqa: F401
 from repro.core.baselines import ClusteredFL, FlexiFed, Standalone, vgg_chain  # noqa: F401
 from repro.core.family import TransformerFamily, VGGFamily  # noqa: F401

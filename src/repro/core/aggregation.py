@@ -2,12 +2,19 @@
 place in the tree where "which coordinates does a client cover, and how
 do covered coordinates average" is defined.
 
-Two layouts:
+Two layouts in, ONE implementation underneath:
   * list-of-trees   — server-side aggregation of K client pytrees,
   * stacked tree    — every leaf has a leading K axis (the unified-space
-                      simulation layout); hot path backed by the Pallas
-                      ``fedavg`` kernels on TPU (jnp fallback elsewhere,
-                      selected automatically when ``use_kernel=None``).
+                      simulation layout).
+Both route through the packed parameter plane (``core.plane``): the
+stacked tree packs into one contiguous ``(K, P)`` f32 plane and the
+whole model aggregates in a single fused kernel pass
+(``kernels/fedavg.plane_agg`` — Pallas on TPU, jnp oracle elsewhere,
+selected automatically when ``use_kernel=None``), coverage masks /
+multiplicity / fallback riding the same pass as row/column-aligned
+planes. ``layout="leaf"`` keeps the per-leaf dispatch as the
+tree-shaped reference the plane path is pinned against
+(tests/test_plane.py, 1e-6).
 
 Coverage (HeteroFL, Diao et al. 2021; survey Fan et al. 2023): FedADP's
 Eq. 1-2 averages in the *unified* space, so every coordinate a client
@@ -33,11 +40,15 @@ contribute, with their weights renormalized over the covering subset
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import plane
+from repro.core.segments import path_keys as sg_path_keys
 
 COVERAGE_POLICIES = ("loose", "strict")
 AGG_MODES = ("filler", "coverage")
@@ -153,23 +164,44 @@ def coverage_mask(family, client_cfg, global_cfg, *,
 
 
 # ---------------------------------------------------------- aggregation
+AGG_LAYOUTS = ("plane", "leaf")
+
+
 def fedavg(trees: Sequence, weights) -> object:
-    """omega^{t+1} = sum_k W_k omega_k  (paper Eq. 1)."""
-    w = jnp.asarray(weights)
+    """omega^{t+1} = sum_k W_k omega_k  (paper Eq. 1) — ONE
+    implementation: stack + a single packed-plane pass (the old
+    per-leaf Python accumulate loop, with its per-client f32
+    round-trip, is gone)."""
+    w = jnp.asarray(weights, jnp.float32)
     assert len(trees) == w.shape[0]
+    return fedavg_stacked(stack_trees(trees), w)
 
-    def agg(*leaves):
-        acc = leaves[0].astype(jnp.float32) * w[0]
-        for i in range(1, len(leaves)):
-            acc = acc + leaves[i].astype(jnp.float32) * w[i]
-        return acc.astype(leaves[0].dtype)
 
-    return jax.tree.map(agg, *trees)
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "renorm", "use_kernel"))
+def _plane_pass(stacked, w, masks, mult, fallback, *, spec,
+                renorm: bool, use_kernel: bool):
+    """The whole aggregation as ONE jitted program keyed on the static
+    ``PlaneSpec``: pack (reshape/concat — fused away by XLA), one
+    ``plane_agg`` kernel dispatch, unpack (slice/reshape + dtype
+    restore). ``masks``/``mult``/``fallback`` may be ``None``."""
+    from repro.kernels.fedavg import ops as kops
+    x = plane.pack_stacked(stacked, spec, what="fedavg_stacked")
+    m = (plane.pack_stacked(masks, spec, what="fedavg_stacked/masks")
+         if masks is not None else None)
+    mu = (plane.pack_stacked(mult, spec, what="fedavg_stacked/mult")
+          if mult is not None else None)
+    fb = (plane.pack(fallback, spec, what="fedavg_stacked/fallback")
+          if fallback is not None else None)
+    out = kops.plane_agg(x, w, masks=m, mult=mu, fallback=fb,
+                         renorm=renorm, use_kernel=use_kernel)
+    return plane.unpack(out, spec)
 
 
 def fedavg_stacked(stacked, weights, *, masks=None, mult=None,
                    renorm: bool = True, fallback=None,
-                   use_kernel: Optional[bool] = None):
+                   use_kernel: Optional[bool] = None,
+                   layout: Optional[str] = None):
     """Aggregate a stacked tree: every leaf (K, ...) -> (...).
 
     Without ``masks`` this is Eq. 1 verbatim. With ``masks`` (a stacked
@@ -182,17 +214,41 @@ def fedavg_stacked(stacked, weights, *, masks=None, mult=None,
     ``W_k m_k / mult_k`` — the multiplicity-aware average for width
     embeddings, fused into the same kernel pass.
 
-    ``use_kernel=None`` auto-selects the Pallas kernel (compiled) on a TPU
-    backend and the jnp fallback everywhere else; pass an explicit bool to
-    force either path.
+    ``layout=None``/"plane" (the default) packs the whole tree into one
+    ``(K, P)`` plane and aggregates in a single fused kernel dispatch
+    (``core.plane`` + ``kernels/fedavg.plane_agg``); "leaf" is the
+    per-leaf reference dispatch the plane path is pinned against.
+    ``use_kernel=None`` auto-selects the Pallas kernel (compiled) on a
+    TPU backend and the jnp fallback everywhere else. Masks/mult/
+    fallback trees are validated leaf-by-leaf — a structure or shape
+    mismatch raises naming the offending leaf path.
     """
     w = jnp.asarray(weights, jnp.float32)
     if use_kernel is None:
         from repro.kernels.fedavg.fedavg import on_tpu
         use_kernel = on_tpu()
+    layout = layout or "plane"
+    if layout not in AGG_LAYOUTS:
+        raise ValueError(f"layout={layout!r}, expected one of "
+                         f"{AGG_LAYOUTS}")
+    if mult is not None:
+        assert masks is not None, "mult needs masks (coverage aggregation)"
+    if layout == "plane":
+        spec, _ = plane.PlaneSpec.from_stacked(stacked)
+        return _plane_pass(stacked, w, masks, mult, fallback, spec=spec,
+                           renorm=renorm, use_kernel=bool(use_kernel))
+    return _fedavg_stacked_leaf(stacked, w, masks=masks, mult=mult,
+                                renorm=renorm, fallback=fallback,
+                                use_kernel=use_kernel)
 
+
+def _fedavg_stacked_leaf(stacked, w, *, masks, mult, renorm, fallback,
+                         use_kernel):
+    """Per-leaf reference dispatch (one kernel launch per leaf) — the
+    tree-shaped semantics the packed plane path must reproduce to 1e-6;
+    kept for pinning tests and the dispatch-count benchmark
+    (``benchmarks/unified_bench.py`` ``agg_layout`` rows)."""
     if masks is None:
-        assert mult is None, "mult needs masks (coverage aggregation)"
         if use_kernel:
             from repro.kernels.fedavg import ops as kops
 
@@ -252,7 +308,8 @@ def fedavg_stacked(stacked, weights, *, masks=None, mult=None,
 
 def fedavg_masked(trees: Sequence, weights, masks: Sequence, *,
                   mult: Optional[Sequence] = None, renorm: bool = True,
-                  fallback=None, use_kernel: Optional[bool] = None):
+                  fallback=None, use_kernel: Optional[bool] = None,
+                  layout: Optional[str] = None):
     """List-of-trees layout of the coverage-weighted average: the
     HeteroFL rule — average each coordinate over only the clients that
     hold it (optionally multiplicity-aware via ``mult``, a list of
@@ -263,8 +320,29 @@ def fedavg_masked(trees: Sequence, weights, masks: Sequence, *,
                           masks=stack_trees(masks),
                           mult=stack_trees(mult) if mult is not None else None,
                           renorm=renorm, fallback=fallback,
-                          use_kernel=use_kernel)
+                          use_kernel=use_kernel, layout=layout)
 
 
 def stack_trees(trees: Sequence):
-    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *trees)
+    """Stack K same-structure trees on a new leading axis. Ragged input
+    raises ``ValueError`` naming the offending leaf path and the two
+    mismatched shapes (``plane.ragged_leaf_error`` — the same message
+    contract ``PlaneSpec`` uses) instead of an opaque broadcast error."""
+    trees = list(trees)
+    assert trees, "stack_trees: no trees"
+    flat0, td0 = jax.tree_util.tree_flatten_with_path(trees[0])
+    cols = [[leaf for _, leaf in flat0]]
+    for i, t in enumerate(trees[1:], start=1):
+        flat, td = jax.tree_util.tree_flatten_with_path(t)
+        if td != td0:
+            raise ValueError(
+                f"stack_trees: tree {i} structure does not match tree 0: "
+                f"{td} vs {td0}")
+        for (path, leaf), (_, leaf0) in zip(flat, flat0):
+            if tuple(leaf.shape) != tuple(leaf0.shape):
+                raise plane.ragged_leaf_error(
+                    f"stack_trees (tree {i} vs tree 0)",
+                    sg_path_keys(path), leaf.shape, leaf0.shape)
+        cols.append([leaf for _, leaf in flat])
+    leaves = [jnp.stack(ls, axis=0) for ls in zip(*cols)]
+    return jax.tree_util.tree_unflatten(td0, leaves)

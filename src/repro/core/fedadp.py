@@ -27,7 +27,6 @@ Coverage knobs (single-sourced in ``core.aggregation``):
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
@@ -35,7 +34,7 @@ from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
                                     client_weights, coverage_mask, fedavg,
                                     fedavg_masked, multiplicity,
                                     subset_weights)
-from repro.core.netchange import round_embed_seed, seed_lru
+from repro.core.netchange import KeyedCache, round_embed_seed
 
 
 @dataclass
@@ -59,14 +58,14 @@ class FedADP:
         self.weights = client_weights(self.n_samples)
         # coverage masks are seed-invariant on depth-only cohorts (the
         # embedding seed only steers To-Wider duplication), so they cache
-        # per (client, policy); width-heterogeneous masks are deterministic
-        # in the per-round seed, so they cache per (client, policy, seed)
-        # in a bounded LRU instead of being rebuilt every round
+        # per (client, policy) — the seed key collapses to None; width
+        # -heterogeneous masks are deterministic in the per-round seed, so
+        # they cache per (client, policy, seed). ONE bounded KeyedCache
+        # (shared sizing rule with the unified engine — netchange) holds
+        # both mask and multiplicity entries under namespaced keys; the
+        # per-round working set (≤ 2·K entries) never evicts itself.
         self._depth_only = self.family.depth_only(list(self.client_cfgs))
-        self._static_masks: dict = {}               # depth-only: unbounded,
-                                                    # seed-invariant entries
-        self._mask_cache: OrderedDict = OrderedDict()
-        self._mult_cache: OrderedDict = OrderedDict()
+        self._cache = KeyedCache(n_clients=len(self.client_cfgs))
 
     def init_global(self, key):
         return self.family.init(key, self.global_cfg)
@@ -78,8 +77,10 @@ class FedADP:
         # identical To-Wider mappings.
         return round_embed_seed(self.base_seed, round_idx, k)
 
-    def _cached(self, cache: OrderedDict, key, build):
-        return seed_lru(cache, key, build, n_clients=len(self.client_cfgs))
+    def cache_stats(self) -> dict:
+        """Hit/miss/size/bound of the embedding-artifact cache
+        (``netchange.KeyedCache``)."""
+        return self._cache.stats()
 
     def distribute(self, global_params, round_idx: int, k: int):
         """Step 1: NetChange(omega^t, omega_k)."""
@@ -111,14 +112,10 @@ class FedADP:
             return coverage_mask(self.family, self.client_cfgs[k],
                                  self.global_cfg, policy=policy, seed=seed)
 
-        if self._depth_only:
-            # seed-invariant: at most (clients × policies) entries, never
-            # evicted — a bounded cache would rebuild them on big cohorts
-            key = (k, policy)
-            if key not in self._static_masks:
-                self._static_masks[key] = build()
-            return self._static_masks[key]
-        return self._cached(self._mask_cache, (k, policy, seed), build)
+        # depth-only: seed-invariant, so the seed key collapses to None
+        # (one build per (client, policy), kept warm by every round's use)
+        key = ("mask", k, policy, None if self._depth_only else seed)
+        return self._cache.get(key, build)
 
     def coverage_multiplicity(self, round_idx: int, k: int):
         """Per-coordinate duplication counts of client k's expansion at
@@ -127,8 +124,8 @@ class FedADP:
         if self._depth_only:
             return None
         seed = self._seed(round_idx, k)
-        return self._cached(
-            self._mult_cache, (k, seed),
+        return self._cache.get(
+            ("mult", k, seed),
             lambda: multiplicity(self.family, self.client_cfgs[k],
                                  self.global_cfg, seed=seed))
 

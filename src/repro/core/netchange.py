@@ -33,6 +33,7 @@ server and clients derive identical expansions without communication.
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -54,21 +55,43 @@ def round_embed_seed(base_seed: int, round_idx: int, k: int) -> int:
     return (base_seed * 1_000_003 + round_idx * 997 + k) % (2 ** 31)
 
 
-def seed_lru(cache, key, build, *, n_clients: int = 0):
-    """Bounded get-or-build for seed-keyed embedding caches (coverage
-    masks, segment matrices): per-round seeds are unbounded over a run's
-    lifetime, so the maps must evict — LRU with ``max(128, 4·K)``
-    entries, so one round of a big cohort never evicts itself. One
-    helper — sizing rule included — shared by ``FedADP`` and
-    ``UnifiedEngine`` so the two seed caches cannot diverge."""
-    if key in cache:
-        cache.move_to_end(key)
-        return cache[key]
-    val = cache[key] = build()
-    maxsize = max(128, 4 * n_clients)
-    while len(cache) > maxsize:
-        cache.popitem(last=False)
-    return val
+class KeyedCache:
+    """Bounded get-or-build LRU for seed-keyed embedding artifacts
+    (coverage masks, segment matrices, packed coverage/multiplicity
+    rows): per-round seeds are unbounded over a run's lifetime, so the
+    maps must evict. ONE cache class, one sizing knob — ``max(128,
+    4·n_clients)`` entries by default, so one round of a big cohort
+    never evicts itself — shared by ``FedADP`` and ``UnifiedEngine``
+    (keys are namespaced tuples, e.g. ``("cov", k, seed)``), so the
+    loop and engine seed caches cannot diverge. ``stats()`` exposes
+    hit/miss/size/bound counters for tests and ops dashboards."""
+
+    def __init__(self, *, n_clients: int = 0, bound: Optional[int] = None):
+        self.bound = bound if bound is not None else max(128, 4 * n_clients)
+        self._d: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, build):
+        if key in self._d:
+            self.hits += 1
+            self._d.move_to_end(key)
+            return self._d[key]
+        self.misses += 1
+        val = self._d[key] = build()
+        while len(self._d) > self.bound:
+            self._d.popitem(last=False)
+        return val
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._d), "bound": self.bound}
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
 
 
 def dup_mapping(old: int, new: int, *, tag: str = "", seed: int = 0) -> np.ndarray:

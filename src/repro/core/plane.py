@@ -1,0 +1,282 @@
+"""Packed parameter plane — ONE contiguous layout for a whole cohort.
+
+FedADP's aggregation math (Eq. 1-2, coverage averaging) is per-coordinate
+and layout-agnostic: nothing in ``Σ_k W_k m_kj x_kj`` cares which leaf a
+coordinate came from. Yet every layer above the kernels used to walk the
+union pytree leaf-by-leaf — one kernel dispatch per leaf, four parallel
+trees (masks / multiplicity / filler / fallback) gathered and validated
+per round. This module packs the union tree into a single contiguous
+``(K, P)`` f32 *plane* plus a static, hashable :class:`PlaneSpec`
+describing where each leaf lives, so
+
+  * a cohort aggregates in ONE tiled kernel pass over the plane
+    (``kernels/fedavg.plane_agg`` — grid over P-tiles),
+  * the four parallel trees become four row-aligned planes, built once
+    per (cohort, seed),
+  * participant gathers become row slices (``plane[idx]``) instead of
+    per-leaf tree gathers,
+  * round state stays packed across the whole round and the jitted step
+    can donate the plane buffers.
+
+Dtype contract: the plane is always f32 — packing casts each leaf up,
+unpacking casts back to the leaf's recorded dtype (bf16 leaves ride the
+plane as exact f32 embeddings; accumulate in f32, cast back).
+``requantize`` reproduces the per-leaf storage rounding (cast through the
+leaf dtype and back) for paths that must match the tree-shaped reference
+step-for-step; it is a static no-op on all-f32 cohorts.
+
+``pack``/``unpack`` are pure jnp reshape/concat/slice — inside ``jit``
+they fuse away, so "packed" costs nothing at trace boundaries. The spec
+is hashable and equality-comparable, which makes it a valid static jit
+argument (``core.aggregation._plane_pass`` keys its compile cache on it).
+
+Ragged input raises ``ValueError`` naming the offending leaf path and the
+two mismatched shapes — the same message contract
+``aggregation.stack_trees`` uses (``ragged_leaf_error``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.segments import path_keys
+
+Path = Tuple[str, ...]
+
+_F32 = "float32"
+
+
+def ragged_leaf_error(what: str, path, got, want) -> ValueError:
+    """The ONE ragged-input message contract: name the leaf path and the
+    two mismatched shapes (shared by ``stack_trees`` and ``PlaneSpec``)."""
+    name = "/".join(path) if isinstance(path, tuple) else str(path)
+    return ValueError(
+        f"{what}: leaf '{name}' has shape {tuple(got)}, expected "
+        f"{tuple(want)} — trees must agree leaf-by-leaf")
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_keys(p), leaf) for p, leaf in flat], treedef
+
+
+@dataclass(frozen=True)
+class PlaneSpec:
+    """Static description of a packed plane: for each leaf (in flatten
+    order) its path, shape (WITHOUT the stacked K axis), dtype and column
+    offset. Hashable — safe as a static jit argument and as a cache key;
+    two specs are equal iff the packed layout is identical."""
+    paths: Tuple[Path, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    offsets: Tuple[int, ...]
+    size: int                    # P: total packed coordinates
+    treedef: Any                 # jax PyTreeDef (hashable)
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def _build(cls, items, treedef) -> "PlaneSpec":
+        paths, shapes, dtypes, offsets = [], [], [], []
+        off = 0
+        for path, shape, dtype in items:
+            paths.append(path)
+            shapes.append(tuple(int(s) for s in shape))
+            dtypes.append(str(dtype))
+            offsets.append(off)
+            off += int(np.prod(shape)) if shape else 1
+        return cls(tuple(paths), tuple(shapes), tuple(dtypes),
+                   tuple(offsets), off, treedef)
+
+    @classmethod
+    def from_tree(cls, tree) -> "PlaneSpec":
+        """Spec of an un-stacked tree (arrays or ShapeDtypeStructs)."""
+        flat, treedef = _flatten(tree)
+        if not flat:
+            raise ValueError("PlaneSpec: tree has no leaves")
+        return cls._build([(p, l.shape, l.dtype) for p, l in flat], treedef)
+
+    @classmethod
+    def from_stacked(cls, stacked) -> Tuple["PlaneSpec", int]:
+        """Spec of a stacked tree (every leaf ``(K, ...)``); returns
+        ``(spec, K)`` with the K axis stripped from the recorded shapes.
+        Ragged leading axes raise naming the offending leaf path."""
+        flat, treedef = _flatten(stacked)
+        if not flat:
+            raise ValueError("PlaneSpec: tree has no leaves")
+        k = None
+        items = []
+        for path, leaf in flat:
+            if leaf.ndim < 1:
+                raise ragged_leaf_error("PlaneSpec.from_stacked", path,
+                                        leaf.shape, ("K", "..."))
+            if k is None:
+                k = int(leaf.shape[0])
+            elif int(leaf.shape[0]) != k:
+                raise ragged_leaf_error(
+                    "PlaneSpec.from_stacked", path, leaf.shape,
+                    (k,) + tuple(leaf.shape[1:]))
+            items.append((path, leaf.shape[1:], leaf.dtype))
+        return cls._build(items, treedef), k
+
+    # -------------------------------------------------------- inspection
+    @property
+    def n_leaves(self) -> int:
+        return len(self.paths)
+
+    @property
+    def all_f32(self) -> bool:
+        return all(d == _F32 for d in self.dtypes)
+
+    def leaf_sizes(self) -> Tuple[int, ...]:
+        return tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+
+    def col_mask(self, pred) -> np.ndarray:
+        """0/1 ``(P,)`` f32 column mask selecting every leaf whose path
+        tuple satisfies ``pred`` — leaf-granular plane algebra (e.g. the
+        FlexiFed common-prefix columns) without touching the tree."""
+        out = np.zeros((self.size,), np.float32)
+        for path, off, n in zip(self.paths, self.offsets,
+                                self.leaf_sizes()):
+            if pred(path):
+                out[off:off + n] = 1.0
+        return out
+
+    def validate(self, tree, *, what: str = "tree", stacked: bool = False):
+        """Check ``tree`` matches this layout leaf-by-leaf; raises the
+        ragged-leaf contract error naming the path and both shapes."""
+        flat, _ = _flatten(tree)
+        if len(flat) != self.n_leaves:
+            raise ValueError(
+                f"{what}: {len(flat)} leaves, expected {self.n_leaves}")
+        for (path, leaf), spath, sshape in zip(flat, self.paths,
+                                               self.shapes):
+            if path != spath:
+                raise ValueError(f"{what}: leaf '{'/'.join(path)}' where "
+                                 f"'{'/'.join(spath)}' was expected — "
+                                 "tree structure does not match the spec")
+            got = tuple(leaf.shape)
+            if stacked:
+                if len(got) < 1 or got[1:] != sshape:
+                    raise ragged_leaf_error(what, path, got,
+                                            ("K",) + sshape)
+            elif got != sshape:
+                raise ragged_leaf_error(what, path, got, sshape)
+        return flat
+
+    # ------------------------------------------------------- serialization
+    def to_manifest(self) -> Dict[str, Any]:
+        """JSON-serializable layout (treedef reconstructed as nested
+        dicts on load — models in this repo are plain dict pytrees)."""
+        return {"paths": ["/".join(p) for p in self.paths],
+                "shapes": [list(s) for s in self.shapes],
+                "dtypes": list(self.dtypes)}
+
+    @classmethod
+    def from_manifest(cls, man: Dict[str, Any]) -> "PlaneSpec":
+        nested: Dict[str, Any] = {}
+        for path, shape, dtype in zip(man["paths"], man["shapes"],
+                                      man["dtypes"]):
+            cur = nested
+            parts = path.split("/")
+            for p in parts[:-1]:
+                cur = cur.setdefault(p, {})
+            cur[parts[-1]] = jax.ShapeDtypeStruct(tuple(shape),
+                                                  jnp.dtype(dtype))
+        return cls.from_tree(nested)
+
+
+# ----------------------------------------------------------------- packing
+def pack(tree, spec: PlaneSpec, *, what: str = "pack") -> jnp.ndarray:
+    """Flatten an un-stacked tree into a contiguous ``(P,)`` f32 plane in
+    the spec's layout (validates paths + shapes, error names the leaf)."""
+    flat = spec.validate(tree, what=what)
+    return jnp.concatenate([
+        jnp.asarray(leaf).reshape(-1).astype(jnp.float32)
+        for _, leaf in flat])
+
+
+def pack_stacked(stacked, spec: PlaneSpec, *,
+                 what: str = "pack_stacked") -> jnp.ndarray:
+    """Flatten a stacked tree (leaves ``(K, ...)``) into a ``(K, P)`` f32
+    plane; rows are clients, columns follow the spec layout."""
+    flat = spec.validate(stacked, what=what, stacked=True)
+    k = int(flat[0][1].shape[0])
+    for path, leaf in flat:
+        if int(leaf.shape[0]) != k:
+            raise ragged_leaf_error(what, path, leaf.shape,
+                                    (k,) + tuple(leaf.shape[1:]))
+    return jnp.concatenate([
+        jnp.asarray(leaf).reshape(k, -1).astype(jnp.float32)
+        for _, leaf in flat], axis=1)
+
+
+def pack_trees(trees: Sequence, spec: PlaneSpec, *,
+               what: str = "pack_trees") -> jnp.ndarray:
+    """Pack a list of un-stacked trees into a row-aligned ``(K, P)``
+    plane (row k = tree k) — ``stack_trees`` + ``pack_stacked`` fused."""
+    return jnp.stack([pack(t, spec, what=f"{what}[{i}]")
+                      for i, t in enumerate(trees)])
+
+
+def unpack(plane: jnp.ndarray, spec: PlaneSpec):
+    """``(P,)`` plane -> tree, restoring each leaf's shape and dtype."""
+    leaves = [plane[o:o + n].reshape(s).astype(jnp.dtype(d))
+              for o, n, s, d in zip(spec.offsets, spec.leaf_sizes(),
+                                    spec.shapes, spec.dtypes)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def unpack_stacked(plane: jnp.ndarray, spec: PlaneSpec):
+    """``(K, P)`` plane -> stacked tree (leading K on every leaf)."""
+    k = plane.shape[0]
+    leaves = [plane[:, o:o + n].reshape((k,) + s).astype(jnp.dtype(d))
+              for o, n, s, d in zip(spec.offsets, spec.leaf_sizes(),
+                                    spec.shapes, spec.dtypes)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def requantize(plane: jnp.ndarray, spec: PlaneSpec) -> jnp.ndarray:
+    """Round the plane's columns through their leaf storage dtypes (cast
+    down, cast back to f32) so packed training matches the tree-shaped
+    reference's per-step storage rounding. Static no-op when every leaf
+    is f32 — the common case costs nothing."""
+    if spec.all_f32:
+        return plane
+    pieces = []
+    for o, n, d in zip(spec.offsets, spec.leaf_sizes(), spec.dtypes):
+        seg = plane[..., o:o + n]
+        if d != _F32:
+            seg = seg.astype(jnp.dtype(d)).astype(jnp.float32)
+        pieces.append(seg)
+    return jnp.concatenate(pieces, axis=-1)
+
+
+# ------------------------------------------------- packed cohort builders
+def cohort_planes(family, client_cfgs: Sequence, global_cfg, *,
+                  seed: int = 0, coverage: str = "loose"):
+    """The four parallel per-client trees of a cohort embedding — strict
+    mask, filler, aggregation-coverage mask, multiplicity — as four
+    row-aligned ``(K, P)`` planes built ONCE per (cohort, seed), plus the
+    spec. Multiplicity is ``None`` for families without segment metadata
+    (depth-only semantics: every count is 1)."""
+    from repro.core.aggregation import (coverage_and_filler, global_shapes,
+                                        loosen, multiplicity)
+    spec = PlaneSpec.from_tree(global_shapes(family, global_cfg))
+    masks, fillers, covs, mults = [], [], [], []
+    spec_fn = getattr(family, "segment_spec", None)
+    for cfg in client_cfgs:
+        m, f = coverage_and_filler(family, cfg, global_cfg, seed=seed)
+        masks.append(pack(m, spec, what="cohort_planes/mask"))
+        fillers.append(pack(f, spec, what="cohort_planes/filler"))
+        cov = m if coverage == "strict" else loosen(m, f)
+        covs.append(pack(cov, spec, what="cohort_planes/cov"))
+        if spec_fn is not None:
+            mults.append(pack(multiplicity(family, cfg, global_cfg,
+                                           seed=seed),
+                              spec, what="cohort_planes/mult"))
+    return (spec, jnp.stack(masks), jnp.stack(fillers), jnp.stack(covs),
+            jnp.stack(mults) if mults else None)

@@ -13,8 +13,19 @@ train -> collect -> aggregate`` for one round:
                           whole round runs as one stacked vmapped XLA
                           program in the union architecture (shard_map
                           over the client axis when a mesh is given).
+                          The round is routed through the PACKED
+                          parameter plane (``core.plane``): state packs
+                          to a contiguous ``(K, P)`` buffer on round
+                          entry, participant gathers are row slices,
+                          aggregation is one fused kernel pass, and the
+                          jitted step donates the plane buffers — while
+                          the Federation-facing state (init_state /
+                          run_round results, checkpoints, client_views)
+                          stays the tree-shaped layout the loop
+                          reference owns, so the two backends remain
+                          interchangeable and checkpoint-compatible.
                           Partial participation gathers the selected
-                          slice of the stacked cohort and draws batches
+                          rows of the packed cohort and draws batches
                           from the participants' samplers only, so both
                           backends consume identical data streams
                           (DESIGN.md §7). Requires aligned client batch
@@ -106,8 +117,9 @@ class LoopBackend:
 
 class UnifiedBackend:
     """Cohort-parallel execution through ``UnifiedEngine`` (one stacked
-    program; loop-equivalent on segment-representable depth- and
-    width-heterogeneous cohorts — fl/engine.py docstring)."""
+    program over the packed parameter plane; loop-equivalent on
+    segment-representable depth- and width-heterogeneous cohorts —
+    fl/engine.py docstring)."""
     name = "unified"
 
     def __init__(self, family, client_cfgs: Sequence, samplers: List, *,
@@ -158,6 +170,18 @@ class UnifiedBackend:
                 use_kernel=self.use_kernel, mesh=self.mesh,
                 embed_seed=embed_seed)
         return self
+
+    @property
+    def plane_spec(self):
+        """The engine's packed layout (``core.plane.PlaneSpec``) — the
+        spec a deployment would hand to ``checkpoint.save_plane`` or a
+        wire-format encoder. ``None`` before ``bind``."""
+        return self.engine.plane_spec if self.engine is not None else None
+
+    def cache_stats(self) -> Optional[dict]:
+        """Embedding-artifact cache counters of the bound engine
+        (``netchange.KeyedCache``)."""
+        return self.engine.cache_stats() if self.engine is not None else None
 
     # ------------------------------------------------------- batch stream
     def _stacked_round_batches(self, selected: Sequence[int]

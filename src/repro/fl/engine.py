@@ -1,4 +1,4 @@
-"""Cohort-parallel unified FL engine (DESIGN.md §2, §5).
+"""Cohort-parallel unified FL engine (DESIGN.md §2, §5) — packed.
 
 NetChange embeds every heterogeneous client into the cohort's union
 architecture, so a whole federated round can run as ONE stacked XLA
@@ -11,33 +11,39 @@ program instead of a Python loop over clients:
     heterogeneity adds the *segment operators* of ``core.segments``:
     ``up()`` is linear (``u = E p + filler``), E duplicates client
     channels into union segments,
-  * local training = ``jax.vmap`` over the stacked (K, ...) parameter
-    tree with gradients transformed by ``E Eᵀ`` (per-axis segment sums,
-    1/c² on Net2Net split axes) then mask-projected — exactly the
+  * round state lives on the packed parameter PLANE (``core.plane``):
+    the union tree flattens once per round into a contiguous ``(K, P)``
+    f32 plane (a static ``PlaneSpec`` records the layout), the four
+    parallel coverage trees (mask / filler / aggregation-coverage /
+    multiplicity) become four row-aligned planes built once per
+    (cohort, seed), participant gathers are row slices (``plane[idx]``)
+    instead of per-leaf tree gathers, and round start is the fused
+    ``g·m + f·(1−m)`` on planes,
+  * local training = ``jax.vmap`` over the unpacked (K, ...) view of the
+    plane (pack/unpack are reshape/concat — XLA fuses them away) with
+    gradients transformed by ``E Eᵀ`` (per-axis segment sums, 1/c² on
+    Net2Net split axes) then mask-projected on the plane — exactly the
     pushforward of the client-shape gradient, so union-space SGD(+
-    momentum, from ``repro.optim``) *equals* client-shape SGD: the
-    stacked state stays ``E p_k`` throughout. Jitted ONCE per engine and
-    participating-subset size,
-  * the client axis is ``shard_map``-ed over a device mesh via the
-    ``sharding/rules.py`` machinery (``stacked_client_spec``) — local
-    training is embarrassingly parallel over K, so the shard-mapped body
-    needs no collectives,
-  * aggregation = ``fedavg_stacked`` (Pallas ``fedavg`` kernels on TPU,
-    jnp fallback elsewhere, auto-selected), with the coverage semantics
-    single-sourced in ``core.aggregation``: the strict mask is the
-    trainable-coordinate projection, the ``coverage`` policy (default
-    "loose", the loop reference's reading) decides what counts as
-    covered during aggregation, and ``agg_mode="coverage"`` switches
-    Eq. 1's filler-polluted average for the HeteroFL-style renormalized
-    average over covering clients — multiplicity-aware on width cohorts
-    (per-coordinate weight W_k/m_k, same single kernel pass).
+    momentum, from ``repro.optim``) *equals* client-shape SGD. The step
+    is jitted ONCE per engine and participating-subset size and DONATES
+    the plane buffers (params + optimizer state), so a round trains
+    in-place,
+  * the client axis (plane rows) is ``shard_map``-ed over a device mesh
+    via the ``sharding/rules.py`` machinery (``stacked_client_spec``) —
+    local training is embarrassingly parallel over K, so the
+    shard-mapped body needs no collectives,
+  * aggregation = ONE fused whole-plane kernel pass
+    (``kernels/fedavg.plane_agg``: weights, coverage masks,
+    multiplicity division, renormalization and fallback substitution in
+    a single tiled dispatch — not one per leaf), with the coverage
+    semantics single-sourced in ``core.aggregation``.
 
 Partial participation: ``run_round(state, batches, selected=...)`` runs
-the round on the gathered ``selected`` slice of the stacked tree —
-weights/masks renormalize over the subset, per-client state scatters
-back, cluster/prefix aggregation intersects with the participants — so
-the engine supports every participation schedule the loop reference
-does, bit-compatibly on its exact domain.
+the round on the ``selected`` ROWS of the plane — weights/masks
+renormalize over the subset, per-client rows scatter back,
+cluster/prefix aggregation intersects with the participants — so the
+engine supports every participation schedule the loop reference does,
+bit-compatibly on its exact domain.
 
 Faithfulness (verified in tests/test_unified.py + tests/test_federation.py
 against the per-client ``LoopBackend`` reference path; ``UnifiedBackend``
@@ -45,29 +51,32 @@ in fl/backends.py is the Federation-facing wrapper around this engine —
 DESIGN.md §7):
 
   * EXACT for depth-heterogeneous cohorts: the filler is a pointwise
-    identity in the forward pass (zero block under a pre-norm residual;
-    identity conv under ReLU on non-negative activations), masked
-    gradients keep it constant, and aggregating the stacked tree with
-    the filler in place reproduces the paper's zero/identity-filler
-    FedAvg literally.
+    identity in the forward pass, masked gradients keep it constant, and
+    aggregating the plane with the filler in place reproduces the
+    paper's zero/identity-filler FedAvg literally. Packing changes the
+    LAYOUT, not the math: every per-coordinate operation is identical to
+    the tree-shaped reference (f32 accumulation; non-f32 leaves are
+    re-quantized through their storage dtype each step —
+    ``plane.requantize``, a static no-op on all-f32 cohorts).
   * EXACT (to float tolerance) for width-heterogeneous cohorts whose
-    embedding is segment-representable (``family.segment_representable``
-    — the old ``depth_only`` gate is gone): fedadp rounds draw the SAME
-    per-(round, client) To-Wider mappings as the loop
-    (``netchange.round_embed_seed``), round start is the literal
-    ``up(down(·))`` under the strategy's ``narrow_mode``, training keeps
-    the stack in image(E) via the segment-projected gradients, and both
-    paths read coverage + multiplicity from ``core.aggregation``.
-    Per-client-state methods embed once at the fixed ``embed_seed`` (so
-    same-architecture clients share one mapping and cluster/prefix
-    averages commute with E).
+    embedding is segment-representable (``family.segment_representable``):
+    fedadp rounds draw the SAME per-(round, client) To-Wider mappings as
+    the loop (``netchange.round_embed_seed``), round start is the
+    literal ``up(down(·))`` under the strategy's ``narrow_mode`` (packed
+    row-by-row), training keeps the stack in image(E) via the
+    segment-projected gradients, and both paths read coverage +
+    multiplicity from ``core.aggregation``.
 
 Methods: ``fedadp`` (filler "zero" | "global"), ``clustered``,
-``flexifed`` (VGG chain), ``standalone``.
+``flexifed`` (VGG chain — the common prefix is a COLUMN mask on the
+plane, ``PlaneSpec.col_mask``), ``standalone``.
+
+All embedding artifacts (masks, segment matrices, coverage rows) live in
+ONE bounded ``netchange.KeyedCache`` shared-sizing with the loop's
+``FedADP`` cache; ``cache_stats()`` exposes its counters.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -76,13 +85,15 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import segments as sg
+from repro.core import plane, segments as sg
 from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
                                     client_weights, coverage_and_filler,
-                                    fedavg_stacked, global_shapes, loosen,
-                                    stack_trees, subset_weights)
+                                    global_shapes, loosen, stack_trees,
+                                    subset_weights)
 from repro.core.baselines import _cluster_ids
-from repro.core.netchange import NARROW_MODES, round_embed_seed, seed_lru
+from repro.core.netchange import (KeyedCache, NARROW_MODES,
+                                  round_embed_seed)
+from repro.kernels.fedavg import ops as kops
 from repro.optim import sgd
 from repro.sharding.rules import stacked_client_spec
 
@@ -103,7 +114,7 @@ def client_embedding(family, client_cfgs: Sequence, global_cfg, *,
 
 @dataclass
 class UnifiedEngine:
-    """Runs FL methods in the stacked unified space. See module docstring."""
+    """Runs FL methods in the packed unified space. See module docstring."""
     family: Any
     client_cfgs: Sequence[Any]
     n_samples: Sequence[int]
@@ -145,6 +156,9 @@ class UnifiedEngine:
                     "representable cohort (family.segment_representable); "
                     "use the loop backend for this cohort")
         self._gshapes = global_shapes(self.family, self.global_cfg)
+        # the packed layout: one static spec for every plane this engine
+        # touches (round state, masks, filler, coverage, multiplicity)
+        self.plane_spec = plane.PlaneSpec.from_tree(self._gshapes)
         # the static segment structure (which leaves/axes are widened) is
         # seed-invariant — only the matrix VALUES change per round seed
         if self._depth_only:
@@ -155,9 +169,10 @@ class UnifiedEngine:
                      for cfg in self.client_cfgs]
             self._axes_map = sg.union_axes(specs, self._gshapes)
         self._seg_axes = {"/".join(p): a for p, a in self._axes_map.items()}
-        self._mask_cache: Dict[int, Tuple] = {}        # per k: seed-invariant
-        self._seg_cache: OrderedDict = OrderedDict()   # per (k, seed)
-        self._cov_cache: OrderedDict = OrderedDict()   # per (k, seed)
+        # ONE bounded cache for every embedding artifact — masks, segment
+        # matrices, coverage/multiplicity rows, prefix column masks —
+        # sharing the sizing rule with the loop's FedADP cache
+        self._cache = KeyedCache(n_clients=len(self.client_cfgs))
         # fixed-seed cohort embedding: per-client-state methods live here
         # permanently; for fedadp it is the depth-only fast path (where
         # the embedding is seed-invariant anyway). The strict mask (and
@@ -168,38 +183,46 @@ class UnifiedEngine:
         self.masks = stack_trees([t[0] for t in trip])
         self.filler = stack_trees([t[1] for t in trip])
         self.cov_masks = stack_trees([t[2] for t in trip])
+        # ...and the same four parallel trees as row-aligned planes,
+        # packed once: all per-round mask algebra happens on these
+        self.masks_p = plane.pack_stacked(self.masks, self.plane_spec)
+        self.filler_p = plane.pack_stacked(self.filler, self.plane_spec)
+        self.cov_p = plane.pack_stacked(self.cov_masks, self.plane_spec)
         if self._depth_only:
             self._seg_mats0: Dict = {}
             self._mult0 = None
+            self.mult_p = None
         else:
             segs = [self._client_seg(k, self.embed_seed)
                     for k in range(len(self.client_cfgs))]
             self._seg_mats0 = sg.stack_matrices([s[0] for s in segs])
             self._mult0 = stack_trees([s[1] for s in segs])
+            self.mult_p = plane.pack_stacked(self._mult0, self.plane_spec)
         self.clusters = _cluster_ids(self.client_cfgs)
         if self.method == "flexifed":
             full = tuple(range(len(self.client_cfgs)))
-            self._prefix_cache: Dict[Tuple[int, ...], set] = {}
             self._prefix_paths = self._prefix_for(full)
         self._opt = sgd(self.lr, self.momentum)
         self._steps: Dict[int, Callable] = {}
 
     # ----------------------------------------------------------- embedding
-    def _lru(self, cache: OrderedDict, key, build):
-        return seed_lru(cache, key, build, n_clients=len(self.client_cfgs))
+    def cache_stats(self) -> dict:
+        """Hit/miss/size/bound of the embedding-artifact cache
+        (``netchange.KeyedCache`` — one cache, one bound)."""
+        return self._cache.stats()
 
     def _client_mask(self, k: int):
         """(strict mask, filler, cov) at the fixed ``embed_seed`` — the
         strict mask is seed-invariant always; filler and the loose cov
         reading are seed-invariant on depth-only cohorts (the only place
         the fixed filler/cov are used for fedadp)."""
-        if k not in self._mask_cache:
+        def build():
             mask, filler = coverage_and_filler(
                 self.family, self.client_cfgs[k], self.global_cfg,
                 seed=self.embed_seed)
             cov = mask if self.coverage == "strict" else loosen(mask, filler)
-            self._mask_cache[k] = (mask, filler, cov)
-        return self._mask_cache[k]
+            return (mask, filler, cov)
+        return self._cache.get(("mask", k), build)
 
     def _client_seg(self, k: int, seed: int):
         """(E Eᵀ matrices, multiplicity tree) for client k at one seed —
@@ -210,7 +233,7 @@ class UnifiedEngine:
             return (sg.client_matrices(spec, self._axes_map, self._gshapes,
                                        kind="grad"),
                     sg.multiplicity_tree(spec, self._gshapes))
-        return self._lru(self._seg_cache, (k, seed), build)
+        return self._cache.get(("seg", k, seed), build)
 
     def _client_cov(self, k: int, seed: int):
         """Aggregation-coverage mask at a round seed. Strict = the
@@ -224,15 +247,33 @@ class UnifiedEngine:
             mask, filler = coverage_and_filler(
                 self.family, self.client_cfgs[k], self.global_cfg, seed=seed)
             return loosen(mask, filler)
-        return self._lru(self._cov_cache, (k, seed), build)
+        return self._cache.get(("cov", k, seed), build)
+
+    def _client_cov_row(self, k: int, seed: int) -> jnp.ndarray:
+        """Client k's aggregation-coverage mask at a round seed, packed
+        to a ``(P,)`` row — cached so a repeated (round, client) costs a
+        dict hit, and the per-round plane assembly is one ``stack``."""
+        return self._cache.get(
+            ("covrow", k, seed),
+            lambda: plane.pack(self._client_cov(k, seed), self.plane_spec,
+                               what="cov_row"))
+
+    def _client_mult_row(self, k: int, seed: int) -> jnp.ndarray:
+        """Client k's multiplicity counts at a round seed as a packed
+        ``(P,)`` row (width cohorts only)."""
+        return self._cache.get(
+            ("multrow", k, seed),
+            lambda: plane.pack(self._client_seg(k, seed)[1],
+                               self.plane_spec, what="mult_row"))
 
     def _round_seed(self, round_idx: int, k: int) -> int:
         return round_embed_seed(self.embed_seed, round_idx, k)
 
     # ------------------------------------------------------------- step fn
     def _step_for(self, k_count: int):
-        """The stacked SGD step for a cohort (or participating subset) of
-        ``k_count`` clients — jitted exactly once per subset size."""
+        """The packed SGD step for a cohort (or participating subset) of
+        ``k_count`` clients — jitted exactly once per subset size, plane
+        buffers donated."""
         if k_count not in self._steps:
             self._steps[k_count] = self._build_step(k_count)
         return self._steps[k_count]
@@ -251,28 +292,39 @@ class UnifiedEngine:
 
         opt = self._opt
         seg_axes = self._seg_axes
+        spec = self.plane_spec
 
-        def step_core(params, opt_state, masks, seg_mats, batch, step_idx):
-            grads = jax.vmap(grads_one)(params, batch)
+        def step_core(sp, opt_state, masks_p, seg_mats, batch, step_idx):
+            # the plane unpacks to the stacked tree for the model's grad
+            # fn (reshape/concat only — fused away under jit), and the
+            # update itself happens back on the plane:
             # width: E Eᵀ per leaf keeps the update in image(E) and equal
-            # to the client-shape SGD step; depth: the 0/1 mask keeps the
-            # filler constant. The two commute (masks are constant along
-            # segment axes).
+            # to the client-shape SGD step; depth: the 0/1 mask row keeps
+            # the filler constant. The two commute (masks are constant
+            # along segment axes).
+            params = plane.unpack_stacked(sp, spec)
+            grads = jax.vmap(grads_one)(params, batch)
             grads = sg.project_stacked(grads, seg_axes, seg_mats)
-            grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype),
-                                 grads, masks)
-            return opt.update(grads, opt_state, params, step_idx)
+            gp = plane.pack_stacked(grads, spec) * masks_p
+            new_sp, new_state = opt.update(gp, opt_state, sp, step_idx)
+            # reproduce the tree path's per-step storage rounding for
+            # non-f32 leaves (static no-op on all-f32 cohorts)
+            return plane.requantize(new_sp, spec), new_state
 
         fn = step_core
         if self.mesh is not None:
-            spec = stacked_client_spec(self.mesh, self.client_axes, k_count)
-            if spec != P():
+            pspec = stacked_client_spec(self.mesh, self.client_axes, k_count)
+            if pspec != P():
                 # local training is independent per client: every operand
-                # carries the K axis, the body needs no collectives.
+                # carries the K axis (plane rows, mask rows, stacked
+                # matrices, batch), the body needs no collectives.
                 fn = shard_map(step_core, mesh=self.mesh,
-                               in_specs=(spec, spec, spec, spec, spec, P()),
-                               out_specs=(spec, spec), check_rep=False)
-        return jax.jit(fn)
+                               in_specs=(pspec, pspec, pspec, pspec, pspec,
+                                         P()),
+                               out_specs=(pspec, pspec), check_rep=False)
+        # the round state is consumed step-over-step: donating the plane
+        # and the optimizer-state plane lets XLA update them in place
+        return jax.jit(fn, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------- subsets
     def _resolve(self, selected) -> Optional[list]:
@@ -281,6 +333,13 @@ class UnifiedEngine:
             return None
         sel = list(selected)
         return None if sel == list(range(len(self.client_cfgs))) else sel
+
+    @staticmethod
+    def _rows(plane_arr, selected):
+        """Participant gather on a plane = ONE row slice."""
+        if plane_arr is None or selected is None:
+            return plane_arr
+        return plane_arr[jnp.asarray(list(selected))]
 
     @staticmethod
     def _gather(tree, selected):
@@ -300,21 +359,34 @@ class UnifiedEngine:
     def init_global(self, key):
         return self.family.init(key, self.global_cfg)
 
+    def _round_start_packed(self, gp: jnp.ndarray, selected=None
+                            ) -> jnp.ndarray:
+        """Depth-only round start, fused on planes: ``up(down(g))`` is
+        literally ``g·m + f·(1−m)`` there — one broadcast expression over
+        the gathered mask/filler rows instead of a per-leaf tree-map."""
+        m = self._rows(self.masks_p, selected)
+        f = self._rows(self.filler_p, selected)
+        return gp[None, :] * m + f * (1.0 - m)
+
     def round_start(self, global_params, selected=None, round_idx: int = 0):
         """Stacked per-client views of a global model: the unified-space
         equivalent of FedADP's distribute (To-Shallower/To-Narrower),
         restricted to the participating subset when given. Depth-only
-        cohorts use the fused mask/filler arithmetic (``up(down(g))`` is
-        literally ``g·m + f·(1−m)`` there); width cohorts run the
-        literal per-client ``up(down(g))`` at the round's seeds under
+        cohorts use the fused packed mask/filler arithmetic
+        (``_round_start_packed``); width cohorts run the literal
+        per-client ``up(down(g))`` at the round's seeds under
         ``narrow_mode`` — the same NetChange work the loop's distribute
         + collect would do, with training still stacked."""
         if self._depth_only:
-            masks = self._gather(self.masks, selected)
-            filler = self._gather(self.filler, selected)
-            return jax.tree.map(
-                lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
-                global_params, masks, filler)
+            gp = plane.pack(global_params, self.plane_spec)
+            return plane.unpack_stacked(
+                self._round_start_packed(gp, selected), self.plane_spec)
+        return plane.unpack_stacked(
+            self._round_start_width(global_params, selected, round_idx),
+            self.plane_spec)
+
+    def _round_start_width(self, global_params, selected, round_idx: int
+                           ) -> jnp.ndarray:
         ks = (list(range(len(self.client_cfgs))) if selected is None
               else list(selected))
         views = []
@@ -325,7 +397,7 @@ class UnifiedEngine:
                                     mode=self.narrow_mode)
             views.append(self.family.up(down, self.client_cfgs[k],
                                         self.global_cfg, seed=s))
-        return stack_trees(views)
+        return plane.pack_trees(views, self.plane_spec)
 
     def embed(self, client_params: Sequence):
         """Stack per-client (client-space) trees into the unified space
@@ -340,24 +412,53 @@ class UnifiedEngine:
         return jax.tree.map(lambda x: x[k], stacked)
 
     # ------------------------------------------------------------ training
+    def _train_packed(self, sp: jnp.ndarray, stacked_batches: Sequence,
+                      masks_p: jnp.ndarray, seg_mats) -> jnp.ndarray:
+        """One local-training round on the packed plane: fresh optimizer
+        state (matching the per-client loop, which re-inits SGD momentum
+        every round), one donated jitted step per stacked batch."""
+        step = self._step_for(int(sp.shape[0]))
+        opt_state = self._opt.init(sp)
+        for i, batch in enumerate(stacked_batches):
+            sp, opt_state = step(sp, opt_state, masks_p, seg_mats, batch,
+                                 jnp.asarray(i, jnp.int32))
+        return sp
+
     def train_round(self, stacked, stacked_batches: Sequence, *, masks=None,
                     seg_mats=None):
-        """Run one local-training round: fresh optimizer state (matching
-        the per-client loop, which re-inits SGD momentum every round), one
-        step per stacked batch. ``masks``/``seg_mats`` default to the
-        fixed-seed full-cohort embedding; pass gathered/per-round values
-        for partial or fedadp width rounds."""
-        masks = self.masks if masks is None else masks
+        """Tree-facing wrapper over ``_train_packed``: packs the stacked
+        tree (and mask tree, when given) once, trains on the plane,
+        unpacks once. ``masks``/``seg_mats`` default to the fixed-seed
+        full-cohort embedding; pass gathered/per-round values for
+        partial or fedadp width rounds."""
+        masks_p = (self.masks_p if masks is None
+                   else plane.pack_stacked(masks, self.plane_spec,
+                                           what="train_round/masks"))
         seg_mats = self._seg_mats0 if seg_mats is None else seg_mats
-        step = self._step_for(jax.tree.leaves(masks)[0].shape[0])
-        opt_state = self._opt.init(stacked)
-        for i, batch in enumerate(stacked_batches):
-            stacked, opt_state = step(
-                stacked, opt_state, masks, seg_mats, batch,
-                jnp.asarray(i, jnp.int32))
-        return stacked
+        sp = plane.pack_stacked(stacked, self.plane_spec,
+                                what="train_round")
+        return plane.unpack_stacked(
+            self._train_packed(sp, stacked_batches, masks_p, seg_mats),
+            self.plane_spec)
 
     # --------------------------------------------------------- aggregation
+    def _aggregate_packed(self, sp: jnp.ndarray, w, gp=None, cov_p=None,
+                          mult_p=None) -> jnp.ndarray:
+        """FedADP Eq. 1-2 over the (sub-)plane in ONE fused kernel pass
+        (``kernels/fedavg.plane_agg``) — weights already renormalized
+        over the participating subset by the caller."""
+        w = jnp.asarray(w, jnp.float32)
+        if self.agg_mode == "coverage":
+            assert gp is not None, \
+                'agg_mode="coverage" needs the current global params'
+            return kops.plane_agg(sp, w, masks=cov_p, mult=mult_p,
+                                  renorm=True, fallback=gp,
+                                  use_kernel=self.use_kernel)
+        if self.filler_mode == "global":
+            assert gp is not None
+            sp = sp * cov_p + gp[None, :] * (1.0 - cov_p)
+        return kops.plane_agg(sp, w, use_kernel=self.use_kernel)
+
     def aggregate_global(self, stacked, global_params=None, selected=None,
                          *, cov=None, mult=None):
         """FedADP Eq. 1-2 over the (sub-)stacked tree, weights
@@ -377,45 +478,55 @@ class UnifiedEngine:
         W_k/m_k per duplicated coordinate), server values where no
         participant covers.
 
-        ``cov``/``mult`` override the fixed-seed embedding's masks for
-        per-round-seeded fedadp width rounds.
+        Tree-facing wrapper: packs once, runs the ONE fused plane pass
+        (``_aggregate_packed``), unpacks once. ``cov``/``mult`` override
+        the fixed-seed embedding's masks for per-round-seeded fedadp
+        width rounds.
         """
+        spec = self.plane_spec
         w = subset_weights(self.n_samples, selected)
-        if self.agg_mode == "coverage":
-            assert global_params is not None, \
-                'agg_mode="coverage" needs the current global params'
-            if cov is None:
-                cov = self._gather(self.cov_masks, selected)
-            if mult is None and self._mult0 is not None:
-                mult = self._gather(self._mult0, selected)
-            return fedavg_stacked(stacked, w, masks=cov, mult=mult,
-                                  renorm=True, fallback=global_params,
-                                  use_kernel=self.use_kernel)
-        if self.filler_mode == "global":
-            assert global_params is not None
-            if cov is None:
-                cov = self._gather(self.cov_masks, selected)
-            stacked = jax.tree.map(
-                lambda p, m, g: p * m + g[None] * (1 - m),
-                stacked, cov, global_params)
-        return fedavg_stacked(stacked, w, use_kernel=self.use_kernel)
+        sp = plane.pack_stacked(stacked, spec, what="aggregate_global")
+        need_global = (self.agg_mode == "coverage"
+                       or self.filler_mode == "global")
+        gp = (plane.pack(global_params, spec, what="aggregate_global/"
+                         "global") if global_params is not None
+              and need_global else None)
+        cov_p = mult_p = None
+        if need_global:
+            if self.agg_mode == "coverage":
+                assert global_params is not None, \
+                    'agg_mode="coverage" needs the current global params'
+            cov_p = (plane.pack_stacked(cov, spec, what="aggregate_global/"
+                                        "cov") if cov is not None
+                     else self._rows(self.cov_p, selected))
+            if self.agg_mode == "coverage":
+                mult_p = (plane.pack_stacked(mult, spec,
+                                             what="aggregate_global/mult")
+                          if mult is not None
+                          else self._rows(self.mult_p, selected))
+        return plane.unpack(
+            self._aggregate_packed(sp, w, gp, cov_p, mult_p), spec)
 
-    def _agg_clustered(self, stacked, selected=None):
+    def _agg_clustered_p(self, sp: jnp.ndarray, selected=None
+                         ) -> jnp.ndarray:
+        """Per-cluster FedAvg on the plane: each (cluster ∩ participants)
+        aggregates with one row-sliced ``plane_agg`` pass and broadcasts
+        back onto its rows; non-participants keep their rows."""
         sel = (set(range(len(self.client_cfgs))) if selected is None
                else set(selected))
-        new = stacked
+        new = sp
         for ids in self.clusters.values():
             ids = [i for i in ids if i in sel]
             if not ids:
                 continue
             idx = jnp.asarray(ids)
-            sub = jax.tree.map(lambda x: x[idx], stacked)
-            agg = fedavg_stacked(sub, subset_weights(self.n_samples, ids),
+            agg = kops.plane_agg(sp[idx],
+                                 jnp.asarray(subset_weights(self.n_samples,
+                                                            ids),
+                                             jnp.float32),
                                  use_kernel=self.use_kernel)
-            new = jax.tree.map(
-                lambda n, a: n.at[idx].set(
-                    jnp.broadcast_to(a[None], (len(ids),) + a.shape)),
-                new, agg)
+            new = new.at[idx].set(
+                jnp.broadcast_to(agg[None, :], (len(ids), sp.shape[1])))
         return new
 
     def _flexifed_prefix_paths(self, sel):
@@ -441,30 +552,37 @@ class UnifiedEngine:
 
     def _prefix_for(self, sel) -> set:
         key = tuple(sel)
-        if key not in self._prefix_cache:
-            self._prefix_cache[key] = self._flexifed_prefix_paths(sel)
-        return self._prefix_cache[key]
+        return self._cache.get(("prefix", key),
+                               lambda: self._flexifed_prefix_paths(key))
 
-    def _agg_flexifed(self, stacked, selected=None):
+    def _prefix_cols(self, sel) -> jnp.ndarray:
+        """The FlexiFed common prefix as a 0/1 COLUMN mask on the plane
+        (``PlaneSpec.col_mask``) — prefix substitution becomes one fused
+        arithmetic expression instead of a per-leaf path walk."""
+        key = tuple(sel)
+
+        def build():
+            prefix = self._prefix_for(key)
+            return jnp.asarray(self.plane_spec.col_mask(
+                lambda path: any(path[:len(pp)] == pp for pp in prefix)))
+        return self._cache.get(("prefixcols", key), build)
+
+    def _agg_flexifed_p(self, sp: jnp.ndarray, selected=None
+                        ) -> jnp.ndarray:
         """Common prefix averaged over the PARTICIPANTS, remainder within
         (same-architecture cluster ∩ participants) — Clustered-Common.
-        Non-participants keep their parameters."""
+        Non-participants keep their rows."""
         sel = (list(range(len(self.client_cfgs))) if selected is None
                else list(selected))
         idx = jnp.asarray(sel)
-        glob = fedavg_stacked(jax.tree.map(lambda x: x[idx], stacked),
-                              subset_weights(self.n_samples, sel),
+        glob = kops.plane_agg(sp[idx],
+                              jnp.asarray(subset_weights(self.n_samples,
+                                                         sel), jnp.float32),
                               use_kernel=self.use_kernel)
-        clus = self._agg_clustered(stacked, sel)
-        prefix = self._prefix_for(sel)
-
-        def pick(path, g, c):
-            keys = tuple(str(getattr(p, "key", p)) for p in path)
-            if any(keys[:len(pp)] == pp for pp in prefix):
-                return c.at[idx].set(
-                    jnp.broadcast_to(g[None], (len(sel),) + g.shape))
-            return c
-        return jax.tree_util.tree_map_with_path(pick, glob, clus)
+        clus = self._agg_clustered_p(sp, sel)
+        cm = self._prefix_cols(sel)
+        sub = clus[idx]
+        return clus.at[idx].set(sub * (1.0 - cm) + glob[None, :] * cm)
 
     # ---------------------------------------------------------- full round
     def run_round(self, state, stacked_batches: Sequence, selected=None,
@@ -475,47 +593,61 @@ class UnifiedEngine:
         the same kind. ``stacked_batches`` leaves carry a leading axis of
         ``len(selected)`` (participants only, in ``selected`` order).
         ``round_idx`` seeds fedadp's per-round To-Wider mappings (the
-        loop's ``FedADP._seed`` numbers — identical on both paths)."""
+        loop's ``FedADP._seed`` numbers — identical on both paths).
+
+        The round state is packed ONCE on entry and unpacked ONCE on
+        exit; everything between — round start, training steps (donated
+        buffers), participant gathers (row slices), aggregation (one
+        fused kernel pass) — happens on the plane."""
         sel = self._resolve(selected)
+        spec = self.plane_spec
         if self.method == "fedadp":
+            w = subset_weights(self.n_samples, sel)
+            gp = plane.pack(state, spec, what="run_round/state")
+            need_cov = (self.agg_mode == "coverage"
+                        or self.filler_mode == "global")
             if self._depth_only:
-                # round_start's body with the already-gathered masks (one
-                # gather of the union-sized mask tree per round, not two)
-                masks = self._gather(self.masks, sel)
-                filler = self._gather(self.filler, sel)
-                start = jax.tree.map(
-                    lambda g, m, f: (g[None] * m + f * (1 - m)).astype(g.dtype),
-                    state, masks, filler)
-                trained = self.train_round(start, stacked_batches,
-                                           masks=masks, seg_mats={})
-                return self.aggregate_global(trained, state, selected=sel)
+                start = self._round_start_packed(gp, sel)
+                trained = self._train_packed(
+                    start, stacked_batches, self._rows(self.masks_p, sel),
+                    {})
+                cov_p = self._rows(self.cov_p, sel) if need_cov else None
+                out = self._aggregate_packed(
+                    trained, w, gp if need_cov else None, cov_p, None)
+                return plane.unpack(out, spec)
             ks = (list(range(len(self.client_cfgs))) if sel is None else sel)
             seeds = [self._round_seed(round_idx, k) for k in ks]
             segs = [self._client_seg(k, s) for k, s in zip(ks, seeds)]
-            masks = self._gather(self.masks, sel)     # seed-invariant
             seg_mats = sg.stack_matrices([s[0] for s in segs])
-            start = self.round_start(state, sel, round_idx)
-            trained = self.train_round(start, stacked_batches, masks=masks,
-                                       seg_mats=seg_mats)
-            need_cov = (self.agg_mode == "coverage"
-                        or self.filler_mode == "global")
-            cov = (stack_trees([self._client_cov(k, s)
+            start = self._round_start_width(state, sel, round_idx)
+            trained = self._train_packed(
+                start, stacked_batches,
+                self._rows(self.masks_p, sel),     # seed-invariant rows
+                seg_mats)
+            cov_p = (jnp.stack([self._client_cov_row(k, s)
                                 for k, s in zip(ks, seeds)])
-                   if need_cov else None)
-            mult = (stack_trees([s[1] for s in segs])
-                    if self.agg_mode == "coverage" else None)
-            return self.aggregate_global(trained, state, selected=sel,
-                                         cov=cov, mult=mult)
-        masks = self._gather(self.masks, sel)
+                     if need_cov else None)
+            mult_p = (jnp.stack([self._client_mult_row(k, s)
+                                 for k, s in zip(ks, seeds)])
+                      if self.agg_mode == "coverage" else None)
+            out = self._aggregate_packed(
+                trained, w, gp if need_cov else None, cov_p, mult_p)
+            return plane.unpack(out, spec)
+        # per-client-state methods: the stacked tree packs to (K, P),
+        # participants are row slices, and the state scatters back as rows
+        sp = plane.pack_stacked(state, spec, what="run_round/state")
+        masks_p = self._rows(self.masks_p, sel)
         seg_mats = self._gather(self._seg_mats0, sel)
-        trained = self.train_round(self._gather(state, sel),
-                                   stacked_batches, masks=masks,
-                                   seg_mats=seg_mats)
-        new = self._scatter(state, sel, trained)
+        trained = self._train_packed(self._rows(sp, sel), stacked_batches,
+                                     masks_p, seg_mats)
+        if sel is None:
+            new = trained
+        else:
+            new = sp.at[jnp.asarray(sel)].set(trained)
         if self.method == "clustered":
-            return self._agg_clustered(new, sel)
-        if self.method == "flexifed":
-            return self._agg_flexifed(new, sel)
-        if self.method == "standalone":
-            return new
-        raise ValueError(self.method)
+            new = self._agg_clustered_p(new, sel)
+        elif self.method == "flexifed":
+            new = self._agg_flexifed_p(new, sel)
+        elif self.method != "standalone":
+            raise ValueError(self.method)
+        return plane.unpack_stacked(new, spec)

@@ -26,6 +26,15 @@ rounds, participation schedules, callbacks, checkpointing — lives in
 in ``fl/backends.py``.  Strategies only define the method's math, by
 delegating to the ``repro.core`` implementations, so the literal
 algorithms stay the single source of truth.
+
+Layout is execution-owned, not strategy-owned: on the loop backend a
+strategy's math runs on the tree-shaped reference layout, while the
+unified backend routes the SAME math through the packed parameter plane
+(``core.plane`` — one contiguous ``(K, P)`` buffer per round, one fused
+aggregation pass). Strategies never see the plane; the aggregation
+primitives they delegate to (``core.aggregation.fedavg`` /
+``fedavg_masked``) pack internally, so Eq. 1 has exactly one
+implementation under both backends.
 """
 from __future__ import annotations
 

@@ -69,6 +69,76 @@ def _masked_mult_kernel(x_ref, w_ref, m_ref, mu_ref, o_ref, *, renorm: bool):
     o_ref[...] = num.astype(o_ref.dtype)
 
 
+def _plane_kernel(*refs, renorm: bool, has_mult: bool, has_fb: bool):
+    # The whole-plane fused aggregation pass: x/m[/mu]: (K, T) blocks,
+    # w: (K, 1), [fb: (1, T)], o: (1, T). Per coordinate
+    #   out = Σ_k (w_k m_k [/ mu_k]) x_k   [ / Σ_k w_k m_k/mu_k  if renorm]
+    # and coordinates NO client covers (Σ_k m_k == 0) take fb (or 0) —
+    # coverage average, multiplicity division, renormalization and
+    # fallback substitution in ONE streaming kernel, so a packed cohort
+    # aggregates in a single pallas dispatch instead of one per leaf.
+    it = iter(refs)
+    x = next(it)[...].astype(jnp.float32)
+    w = next(it)[...].astype(jnp.float32)           # (K, 1)
+    m = next(it)[...].astype(jnp.float32)
+    mu = next(it)[...].astype(jnp.float32) if has_mult else None
+    fb = next(it)[...].astype(jnp.float32) if has_fb else None
+    o_ref = next(it)
+    wm = w * m
+    if has_mult:
+        # mu <= 0 (zero padding) treated as 1 — harmless, m is 0 there
+        wm = wm / jnp.where(mu > 0, mu, 1.0)
+    num = jnp.sum(wm * x, axis=0, keepdims=True)
+    if renorm:
+        den = jnp.sum(wm, axis=0, keepdims=True)
+        num = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+    if has_fb:
+        covered = jnp.sum(m, axis=0, keepdims=True) > 0
+        num = jnp.where(covered, num, fb)
+    o_ref[...] = num.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "renorm"))
+def plane_agg_2d(x, w, m, mu=None, fb=None, *, block: int = 4096,
+                 interpret: Optional[bool] = None, renorm: bool = True):
+    """x, m [, mu]: (K, N); w: (K,); [fb: (N,)] -> (N,) fp32, N a
+    multiple of 128.
+
+    The tiled whole-plane coverage aggregation (``_plane_kernel``): one
+    grid over N/block P-tiles, the K axis VMEM-resident, every operand
+    streamed from HBM exactly once. ``mu`` (duplication counts) and
+    ``fb`` (fallback values for uncovered coordinates) are optional —
+    each adds one streamed operand to the SAME single pass.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    K, N = x.shape
+    assert m.shape == (K, N), (m.shape, x.shape)
+    block = min(block, N)
+    assert N % LANE == 0 and N % block == 0, (N, block)
+    row = pl.BlockSpec((K, block), lambda i: (0, i))
+    ins = [x, w.reshape(K, 1), m]
+    specs = [row, pl.BlockSpec((K, 1), lambda i: (0, 0)), row]
+    if mu is not None:
+        assert mu.shape == (K, N), (mu.shape, x.shape)
+        ins.append(mu)
+        specs.append(row)
+    if fb is not None:
+        assert fb.shape == (N,), (fb.shape, x.shape)
+        ins.append(fb.reshape(1, N))
+        specs.append(pl.BlockSpec((1, block), lambda i: (0, i)))
+    out = pl.pallas_call(
+        functools.partial(_plane_kernel, renorm=renorm,
+                          has_mult=mu is not None, has_fb=fb is not None),
+        grid=(N // block,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(*ins)
+    return out[0]
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def weighted_sum_2d(x, w, *, block: int = 4096,
                     interpret: Optional[bool] = None):

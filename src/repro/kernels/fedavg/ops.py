@@ -6,7 +6,9 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.kernels.fedavg.fedavg import (LANE, weighted_sum_2d,
+from repro.kernels.fedavg import ref
+from repro.kernels.fedavg.fedavg import (LANE, on_tpu, plane_agg_2d,
+                                         weighted_sum_2d,
                                          weighted_sum_masked_2d,
                                          weighted_sum_masked_mult_2d)
 
@@ -28,6 +30,60 @@ def _block_for(n_flat: int, block: int) -> int:
     while n_flat % blk:
         blk //= 2
     return max(blk, LANE) if n_flat >= LANE else n_flat
+
+
+def _pad_cols(a, pad: int):
+    if not pad:
+        return a
+    width = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, width)
+
+
+def plane_agg(plane, w, *, masks=None, mult=None, fallback=None,
+              renorm: bool = True, block: int = 4096,
+              interpret: Optional[bool] = None,
+              use_kernel: Optional[bool] = None):
+    """Aggregate a packed ``(K, P)`` parameter plane in ONE pass:
+    ``plane_agg(x, w) -> (P,)`` fp32.
+
+    The whole-cohort realization of ``fedavg_stacked``'s math on the
+    packed layout (``core.plane``): plain Eq. 1 without ``masks``;
+    coverage-weighted with them (renormalized over the covering subset
+    when ``renorm``, multiplicity-aware with ``mult``, uncovered
+    coordinates substituted from ``fallback``) — masks/mult/fallback are
+    row/column-aligned planes, and the entire union model aggregates in
+    a single tiled kernel dispatch instead of one per leaf.
+
+    ``use_kernel=None`` auto-selects the Pallas kernel on TPU and the
+    jnp oracle (``ref.plane_agg_ref``) elsewhere; the two agree to 1e-6
+    (tests/test_plane.py). The parameter axis is zero-padded up to a
+    ``block`` multiple so the grid tiles evenly — padded columns are
+    uncovered by construction and slice away.
+    """
+    if mult is not None:
+        assert masks is not None, "mult needs masks (coverage aggregation)"
+    if fallback is not None:
+        assert masks is not None, "fallback needs masks (uncovered coords)"
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if not use_kernel:
+        return ref.plane_agg_ref(plane, w, masks=masks, mult=mult,
+                                 fallback=fallback, renorm=renorm)
+    K, n = plane.shape
+    # lane-round the tile, then zero-pad the plane up to a tile multiple
+    # (full-size tiles even when P is lane-odd — no divisor hunting)
+    blk = -(-min(block, n) // LANE) * LANE
+    pad = (-n) % blk
+    x = _pad_cols(plane, pad)
+    if masks is None:
+        out = weighted_sum_2d(x, w, block=blk, interpret=interpret)
+        return out[:n]
+    out = plane_agg_2d(
+        x, w, _pad_cols(masks, pad),
+        _pad_cols(mult, pad) if mult is not None else None,
+        _pad_cols(fallback, pad) if fallback is not None else None,
+        block=blk, interpret=interpret, renorm=renorm)
+    return out[:n]
 
 
 def weighted_sum(stacked, w, *, block: int = 4096,

@@ -10,6 +10,23 @@ def weighted_sum_ref(x, w):
                       x.astype(jnp.float32))
 
 
+def plane_agg_ref(x, w, *, masks=None, mult=None, fallback=None,
+                  renorm: bool = True):
+    """x [, masks, mult]: (K, N); w: (K,); [fallback: (N,)] -> (N,) fp32.
+
+    Oracle for the fused whole-plane kernel (``fedavg.plane_agg_2d``):
+    coverage-weighted (optionally multiplicity-aware) average with the
+    fallback substituted on coordinates no client covers."""
+    if masks is None:
+        assert mult is None and fallback is None
+        return weighted_sum_ref(x, w)
+    out = weighted_sum_masked_ref(x, w, masks, mult=mult, renorm=renorm)
+    if fallback is not None:
+        covered = jnp.sum(masks.astype(jnp.float32), axis=0) > 0
+        out = jnp.where(covered, out, fallback.astype(jnp.float32))
+    return out
+
+
 def weighted_sum_masked_ref(x, w, m, *, mult=None, renorm: bool = True):
     """x, m [, mult]: (K, N); w: (K,) -> (N,) fp32 — coverage-weighted
     average; with ``mult`` the per-coordinate client weight is

@@ -1,0 +1,311 @@
+"""Packed parameter plane (core/plane.py; ISSUE 5).
+
+Property-style via seeded parametrized loops (no ``hypothesis`` on this
+box):
+  * pack/unpack round-trips bit-exactly across the vgg / transformer-FFN
+    / RG-LRU / MoE union architectures and across dtypes (a bf16 leaf
+    rides the f32 plane exactly: accumulate in f32, cast back),
+  * ragged input raises ``ValueError`` naming the offending leaf path
+    and the two mismatched shapes — the one message contract shared by
+    ``stack_trees`` and ``PlaneSpec``,
+  * the packed-plane aggregation path equals the per-leaf reference
+    dispatch to 1e-6 across masks × mult × fallback × renorm ×
+    use_kernel (``fedavg_stacked(layout="plane"|"leaf")``), and the
+    fused whole-plane kernel equals its jnp oracle,
+  * ``checkpoint.save_plane``/``load_plane`` round-trip bit-exactly,
+  * the engine's one ``KeyedCache`` exposes hit/miss stats and shares
+    the loop's sizing bound.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.vgg_family import VGGConfig
+from repro.core import (FedADP, TransformerFamily, VGGFamily, client_weights,
+                        fedavg, fedavg_stacked, stack_trees, tfamily)
+from repro.core import plane as pl
+from repro.core.aggregation import global_shapes
+from repro.checkpoint import load_plane, save_plane
+from repro.kernels.fedavg import ops as kops, ref as kref
+
+
+def _tiny(name, stages, classifier=(10,)):
+    return VGGConfig(name=name, stages=stages, classifier=classifier,
+                     n_classes=4, image_size=8)
+
+
+def _families():
+    vgg_fam = VGGFamily()
+    vgg_cfgs = [_tiny("a", ((6,), (8, 8))),
+                _tiny("b", ((6, 6), (12, 8)), classifier=(16,))]
+    tf = TransformerFamily()
+    ffn = reduced(get_config("glm4-9b"), n_units=2, d_model=32)
+    rnn = reduced(get_config("recurrentgemma-9b"), n_units=1, d_model=32)
+    moe = reduced(get_config("mixtral-8x7b"), n_units=1, d_model=32)
+    return {
+        "vgg": (vgg_fam, vgg_fam.union(vgg_cfgs)),
+        "tffn": (tf, tf.union([tfamily.make_variant(ffn, ffn_scale=0.5),
+                               tfamily.make_variant(ffn)])),
+        "trnn": (tf, tf.union([tfamily.make_variant(rnn,
+                                                    d_rnn=rnn.d_rnn // 2),
+                               tfamily.make_variant(rnn)])),
+        "tmoe": (tf, tf.union([tfamily.make_variant(moe, ffn_scale=0.5),
+                               tfamily.make_variant(moe)])),
+    }
+
+
+def _rand_like(shapes, seed):
+    key = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree.flatten(shapes)
+    out = [jax.random.normal(jax.random.fold_in(key, i), s.shape)
+           .astype(s.dtype) for i, s in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------------ round-trips
+@pytest.mark.parametrize("fkey", ["vgg", "tffn", "trnn", "tmoe"])
+def test_pack_unpack_roundtrip_families(fkey):
+    """Union architectures of every family round-trip bit-exactly (the
+    plane is f32; every leaf dtype here embeds exactly)."""
+    fam, gcfg = _families()[fkey]
+    shapes = global_shapes(fam, gcfg)
+    spec = pl.PlaneSpec.from_tree(shapes)
+    assert spec.size == sum(spec.leaf_sizes())
+    for seed in (0, 1, 2):
+        tree = _rand_like(shapes, seed)
+        back = pl.unpack(pl.pack(tree, spec), spec)
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path(tree),
+                jax.tree_util.tree_leaves_with_path(back)):
+            assert a.dtype == b.dtype, path
+            assert np.array_equal(np.asarray(a), np.asarray(b)), path
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_pack_stacked_roundtrip_and_spec(k):
+    fam, gcfg = _families()["vgg"]
+    shapes = global_shapes(fam, gcfg)
+    stacked = stack_trees([_rand_like(shapes, 10 + i) for i in range(k)])
+    spec, kk = pl.PlaneSpec.from_stacked(stacked)
+    assert kk == k and spec == pl.PlaneSpec.from_tree(shapes)
+    sp = pl.pack_stacked(stacked, spec)
+    assert sp.shape == (k, spec.size) and sp.dtype == jnp.float32
+    back = pl.unpack_stacked(sp, spec)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_leaf_rides_f32_plane_exactly():
+    """A bf16 leaf accumulates in f32 on the plane and casts back
+    bit-exactly (every bf16 value is exactly representable in f32);
+    ``requantize`` rounds plane columns through the storage dtype and is
+    a static no-op on all-f32 specs."""
+    tree = {"w": (jnp.arange(12, dtype=jnp.bfloat16) / 3).reshape(3, 4),
+            "b": jnp.linspace(-1, 1, 5, dtype=jnp.float32),
+            "i": jnp.arange(4, dtype=jnp.float32)}
+    spec = pl.PlaneSpec.from_tree(tree)
+    assert not spec.all_f32
+    sp = pl.pack(tree, spec)
+    assert sp.dtype == jnp.float32
+    back = pl.unpack(sp, spec)
+    assert back["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(back["w"], np.float32),
+                          np.asarray(tree["w"], np.float32))
+    assert np.array_equal(np.asarray(back["b"]), np.asarray(tree["b"]))
+    # requantize: bf16 columns snap to the bf16 grid, f32 columns untouched
+    shifted = sp + 1e-4
+    rq = pl.requantize(shifted, spec)
+    w_cols = slice(spec.offsets[spec.paths.index(("w",))],
+                   spec.offsets[spec.paths.index(("w",))] + 12)
+    np.testing.assert_array_equal(
+        np.asarray(rq[w_cols]),
+        np.asarray(shifted[w_cols].astype(jnp.bfloat16), np.float32))
+    f32_spec = pl.PlaneSpec.from_tree({"b": tree["b"]})
+    f32_plane = pl.pack({"b": tree["b"]}, f32_spec)
+    assert pl.requantize(f32_plane, f32_spec) is f32_plane
+
+
+# ---------------------------------------------------------- ragged errors
+def test_ragged_errors_name_leaf_and_shapes():
+    """ONE message contract: the offending leaf path and the two shapes,
+    raised by stack_trees, PlaneSpec.from_stacked and pack alike."""
+    a = {"conv": jnp.zeros((4, 3)), "fc": {"w": jnp.zeros((2, 2))}}
+    b = {"conv": jnp.zeros((4, 3)), "fc": {"w": jnp.zeros((2, 5))}}
+    with pytest.raises(ValueError, match=r"fc/w.*\(2, 5\).*\(2, 2\)"):
+        stack_trees([a, b])
+    with pytest.raises(ValueError, match="structure"):
+        stack_trees([a, {"conv": jnp.zeros((4, 3))}])
+    ragged = {"conv": jnp.zeros((2, 4, 3)), "fc": {"w": jnp.zeros((3, 2, 2))}}
+    with pytest.raises(ValueError, match=r"fc/w"):
+        pl.PlaneSpec.from_stacked(ragged)
+    spec = pl.PlaneSpec.from_tree(a)
+    with pytest.raises(ValueError, match=r"fc/w.*\(2, 5\).*\(2, 2\)"):
+        pl.pack(b, spec)
+    with pytest.raises(ValueError, match="structure"):
+        pl.pack({"conv": a["conv"], "fc": {"v": a["fc"]["w"]}}, spec)
+
+
+# ------------------------------------------------- plane == leaf dispatch
+def _cov_fixture(seed, K=4, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    shapes = {"w": (7, 13), "b": (5,), "c": (2, 3, 128)}
+    stacked = {n: jax.random.normal(jax.random.fold_in(key, i),
+                                    (K,) + s).astype(dtype)
+               for i, (n, s) in enumerate(shapes.items())}
+    masks = {n: (jax.random.uniform(jax.random.fold_in(key, 10 + i),
+                                    (K,) + s) > 0.35).astype(jnp.float32)
+             for i, (n, s) in enumerate(shapes.items())}
+    mult = {n: jnp.where(masks[n] > 0, 1.0 + (
+        jax.random.uniform(jax.random.fold_in(key, 20 + i),
+                           (K,) + s) > 0.5).astype(jnp.float32), 0.0)
+            for i, (n, s) in enumerate(shapes.items())}
+    fallback = {n: jax.random.normal(jax.random.fold_in(key, 30 + i),
+                                     s).astype(dtype)
+                for i, (n, s) in enumerate(shapes.items())}
+    w = client_weights(list(range(1, K + 1)))
+    return stacked, masks, mult, fallback, w
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("renorm", [True, False])
+def test_plane_equals_leaf_dispatch(use_kernel, renorm):
+    """The packed one-pass path == the per-leaf reference dispatch to
+    1e-6 across plain / masked / multiplicity / fallback aggregation."""
+    for seed in (0, 1):
+        stacked, masks, mult, fallback, w = _cov_fixture(seed)
+        cases = [dict(), dict(masks=masks, renorm=renorm),
+                 dict(masks=masks, mult=mult, renorm=renorm),
+                 dict(masks=masks, fallback=fallback, renorm=renorm),
+                 dict(masks=masks, mult=mult, fallback=fallback,
+                      renorm=renorm)]
+        for kw in cases:
+            a = fedavg_stacked(stacked, w, use_kernel=use_kernel,
+                               layout="plane", **kw)
+            b = fedavg_stacked(stacked, w, use_kernel=use_kernel,
+                               layout="leaf", **kw)
+            for (path, la), (_, lb) in zip(
+                    jax.tree_util.tree_leaves_with_path(a),
+                    jax.tree_util.tree_leaves_with_path(b)):
+                np.testing.assert_allclose(
+                    np.asarray(la), np.asarray(lb), atol=1e-6,
+                    err_msg=f"{path} {sorted(kw)}")
+
+
+def test_plane_preserves_leaf_dtype():
+    stacked, masks, *_ , w = _cov_fixture(3, dtype=jnp.bfloat16)
+    out = fedavg_stacked(stacked, w)
+    assert all(leaf.dtype == jnp.bfloat16 for leaf in jax.tree.leaves(out))
+
+
+def test_fedavg_list_routes_through_plane():
+    """Paper Eq. 1 has exactly ONE implementation: the list-of-trees API
+    equals the stacked plane pass (and the old per-leaf accumulate loop
+    is gone)."""
+    key = jax.random.PRNGKey(5)
+    trees = [{"w": jax.random.normal(jax.random.fold_in(key, i), (6, 5)),
+              "b": jax.random.normal(jax.random.fold_in(key, 9 + i), (3,))}
+             for i in range(4)]
+    w = client_weights([3, 1, 2, 2])
+    a = fedavg(trees, w)
+    b = fedavg_stacked(stack_trees(trees), w, layout="leaf")
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-6)
+
+
+@pytest.mark.parametrize("renorm", [True, False])
+def test_plane_agg_kernel_matches_ref(renorm):
+    """The fused whole-plane kernel (interpret mode on CPU) == the jnp
+    oracle to 1e-6, on a lane-odd P (exercises the pad-to-tile path)."""
+    key = jax.random.PRNGKey(0)
+    K, P = 4, 1000
+    x = jax.random.normal(key, (K, P))
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (K, P)) > 0.4
+         ).astype(jnp.float32)
+    mu = jnp.where(m > 0, 2.0, 0.0)
+    fb = jax.random.normal(jax.random.fold_in(key, 2), (P,))
+    for kw in [dict(), dict(masks=m), dict(masks=m, mult=mu),
+               dict(masks=m, fallback=fb),
+               dict(masks=m, mult=mu, fallback=fb)]:
+        a = kops.plane_agg(x, w, renorm=renorm, use_kernel=True, **kw)
+        b = kref.plane_agg_ref(x, w, renorm=renorm, **kw)
+        assert a.shape == (P,)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, err_msg=str(sorted(kw)))
+
+
+# ------------------------------------------------------------- col masks
+def test_col_mask_selects_leaf_columns():
+    tree = {"s0": {"c0": jnp.zeros((2, 3)), "c1": jnp.zeros((4,))},
+            "out": jnp.zeros((5,))}
+    spec = pl.PlaneSpec.from_tree(tree)
+    cm = spec.col_mask(lambda path: path[0] == "s0")
+    assert cm.shape == (spec.size,) and cm.sum() == 10
+    back = pl.unpack(jnp.asarray(cm), spec)
+    assert float(back["s0"]["c0"].min()) == 1.0
+    assert float(back["out"].max()) == 0.0
+
+
+# ------------------------------------------------------------ checkpoint
+def test_save_load_plane_bit_exact(tmp_path):
+    """(plane, PlaneSpec) persists bit-exactly — incl. a bf16 leaf whose
+    dtype the spec restores on unpack."""
+    tree = {"w": (jnp.arange(8, dtype=jnp.bfloat16) / 7).reshape(2, 4),
+            "b": jax.random.normal(jax.random.PRNGKey(0), (11,))}
+    spec = pl.PlaneSpec.from_tree(tree)
+    sp = pl.pack(tree, spec)
+    path = str(tmp_path / "plane.npz")
+    save_plane(path, sp, spec, extra={"round": 7})
+    arr, spec2, extra = load_plane(path)
+    assert extra == {"round": 7}
+    assert np.array_equal(np.asarray(sp), arr)          # bit-exact
+    assert (spec2.paths, spec2.shapes, spec2.dtypes, spec2.offsets) == \
+        (spec.paths, spec.shapes, spec.dtypes, spec.offsets)
+    back = pl.unpack(jnp.asarray(arr), spec2)
+    assert back["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(back["w"], np.float32),
+                          np.asarray(tree["w"], np.float32))
+    assert np.array_equal(np.asarray(back["b"]), np.asarray(tree["b"]))
+
+
+def test_stacked_plane_checkpoint_roundtrip(tmp_path):
+    fam, gcfg = _families()["vgg"]
+    shapes = global_shapes(fam, gcfg)
+    spec = pl.PlaneSpec.from_tree(shapes)
+    stacked = stack_trees([_rand_like(shapes, i) for i in range(3)])
+    sp = pl.pack_stacked(stacked, spec)
+    path = str(tmp_path / "cohort.npz")
+    save_plane(path, sp, spec)
+    arr, spec2, _ = load_plane(path)
+    assert np.array_equal(np.asarray(sp), arr)
+    back = pl.unpack_stacked(jnp.asarray(arr), spec2)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ cache stats
+def test_engine_cache_stats_and_shared_bound():
+    """The engine's embedding artifacts live in ONE KeyedCache with the
+    loop's sizing rule; repeated per-round lookups hit instead of
+    rebuilding, visible through ``cache_stats()``."""
+    from repro.fl.engine import UnifiedEngine
+    fam = VGGFamily()
+    cfgs = [_tiny("a", ((6,), (8, 8))),
+            _tiny("b", ((6, 6), (12, 8)), classifier=(16,))]
+    eng = UnifiedEngine(fam, cfgs, [1, 1], method="fedadp",
+                        agg_mode="coverage")
+    algo = FedADP(fam, cfgs, [1, 1], agg_mode="coverage")
+    assert eng.cache_stats()["bound"] == algo.cache_stats()["bound"] \
+        == max(128, 4 * len(cfgs))
+    before = eng.cache_stats()
+    r1 = eng._client_cov_row(0, 123)
+    mid = eng.cache_stats()
+    assert mid["misses"] > before["misses"]
+    r2 = eng._client_cov_row(0, 123)          # same (client, seed): a hit
+    after = eng.cache_stats()
+    assert after["hits"] == mid["hits"] + 1
+    assert after["misses"] == mid["misses"]
+    assert r1 is r2

@@ -12,7 +12,8 @@ box):
     coordinates,
   * multiplicity trees count To-Wider duplication exactly,
   * the loop path builds coverage masks once per distinct embedding seed
-    (``FedADP._mask_cache`` keyed on the per-round seed).
+    (the shared ``netchange.KeyedCache``, keyed on the per-round seed;
+    ``cache_stats()`` exposes its counters).
 """
 import jax
 import jax.numpy as jnp
@@ -186,9 +187,10 @@ def test_multiplicity_counts_duplication():
 
 def test_loop_mask_cache_one_build_per_distinct_seed(monkeypatch):
     """Width-heterogeneous cohorts no longer rebuild coverage masks
-    every round: ``FedADP._mask_cache`` keys on the per-round embedding
-    seed, so repeated lookups of the same (round, client) hit the cache
-    and a new round triggers exactly one build per client."""
+    every round: the mask entries of ``FedADP``'s ``KeyedCache`` key on
+    the per-round embedding seed, so repeated lookups of the same
+    (round, client) hit the cache and a new round triggers exactly one
+    build per client — visible in ``cache_stats()``."""
     import repro.core.fedadp as fmod
     fam, cfgs, gcfg = _vgg_width_pair()
     algo = FedADP(fam, cfgs, [1, 1], agg_mode="coverage")
@@ -205,10 +207,13 @@ def test_loop_mask_cache_one_build_per_distinct_seed(monkeypatch):
         algo.coverage_mask(0, 0)
         algo.coverage_mask(0, 1)
     assert len(calls) == 2                   # one build per distinct seed
+    stats = algo.cache_stats()
+    assert stats["misses"] == 2 and stats["hits"] == 4
     algo.coverage_mask(1, 0)                 # new round = new seed
     algo.coverage_mask(1, 0)
     assert len(calls) == 3
     assert len(set(calls)) == 3
+    assert algo.cache_stats()["misses"] == 3
     # depth-only cohorts collapse every seed to one entry per (k, policy)
     deep = [_tiny("d1", ((6,), (8,))), _tiny("d2", ((6,), (8, 8)))]
     algo2 = FedADP(fam, deep, [1, 1])
@@ -216,18 +221,22 @@ def test_loop_mask_cache_one_build_per_distinct_seed(monkeypatch):
     algo2.coverage_mask(0, 0)
     algo2.coverage_mask(5, 0)                # different round, same mask
     assert len(calls) == 1
+    assert algo2.cache_stats() == {"hits": 1, "misses": 1, "size": 1,
+                                   "bound": max(128, 4 * len(deep))}
 
 
 def test_mask_cache_is_bounded():
     """The seed-keyed cache must not grow without bound over a long
-    run — it is an LRU capped at max(128, 4·K) (``netchange.seed_lru``,
-    the one sizing rule the loop and engine caches share)."""
+    run — ``netchange.KeyedCache`` is an LRU capped at max(128, 4·K),
+    the ONE sizing rule the loop and engine caches share."""
     fam, cfgs, _ = _vgg_width_pair()
     algo = FedADP(fam, cfgs, [1, 1])
     cap = max(128, 4 * len(cfgs))
     for r in range(cap + 7):
         algo.coverage_mask(r, 0)
-    assert len(algo._mask_cache) <= cap
+    stats = algo.cache_stats()
+    assert stats["size"] <= cap and stats["bound"] == cap
+    assert len(algo._cache) <= cap
 
 
 def test_stacked_project_matches_per_client():
