@@ -41,7 +41,7 @@ def main(csv: List[str]):
     from repro.core.netchange import dup_mapping
     from repro.kernels.netchange import ref as nref
     R, old, new = 4096, 14336 // 8, 21504 // 8
-    xw = jax.random.normal(key, (R, old))
+    xw = jax.random.normal(key, (R, old))  # fedlint: ignore[FDL001] timing-only data; values irrelevant
     m = jnp.asarray(dup_mapping(old, new, tag="b"))
     sc = jnp.ones((new,), jnp.float32)
     g = jax.jit(nref.widen_ref)

@@ -1,0 +1,106 @@
+"""repro.analysis — static contract verification + JAX-aware lint (fedlint).
+
+FedADP's correctness rests on algebraic invariants (up/down round-trips,
+E·Eᵀ idempotence, coverage/multiplicity consistency, PlaneSpec layout
+identity) that the tier-1 suite only exercises dynamically, minutes at a
+time. This package proves the *static* half of those contracts in
+seconds — ``jax.eval_shape`` abstract evaluation, AST inspection, jaxpr
+introspection — with zero training steps executed, so it can gate every
+PR before the heavy tests run. Four passes:
+
+  * ``contracts``  — the architecture-matrix contract checker
+                     (``analysis.contracts``): every registry
+                     architecture × both families, under abstract
+                     evaluation only.
+  * ``lint``       — fedlint (``analysis.lint``): AST rules for JAX
+                     hazards the ruff gate cannot express (FDL001-004),
+                     with inline ``# fedlint: ignore[RULE]``
+                     suppressions.
+  * ``kernels``    — the Pallas kernel validator
+                     (``analysis.kernels_check``): grid/block
+                     divisibility, lane alignment, padded-column
+                     handling and an estimated VMEM footprint per
+                     backend budget, read off traced ``pallas_call``
+                     specs without launching anything.
+  * ``retrace``    — the jit-cache-miss detector (``analysis.retrace``):
+                     a context manager counting XLA compilations, used
+                     by tests to prove ``Federation.run`` compiles
+                     nothing after round 1. Not part of the default CLI
+                     run (it executes a real federation).
+
+Entry points: ``python -m repro.analysis`` and ``tools/fedlint.py``
+(same flags). Exit code 0 = no findings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One verified defect or contract violation.
+
+    ``where`` is a file path for lint findings and a logical location
+    (``family/cohort/client`` or ``kernel/case``) for the abstract
+    passes; ``line`` is 0 when there is no source position.
+    """
+    pass_name: str           # "contracts" | "lint" | "kernels" | "retrace"
+    rule: str                # e.g. "FDL001", "updown-shape", "vmem-budget"
+    where: str
+    line: int
+    msg: str
+
+    def format(self) -> str:
+        loc = f"{self.where}:{self.line}" if self.line else self.where
+        return f"{loc}: [{self.rule}] {self.msg}"
+
+
+@dataclass
+class Report:
+    """Aggregate of one analysis run: findings + per-pass case counts."""
+    findings: List[Finding] = field(default_factory=list)
+    checked: Dict[str, int] = field(default_factory=dict)   # pass -> cases
+
+    def extend(self, pass_name: str, findings: List[Finding],
+               n_cases: int) -> None:
+        self.findings.extend(findings)
+        self.checked[pass_name] = self.checked.get(pass_name, 0) + n_cases
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def summary_lines(self) -> List[str]:
+        out = []
+        for name, n in sorted(self.checked.items()):
+            bad = sum(1 for f in self.findings if f.pass_name == name)
+            status = "ok" if bad == 0 else f"{bad} finding(s)"
+            out.append(f"{name}: {n} case(s) checked — {status}")
+        return out
+
+
+PASSES: Tuple[str, ...] = ("contracts", "lint", "kernels")
+
+
+def run(passes: Optional[List[str]] = None, *, lint_roots=None,
+        quick: bool = False) -> Report:
+    """Run the requested passes (default: all static ones) and return
+    the aggregate :class:`Report`. Imports are deferred per pass so the
+    lint pass stays usable without a working jax install."""
+    report = Report()
+    for name in passes or list(PASSES):
+        if name == "contracts":
+            from repro.analysis import contracts
+            findings, n = contracts.check_all(quick=quick)
+        elif name == "lint":
+            from repro.analysis import lint
+            findings, n = lint.lint_roots(lint_roots)
+        elif name == "kernels":
+            from repro.analysis import kernels_check
+            findings, n = kernels_check.check_all()
+        else:
+            raise ValueError(f"unknown analysis pass {name!r}; known: "
+                             f"{PASSES}")
+        report.extend(name, findings, n)
+    return report

@@ -1,0 +1,46 @@
+"""CLI: ``python -m repro.analysis`` — run the static passes, exit 0 on
+a clean repo. ``tools/fedlint.py`` is the same entry point."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.analysis import PASSES, run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="Static contract verifier + JAX-aware lint (fedlint) "
+                    "for the FedADP stack. Exit code 0 = no findings.")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=PASSES, metavar="PASS",
+                    help="run only this pass (repeatable); default: all "
+                         f"of {', '.join(PASSES)}")
+    ap.add_argument("--lint-root", dest="lint_roots", action="append",
+                    metavar="PATH",
+                    help="file or directory for the lint pass "
+                         "(repeatable); default: src/")
+    ap.add_argument("--quick", action="store_true",
+                    help="contracts: check the VGG cohort + two "
+                         "transformer architectures instead of the full "
+                         "registry matrix")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    report = run(args.passes, lint_roots=args.lint_roots, quick=args.quick)
+    dt = time.perf_counter() - t0
+
+    for f in report.findings:
+        print(f.format())
+    for line in report.summary_lines():
+        print(line)
+    total = sum(report.checked.values())
+    status = "clean" if report.ok else f"{len(report.findings)} finding(s)"
+    print(f"repro.analysis: {total} case(s), {status}, {dt:.1f}s")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

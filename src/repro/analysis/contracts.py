@@ -1,0 +1,443 @@
+"""Static contract checker: the FedADP algebra, proven per architecture
+under abstract evaluation.
+
+For every architecture in ``models/registry.py`` (reduced to smoke
+dimensions, as a heterogeneous variant cohort under
+``TransformerFamily``) and for the paper's VGG cohort (scaled, under
+``VGGFamily``), verify:
+
+  * ``up``/``down``/``up(down(·))`` preserve tree structure, shapes and
+    dtypes — under ``jax.eval_shape``, both narrow modes, no FLOPs;
+  * ``segment_spec`` covers EXACTLY the width-differing axes of every
+    client-owned union leaf (no missing axis, no spurious one), and each
+    ``AxisSeg``'s ids/counts are consistent with the client extent;
+  * ``coverage_mask`` invariants: masks are 0/1, loose ⊇ strict, the
+    loose reading equals ``loosen(strict, filler)`` (i.e. parameter
+    landing sites and filler constants are disjoint), computed on
+    constant pushes of the tiny reduced configs — no model evaluation;
+  * ``multiplicity`` matches the segment metadata: counts are integers
+    ≥ 1, equal to the per-leaf product of segment sizes, 1 off the
+    spec's leaves, and > 1 only on strictly-covered coordinates;
+  * ``PlaneSpec`` pack → unpack → pack is the identity layout (abstract
+    for shapes/dtypes, exact at value level on all-f32 cohorts) and the
+    ``to_manifest``/``from_manifest`` serialization round-trips.
+
+Nothing here runs a training step or a forward pass; the whole registry
+matrix completes in seconds (acceptance: < 60 s).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import Finding
+from repro.core import plane, tfamily
+from repro.core.aggregation import (coverage_and_filler, coverage_mask,
+                                    global_shapes, loosen, multiplicity)
+from repro.core.family import TransformerFamily, VGGFamily
+from repro.core.segments import path_keys
+from repro.configs import get_config, reduced
+from repro.configs.vgg_family import PAPER_COHORT, scaled, vgg
+from repro.models.registry import arch_ids
+
+SEED = 7           # one fixed NetChange seed for the whole matrix
+NARROW_MODES = ("paper", "fold")
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One (family, cohort) cell of the contract matrix."""
+    name: str                 # e.g. "transformer/glm4-9b", "vgg/paper"
+    family: Any
+    client_cfgs: Tuple[Any, ...]
+
+
+# ------------------------------------------------------------ enumeration
+def transformer_cohort(arch: str) -> Case:
+    """A depth + width heterogeneous variant cohort of one registry
+    architecture, at smoke dimensions (``configs.reduced``). Prefers the
+    widest heterogeneity the family declares representable (depth+FFN),
+    falling back to depth-only for cohorts whose width knob lives
+    outside the unified domain (MoE expert width, d_rnn —
+    DESIGN.md §Arch-applicability)."""
+    fam = TransformerFamily()
+    base = reduced(get_config(arch), n_units=2, d_model=64)
+    variant = base
+    for kw in (dict(n_units=1, ffn_scale=0.5), dict(n_units=1), dict()):
+        variant = tfamily.make_variant(base, **kw)
+        if fam.segment_representable([variant, base]):
+            break
+    return Case(f"transformer/{arch}", fam, (variant, base))
+
+
+def vgg_cohort() -> Case:
+    """The paper's 8-architecture cohort at reduced scale (depth AND
+    width heterogeneity — the '-wider' variants widen a stage-4 conv)."""
+    cfgs = tuple(scaled(vgg(a), 0.125, 32) for a in PAPER_COHORT)
+    return Case("vgg/paper-x0.125", VGGFamily(), cfgs)
+
+
+def all_cases(*, quick: bool = False) -> List[Case]:
+    archs = arch_ids()[:2] if quick else arch_ids()
+    return [vgg_cohort()] + [transformer_cohort(a) for a in archs]
+
+
+# ------------------------------------------------------------- primitives
+def _flat_shapes(tree) -> List[Tuple[Tuple[str, ...], Tuple[int, ...], str]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_keys(p), tuple(l.shape), str(l.dtype)) for p, l in flat]
+
+
+def _diff_trees(what: str, got, want, *, case: str) -> List[Finding]:
+    """Structural + shape + dtype comparison of two (abstract) trees,
+    findings name the first offending leaves."""
+    out: List[Finding] = []
+    a, b = _flat_shapes(got), _flat_shapes(want)
+    paths_a = {p for p, _, _ in a}
+    paths_b = {p for p, _, _ in b}
+    for p in sorted(paths_b - paths_a):
+        out.append(Finding("contracts", what, case, 0,
+                           f"leaf '{'/'.join(p)}' missing from result"))
+    for p in sorted(paths_a - paths_b):
+        out.append(Finding("contracts", what, case, 0,
+                           f"unexpected leaf '{'/'.join(p)}' in result"))
+    want_by_path = {p: (s, d) for p, s, d in b}
+    for p, s, d in a:
+        if p not in want_by_path:
+            continue
+        ws, wd = want_by_path[p]
+        if s != ws:
+            out.append(Finding("contracts", what, case, 0,
+                               f"leaf '{'/'.join(p)}': shape {s}, "
+                               f"expected {ws}"))
+        elif d != wd:
+            out.append(Finding("contracts", what, case, 0,
+                               f"leaf '{'/'.join(p)}': dtype {d}, "
+                               f"expected {wd}"))
+    return out
+
+
+def _client_shapes(family, cfg):
+    return jax.eval_shape(lambda k: family.init(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------------- checks
+def check_updown(case: Case) -> List[Finding]:
+    """up, down, and up(down(·)) preserve structure/shapes/dtypes —
+    abstract evaluation only."""
+    out: List[Finding] = []
+    fam = case.family
+    union = fam.union(list(case.client_cfgs))
+    gshapes = global_shapes(fam, union)
+    for ci, cfg in enumerate(case.client_cfgs):
+        where = f"{case.name}/client{ci}"
+        cshapes = _client_shapes(fam, cfg)
+        up_shapes = jax.eval_shape(
+            lambda p: fam.up(p, cfg, union, seed=SEED), cshapes)
+        out += _diff_trees("up-shape", up_shapes, gshapes, case=where)
+        for mode in NARROW_MODES:
+            down_shapes = jax.eval_shape(
+                lambda p: fam.down(p, union, cfg, seed=SEED, mode=mode),
+                gshapes)
+            out += _diff_trees(f"down-shape[{mode}]", down_shapes, cshapes,
+                               case=where)
+            rt = jax.eval_shape(
+                lambda p: fam.up(
+                    fam.down(p, union, cfg, seed=SEED, mode=mode),
+                    cfg, union, seed=SEED),
+                gshapes)
+            out += _diff_trees(f"updown-shape[{mode}]", rt, gshapes,
+                               case=where)
+    return out
+
+
+def _depth_axes(path: Tuple[str, ...]) -> Tuple[int, ...]:
+    """Axes that encode DEPTH, not width, for a union leaf: the stacked
+    unit axis of transformer ``units/*`` leaves (depth embeds there as
+    extra rows, handled by zero-block padding, never by segments)."""
+    return (0,) if path and path[0] == "units" else ()
+
+
+def check_segment_spec(case: Case) -> List[Finding]:
+    """``segment_spec`` covers exactly the width-differing axes of every
+    client-owned leaf, and every AxisSeg is internally consistent."""
+    out: List[Finding] = []
+    fam = case.family
+    union = fam.union(list(case.client_cfgs))
+    gshapes = global_shapes(fam, union)
+    gflat = {p: s for p, s, _ in _flat_shapes(gshapes)}
+    for ci, cfg in enumerate(case.client_cfgs):
+        where = f"{case.name}/client{ci}"
+        spec = fam.segment_spec(cfg, union, seed=SEED)
+        cflat = {p: s for p, s, _ in _flat_shapes(_client_shapes(fam, cfg))}
+        # expected = width-differing axes of leaves the client owns
+        expected = set()
+        for p, cs in cflat.items():
+            gs = gflat.get(p)
+            if gs is None:
+                out.append(Finding(
+                    "contracts", "segment-spec", where, 0,
+                    f"client leaf '{'/'.join(p)}' has no union "
+                    "counterpart"))
+                continue
+            if len(cs) != len(gs):
+                out.append(Finding(
+                    "contracts", "segment-spec", where, 0,
+                    f"leaf '{'/'.join(p)}': client rank {len(cs)} != "
+                    f"union rank {len(gs)}"))
+                continue
+            for ax, (c, g) in enumerate(zip(cs, gs)):
+                if c != g and ax not in _depth_axes(p):
+                    expected.add((p, ax))
+        got = set()
+        for p, segs in spec.items():
+            gs = gflat.get(p)
+            if gs is None:
+                out.append(Finding(
+                    "contracts", "segment-spec", where, 0,
+                    f"spec names unknown leaf '{'/'.join(p)}'"))
+                continue
+            cs = cflat.get(p)
+            for seg in segs:
+                ax = seg.axis % len(gs)
+                got.add((p, ax))
+                ids = np.asarray(seg.ids)
+                if len(ids) != gs[ax]:
+                    out.append(Finding(
+                        "contracts", "segment-ids", where, 0,
+                        f"leaf '{'/'.join(p)}' axis {ax}: {len(ids)} ids "
+                        f"for union extent {gs[ax]}"))
+                    continue
+                n_segments = len(np.unique(ids))
+                if cs is not None and n_segments != cs[ax]:
+                    out.append(Finding(
+                        "contracts", "segment-ids", where, 0,
+                        f"leaf '{'/'.join(p)}' axis {ax}: {n_segments} "
+                        f"distinct segments for client extent {cs[ax]}"))
+                counts = seg.counts
+                if counts.min() < 1:
+                    out.append(Finding(
+                        "contracts", "segment-counts", where, 0,
+                        f"leaf '{'/'.join(p)}' axis {ax}: non-positive "
+                        "segment size"))
+                # each segment contributes exactly one client coordinate:
+                # sum over union positions of 1/c_j == #segments
+                total = float(np.sum(1.0 / counts))
+                if abs(total - n_segments) > 1e-6:
+                    out.append(Finding(
+                        "contracts", "segment-counts", where, 0,
+                        f"leaf '{'/'.join(p)}' axis {ax}: Σ 1/c_j = "
+                        f"{total:.4f} != {n_segments} segments — counts "
+                        "inconsistent with ids"))
+        for p, ax in sorted(expected - got):
+            out.append(Finding(
+                "contracts", "segment-coverage", where, 0,
+                f"width-differing axis {ax} of leaf '{'/'.join(p)}' is "
+                "not covered by segment_spec"))
+        for p, ax in sorted(got - expected):
+            out.append(Finding(
+                "contracts", "segment-coverage", where, 0,
+                f"segment_spec emits axis {ax} of leaf '{'/'.join(p)}' "
+                "where client and union extents agree"))
+    return out
+
+
+def check_coverage(case: Case) -> List[Finding]:
+    """Mask algebra on constant pushes (no model evaluation): masks are
+    0/1, loose ⊇ strict, loose == loosen(strict, filler), and landing
+    sites are disjoint from nonzero filler."""
+    out: List[Finding] = []
+    fam = case.family
+    union = fam.union(list(case.client_cfgs))
+    for ci, cfg in enumerate(case.client_cfgs):
+        where = f"{case.name}/client{ci}"
+        strict, filler = coverage_and_filler(fam, cfg, union, seed=SEED)
+        loose = coverage_mask(fam, cfg, union, policy="loose", seed=SEED)
+        derived = loosen(strict, filler)
+        for (path, s), (_, l), (_, d), (_, f) in zip(
+                *(jax.tree_util.tree_flatten_with_path(t)[0]
+                  for t in (strict, loose, derived, filler))):
+            name = "/".join(path_keys(path))
+            s, l, d, f = (np.asarray(x, np.float32) for x in (s, l, d, f))
+            if not np.isin(s, (0.0, 1.0)).all():
+                out.append(Finding("contracts", "mask-01", where, 0,
+                                   f"strict mask of '{name}' is not 0/1"))
+            if not np.isin(l, (0.0, 1.0)).all():
+                out.append(Finding("contracts", "mask-01", where, 0,
+                                   f"loose mask of '{name}' is not 0/1"))
+            if (l < s).any():
+                out.append(Finding(
+                    "contracts", "coverage-superset", where, 0,
+                    f"loose mask of '{name}' drops strictly-covered "
+                    "coordinates (loose ⊉ strict)"))
+            if (l != d).any():
+                out.append(Finding(
+                    "contracts", "coverage-loosen", where, 0,
+                    f"loose mask of '{name}' != loosen(strict, filler) — "
+                    "up(ones) landing sites overlap nonzero filler"))
+            if (s * f != 0.0).any():
+                out.append(Finding(
+                    "contracts", "coverage-disjoint", where, 0,
+                    f"'{name}': nonzero filler on a strictly-covered "
+                    "coordinate — up() is not linear + constant there"))
+    return out
+
+
+def check_multiplicity(case: Case) -> List[Finding]:
+    """``multiplicity`` agrees with the segment metadata leaf-by-leaf."""
+    out: List[Finding] = []
+    fam = case.family
+    union = fam.union(list(case.client_cfgs))
+    gshapes = global_shapes(fam, union)
+    for ci, cfg in enumerate(case.client_cfgs):
+        where = f"{case.name}/client{ci}"
+        spec = fam.segment_spec(cfg, union, seed=SEED)
+        mult = multiplicity(fam, cfg, union, seed=SEED)
+        strict, _ = coverage_and_filler(fam, cfg, union, seed=SEED)
+        gflat = {p: s for p, s, _ in _flat_shapes(gshapes)}
+        for (path, m), (_, s) in zip(
+                jax.tree_util.tree_flatten_with_path(mult)[0],
+                jax.tree_util.tree_flatten_with_path(strict)[0]):
+            keys = path_keys(path)
+            name = "/".join(keys)
+            m = np.asarray(m, np.float32)
+            s = np.asarray(s, np.float32)
+            if (m < 1).any() or not np.array_equal(m, np.round(m)):
+                out.append(Finding(
+                    "contracts", "multiplicity", where, 0,
+                    f"'{name}': multiplicity not an integer ≥ 1"))
+            segs = spec.get(keys, [])
+            expect = np.ones(gflat[keys], np.float32)
+            for seg in segs:
+                shape = [1] * len(gflat[keys])
+                shape[seg.axis % len(shape)] = -1
+                expect = expect * seg.counts.astype(np.float32).reshape(shape)
+            if not np.array_equal(m, expect):
+                out.append(Finding(
+                    "contracts", "multiplicity", where, 0,
+                    f"'{name}': multiplicity != product of segment "
+                    "sizes from segment_spec"))
+            if not segs and (m != 1).any():
+                out.append(Finding(
+                    "contracts", "multiplicity", where, 0,
+                    f"'{name}': multiplicity > 1 on a leaf with no "
+                    "segment metadata"))
+            # NOTE: m > 1 off the strict mask is fine — segment counts
+            # broadcast along the depth axis, and multiplicity is only
+            # consumed under the mask (weight = w·m_cov/mu). The binding
+            # invariant is that duplication never appears where the
+            # client owns nothing on a leaf WITHOUT depth padding:
+            if not _depth_axes(keys) and segs and \
+                    ((m > 1) & (s != 1)).any():
+                out.append(Finding(
+                    "contracts", "multiplicity", where, 0,
+                    f"'{name}': duplicated coordinate (m > 1) that the "
+                    "strict mask does not cover on a depth-free leaf"))
+    return out
+
+
+def check_plane(case: Case) -> List[Finding]:
+    """PlaneSpec layout identity + manifest round-trip for the cohort's
+    union tree."""
+    out: List[Finding] = []
+    fam = case.family
+    union = fam.union(list(case.client_cfgs))
+    gshapes = global_shapes(fam, union)
+    where = f"{case.name}/plane"
+    spec = plane.PlaneSpec.from_tree(gshapes)
+    sizes = spec.leaf_sizes()
+    total = sum(sizes)
+    if spec.size != total:
+        out.append(Finding("contracts", "plane-size", where, 0,
+                           f"spec.size {spec.size} != Σ leaf sizes {total}"))
+    off = 0
+    for o, n in zip(spec.offsets, sizes):
+        if o != off:
+            out.append(Finding("contracts", "plane-offsets", where, 0,
+                               f"offset {o} != running total {off} — "
+                               "leaves overlap or leave gaps"))
+            break
+        off += n
+    # abstract: pack -> (P,) f32; unpack -> the global tree; pack again
+    packed = jax.eval_shape(lambda t: plane.pack(t, spec), gshapes)
+    if tuple(packed.shape) != (spec.size,) or packed.dtype != jnp.float32:
+        out.append(Finding("contracts", "plane-pack", where, 0,
+                           f"pack: {packed.shape}/{packed.dtype}, expected "
+                           f"({spec.size},)/float32"))
+    unpacked = jax.eval_shape(
+        lambda x: plane.unpack(x, spec),
+        jax.ShapeDtypeStruct((spec.size,), jnp.float32))
+    out += _diff_trees("plane-unpack", unpacked, gshapes, case=where)
+    repacked = jax.eval_shape(
+        lambda x: plane.pack(plane.unpack(x, spec), spec),
+        jax.ShapeDtypeStruct((spec.size,), jnp.float32))
+    if tuple(repacked.shape) != (spec.size,):
+        out.append(Finding("contracts", "plane-roundtrip", where, 0,
+                           f"pack∘unpack: {repacked.shape} != "
+                           f"({spec.size},)"))
+    # exact identity at value level on all-f32 layouts (a handful of
+    # reshape/concat dispatches on a small vector — no model math)
+    if spec.all_f32:
+        x = jnp.arange(spec.size, dtype=jnp.float32)
+        y = plane.pack(plane.unpack(x, spec), spec)
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            out.append(Finding(
+                "contracts", "plane-roundtrip", where, 0,
+                "pack(unpack(x)) != x on an all-f32 layout"))
+    # manifest serialization round-trips the layout exactly
+    spec2 = plane.PlaneSpec.from_manifest(spec.to_manifest())
+    for fld in ("paths", "shapes", "dtypes", "offsets", "size"):
+        if getattr(spec, fld) != getattr(spec2, fld):
+            out.append(Finding(
+                "contracts", "plane-manifest", where, 0,
+                f"from_manifest(to_manifest()) changed '{fld}'"))
+    # stacked spec strips K and matches the unstacked layout
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((3,) + tuple(s.shape), s.dtype),
+        gshapes)
+    sspec, k = plane.PlaneSpec.from_stacked(stacked)
+    if k != 3 or sspec.shapes != spec.shapes or sspec.offsets != spec.offsets:
+        out.append(Finding("contracts", "plane-stacked", where, 0,
+                           "from_stacked does not strip K to the "
+                           "unstacked layout"))
+    return out
+
+
+def check_representable(case: Case) -> List[Finding]:
+    """The enumerated cohorts are the unified engine's domain — each
+    must be segment-representable (the eligibility gate)."""
+    if case.family.segment_representable(list(case.client_cfgs)):
+        return []
+    return [Finding("contracts", "representable", case.name, 0,
+                    "cohort is not segment-representable — the contract "
+                    "matrix no longer matches the engine's domain")]
+
+
+CHECKS = (check_representable, check_updown, check_segment_spec,
+          check_coverage, check_multiplicity, check_plane)
+
+
+def check_case(case: Case) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in CHECKS:
+        try:
+            out.extend(fn(case))
+        except Exception as e:  # a crash in a check is itself a finding
+            out.append(Finding("contracts", "check-crash", case.name, 0,
+                               f"{fn.__name__} raised {type(e).__name__}: "
+                               f"{e}"))
+    return out
+
+
+def check_all(*, quick: bool = False) -> Tuple[List[Finding], int]:
+    """Run the whole matrix; returns (findings, number of cases)."""
+    findings: List[Finding] = []
+    cases = all_cases(quick=quick)
+    for case in cases:
+        findings.extend(check_case(case))
+    return findings, len(cases)

@@ -1,0 +1,190 @@
+"""Pallas kernel validator — static checks on traced ``pallas_call`` specs.
+
+Traces the ``kernels/fedavg`` public wrappers (plain, masked,
+masked+mult, whole-plane) over representative shapes with
+``jax.make_jaxpr`` — abstract evaluation, nothing launches — then walks
+the jaxpr for ``pallas_call`` equations and validates each one's grid
+mapping:
+
+  * every block shape divides its array shape axis-by-axis (the kernels
+    assume even tiling; ragged tiles would read garbage columns),
+  * the grid covers the tiled axis exactly (``grid == array // block``
+    on the tiled axis — no dropped or duplicated tiles),
+  * tiled blocks are lane-aligned (last axis a multiple of 128) —
+    whole-array blocks like the ``(K, 1)`` weight column are exempt,
+  * the estimated VMEM footprint (Σ block bytes over all operands ×2 for
+    the pipeline's double buffering) fits the per-backend budget,
+  * the ops-layer padding contract holds: the wrapper's OUTPUT aval is
+    the caller's unpadded shape while the ``pallas_call`` inside works
+    on the lane/block-rounded extent — i.e. padded columns exist only
+    between the pad and the final slice.
+
+Representative shapes deliberately include lane-odd parameter counts
+(exercising ``ops``'s pad-then-slice path), a sub-lane tensor, and a
+multi-megabyte plane at the default block size.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import Finding
+from repro.kernels.fedavg import ops
+from repro.kernels.fedavg.fedavg import LANE
+
+VMEM_BUDGET_BYTES = {"tpu": 16 * 2 ** 20}   # per-core VMEM (pallas guide)
+DOUBLE_BUFFER = 2                           # pipelined blocks are ×2
+
+
+def _sds(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _subjaxprs(value):
+    if hasattr(value, "jaxpr"):            # ClosedJaxpr
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):           # Jaxpr
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _walk_eqns(sub)
+
+
+def _block_shape(bm) -> Tuple[int, ...]:
+    # mapped / squeezed dims show up as non-int sentinels — they occupy
+    # one row/col, so count them as 1 for footprint and divisibility
+    return tuple(int(b) if isinstance(b, int) else 1
+                 for b in bm.block_shape)
+
+
+def _check_pallas_eqn(name: str, eqn, *, backend: str = "tpu"
+                      ) -> List[Finding]:
+    out: List[Finding] = []
+    gm = eqn.params["grid_mapping"]
+    grid = tuple(int(g) for g in gm.grid)
+    n_tiles = math.prod(grid) if grid else 1
+    vmem = 0
+    for i, bm in enumerate(gm.block_mappings):
+        arr = tuple(int(s) for s in bm.array_shape_dtype.shape)
+        blk = _block_shape(bm)
+        where = f"{name}/operand{i}"
+        if len(arr) != len(blk):
+            out.append(Finding("kernels", "block-rank", where, 0,
+                               f"block rank {len(blk)} != array rank "
+                               f"{len(arr)}"))
+            continue
+        tiles = 1
+        for ax, (a, b) in enumerate(zip(arr, blk)):
+            if b <= 0 or a % b:
+                out.append(Finding(
+                    "kernels", "block-divisibility", where, 0,
+                    f"axis {ax}: block {b} does not divide array extent "
+                    f"{a} — ragged tile would stream garbage columns"))
+            else:
+                tiles *= a // b
+        if blk and arr and blk[-1] != arr[-1] and blk[-1] % LANE:
+            out.append(Finding(
+                "kernels", "lane-alignment", where, 0,
+                f"tiled last axis block {blk[-1]} is not a multiple of "
+                f"the {LANE}-wide lane"))
+        if tiles not in (1, n_tiles):
+            out.append(Finding(
+                "kernels", "grid-coverage", where, 0,
+                f"operand tiles {tiles} match neither 1 (broadcast) nor "
+                f"the grid size {n_tiles} — tiles dropped or duplicated"))
+        vmem += math.prod(blk) * bm.array_shape_dtype.dtype.itemsize
+    budget = VMEM_BUDGET_BYTES[backend]
+    est = vmem * DOUBLE_BUFFER
+    if est > budget:
+        out.append(Finding(
+            "kernels", "vmem-budget", name, 0,
+            f"estimated VMEM footprint {est / 2**20:.2f} MiB "
+            f"(double-buffered blocks) exceeds the {backend} budget "
+            f"{budget / 2**20:.0f} MiB — shrink `block`"))
+    return out
+
+
+def _case_findings(name: str, fn: Callable, avals: Sequence,
+                   expect_shape: Tuple[int, ...]) -> List[Finding]:
+    try:
+        closed = jax.make_jaxpr(fn)(*avals)
+    except Exception as e:
+        return [Finding("kernels", "trace-crash", name, 0,
+                        f"tracing raised {type(e).__name__}: {e}")]
+    out: List[Finding] = []
+    pallas = [e for e in _walk_eqns(closed.jaxpr)
+              if e.primitive.name == "pallas_call"]
+    if not pallas:
+        out.append(Finding("kernels", "no-kernel", name, 0,
+                           "no pallas_call in the traced jaxpr — the "
+                           "wrapper silently fell back off the kernel"))
+    for eqn in pallas:
+        out.extend(_check_pallas_eqn(name, eqn))
+    got = tuple(int(s) for s in closed.out_avals[0].shape)
+    if got != tuple(expect_shape):
+        out.append(Finding(
+            "kernels", "pad-slice", name, 0,
+            f"wrapper output {got} != caller shape {tuple(expect_shape)} "
+            "— padded columns leak out of the kernel"))
+    return out
+
+
+def cases():
+    """(name, fn, avals, expected output shape) — the kernel surface ×
+    representative shapes. ``interpret=True`` + ``use_kernel=True`` so
+    the pallas path traces identically on CPU CI and TPU."""
+    K = 8
+    n_odd = 4096 * 3 + 517        # lane-odd plane -> pad-then-slice path
+    n_even = 4096 * 4             # block-aligned plane -> zero padding
+    n_big = 1 << 22               # ~128 MiB of stacked params, K=8
+    x = lambda n: _sds(K, n)      # noqa: E731
+    w = _sds(K)
+    for n in (n_odd, n_even, n_big):
+        yield (f"plane_agg/N={n}",
+               lambda p, wt, n=n: ops.plane_agg(
+                   p, wt, use_kernel=True, interpret=True),
+               (x(n), w), (n,))
+        yield (f"plane_agg_masked/N={n}",
+               lambda p, wt, m, n=n: ops.plane_agg(
+                   p, wt, masks=m, use_kernel=True, interpret=True),
+               (x(n), w, x(n)), (n,))
+        yield (f"plane_agg_mult_fb/N={n}",
+               lambda p, wt, m, mu, fb, n=n: ops.plane_agg(
+                   p, wt, masks=m, mult=mu, fallback=fb,
+                   use_kernel=True, interpret=True),
+               (x(n), w, x(n), x(n), _sds(n)), (n,))
+    # leaf-shaped wrappers: lane-odd tensor + sub-lane tensor
+    for shape in ((33, 7), (5,), (256, 130)):
+        n = math.prod(shape)
+        yield (f"weighted_sum/{shape}",
+               lambda s, wt: ops.weighted_sum(s, wt, interpret=True),
+               (_sds(K, *shape), w), shape)
+        yield (f"weighted_sum_masked/{shape}",
+               lambda s, wt, m: ops.weighted_sum_masked(
+                   s, wt, m, interpret=True),
+               (_sds(K, *shape), w, _sds(K, *shape)), shape)
+        yield (f"weighted_sum_masked_mult/{shape}",
+               lambda s, wt, m, mu: ops.weighted_sum_masked(
+                   s, wt, m, mult=mu, interpret=True, renorm=False),
+               (_sds(K, *shape), w, _sds(K, *shape), _sds(K, *shape)),
+               shape)
+
+
+def check_all() -> Tuple[List[Finding], int]:
+    findings: List[Finding] = []
+    n = 0
+    for name, fn, avals, expect in cases():
+        findings.extend(_case_findings(name, fn, avals, expect))
+        n += 1
+    return findings, n

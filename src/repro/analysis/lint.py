@@ -1,0 +1,398 @@
+"""fedlint — AST rules for JAX hazards the ruff gate cannot express.
+
+Rules (suppress inline with ``# fedlint: ignore[RULE]`` on the flagged
+line, reason recommended after the bracket):
+
+  FDL001  PRNG key reuse: the same key name is passed as an argument to
+          two or more call sites inside one function body without an
+          intervening ``jax.random.split`` / reassignment. Reusing a key
+          silently correlates "independent" randomness — the classic
+          federated-sampling bug.
+  FDL002  Hazardous jit signature: a function decorated with ``jax.jit``
+          / ``jax.pmap`` (or wrapped via ``partial(jax.jit, ...)``) has a
+          mutable default argument (list/dict/set) or a default on a
+          ``static_argnames`` parameter that is unhashable. Mutable
+          defaults leak state across traces; unhashable statics fail at
+          call time, but only on the first cache miss.
+  FDL003  Module-scope device work: ``jnp.*`` array construction or
+          ``jax.device_put`` executed at import time. Import of a leaf
+          module then allocates on whatever device jax initializes
+          first — breaks CPU-only CI and multi-process setups. (Module
+          scope means outside any def/class; annotation-only or
+          ``TYPE_CHECKING`` uses are fine.)
+  FDL004  Python branching on traced values: ``if``/``while`` whose test
+          reads a parameter of a jit-compiled function (or compares its
+          ``.shape`` elements) inside that function. Under trace this
+          either raises ConcretizationError or — worse — silently bakes
+          one branch. ``is``/``is not None`` tests (static pytree
+          structure) and parameters named in ``static_argnames`` /
+          ``static_argnums`` are exempt.
+
+The checker is intentionally first-order: it inspects one file at a
+time, resolves only literal ``jax.jit`` / ``jit`` / ``pjit`` / ``pmap``
+spellings, and prefers false negatives over noisy false positives —
+every rule fires only on patterns that are locally provable.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import Finding
+
+RULES = ("FDL001", "FDL002", "FDL003", "FDL004")
+
+_IGNORE_RE = re.compile(r"#\s*fedlint:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+DEFAULT_ROOTS = ("src", "tools", "examples", "benchmarks", "tests")
+
+
+# --------------------------------------------------------------- utilities
+def _suppressions(source: str) -> Dict[int, Set[str]]:
+    """line number -> set of rule ids suppressed on that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _IGNORE_RE.search(text)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.split' for an Attribute/Name chain, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap", "pjit", "jax.pjit",
+              "functools.partial", "partial"}
+
+
+def _jit_decoration(dec: ast.AST) -> Optional[ast.Call]:
+    """Return the decorating Call if ``dec`` applies jit/pmap (possibly
+    through ``partial(jax.jit, ...)``), else None. Bare ``@jax.jit``
+    (no call) returns a synthetic empty Call for uniform handling."""
+    if isinstance(dec, ast.Call):
+        name = _dotted(dec.func)
+        if name in ("functools.partial", "partial"):
+            if dec.args and _dotted(dec.args[0]) in _JIT_NAMES:
+                return dec
+            return None
+        if name in _JIT_NAMES - {"functools.partial", "partial"}:
+            return dec
+        return None
+    if _dotted(dec) in _JIT_NAMES - {"functools.partial", "partial"}:
+        return ast.Call(func=dec, args=[], keywords=[])
+    return None
+
+
+def _static_params(call: ast.Call, fn: ast.FunctionDef) -> Set[str]:
+    """Parameter names marked static via static_argnames/static_argnums
+    literals on the jit call."""
+    names: Set[str] = set()
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(params):
+                        names.add(params[n.value])
+    return names
+
+
+def _iter_functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ------------------------------------------------------------------ FDL001
+# singular only: plural 'keys' is this repo's path-tuple idiom, and split
+# products are consumed via subscripts (keys[0]) which we don't track
+_KEY_HINT = re.compile(r"(^|_)(key|rng|prng)($|_|\d)")
+
+_STMT_BODIES = ("body", "orelse", "finalbody")
+
+
+def _expr_children(st: ast.stmt):
+    """The statement's OWN expression parts — no nested statement bodies
+    (those are visited separately, branch-aware) and no nested defs
+    (their free-variable uses are counted when that def is checked)."""
+    for field, value in ast.iter_fields(st):
+        if field in _STMT_BODIES + ("handlers",):
+            continue
+        if isinstance(value, ast.AST):
+            yield value
+        elif isinstance(value, list):
+            for v in value:
+                if isinstance(v, ast.AST):
+                    yield v
+
+
+def _check_key_reuse(fn: ast.FunctionDef) -> List[Tuple[int, str, str]]:
+    """Flag a key-named variable consumed as a call argument twice on one
+    control-flow path without an intervening split/fold_in/rebinding.
+    Exclusive ``if``/``else`` branches merge by max (one path executes);
+    a loop body counts double (every iteration consumes)."""
+    out: List[Tuple[int, str, str]] = []
+    flagged: Set[str] = set()
+
+    def consume(st: ast.stmt, uses: Dict[str, int], mult: int,
+                nonkeys: Set[str]) -> None:
+        for expr in _expr_children(st):
+            for call in (n for n in ast.walk(expr)
+                         if isinstance(n, ast.Call)):
+                callee = _dotted(call.func)
+                is_split = callee.endswith("split") or \
+                    callee.endswith("fold_in")
+                for arg in list(call.args) + [k.value for k in
+                                              call.keywords]:
+                    if not isinstance(arg, ast.Name) or \
+                            not _KEY_HINT.search(arg.id) or \
+                            arg.id in nonkeys:
+                        continue
+                    name = arg.id
+                    if is_split:
+                        uses.pop(name, None)  # split(key) retires the key
+                        continue
+                    count = uses.get(name, 0) + mult
+                    if count > 1 and name not in flagged:
+                        flagged.add(name)
+                        out.append((
+                            call.lineno, "FDL001",
+                            f"PRNG key '{name}' consumed more than once "
+                            "without jax.random.split — randomness is "
+                            "correlated across the consumers"))
+                    uses[name] = count
+
+    def rebind(st: ast.stmt, uses: Dict[str, int],
+               nonkeys: Set[str]) -> None:
+        targets: List[ast.AST] = []
+        value = None
+        if isinstance(st, ast.Assign):
+            targets, value = list(st.targets), st.value
+        elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+            targets, value = [st.target], st.value
+        elif isinstance(st, ast.For):
+            targets = [st.target]
+        # a hint-named variable visibly bound to a NON-random source
+        # (key_pos = jnp.arange(S)) is not a PRNG key — stop tracking it
+        # until it is rebound to one
+        random_src = True
+        if isinstance(value, ast.Call):
+            callee = _dotted(value.func)
+            random_src = ("random" in callee or callee.endswith("split")
+                          or callee.endswith("fold_in")
+                          or callee.endswith("PRNGKey") or callee == "")
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name) and _KEY_HINT.search(n.id):
+                    uses.pop(n.id, None)
+                    if random_src:
+                        nonkeys.discard(n.id)
+                    else:
+                        nonkeys.add(n.id)
+
+    nonkeys: Set[str] = set()
+
+    def visit(stmts: Iterable[ast.stmt], uses: Dict[str, int],
+              mult: int) -> bool:
+        """Returns True when this statement list terminates the path
+        (return/raise/break/continue) — an early-returning `if` branch
+        must not add its uses to the fall-through path."""
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue  # separate scope, checked on its own
+            consume(st, uses, mult, nonkeys)
+            rebind(st, uses, nonkeys)
+            if isinstance(st, (ast.Return, ast.Raise, ast.Break,
+                               ast.Continue)):
+                return True
+            if isinstance(st, ast.If):
+                live, term = [], []
+                for field in ("body", "orelse"):
+                    u = dict(uses)
+                    (term if visit(getattr(st, field), u, mult)
+                     else live).append(u)
+                if not live:
+                    return True  # every branch leaves this path
+                for name in {k for u in live for k in u}:
+                    uses[name] = max(u.get(name, 0) for u in live)
+            elif isinstance(st, (ast.For, ast.While)):
+                visit(st.body, uses, mult * 2)
+                visit(st.orelse, uses, mult)
+            elif isinstance(st, ast.Try):
+                visit(st.body, uses, mult)
+                for h in st.handlers:
+                    visit(h.body, dict(uses), mult)
+                visit(st.orelse, uses, mult)
+                visit(st.finalbody, uses, mult)
+            else:
+                for field in _STMT_BODIES:
+                    sub = getattr(st, field, None)
+                    if sub:
+                        visit(sub, uses, mult)
+        return False
+
+    visit(fn.body, {}, 1)
+    return out
+
+
+# ------------------------------------------------------------------ FDL002
+_MUTABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+            ast.SetComp)
+
+
+def _check_jit_signature(fn: ast.FunctionDef,
+                         call: ast.Call) -> List[Tuple[int, str, str]]:
+    out: List[Tuple[int, str, str]] = []
+    statics = _static_params(call, fn)
+    args = fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+    # defaults align with the TAIL of the positional params
+    pos = fn.args.posonlyargs + fn.args.args
+    padded = [None] * (len(pos) - len(fn.args.defaults)) + \
+        list(fn.args.defaults) + list(fn.args.kw_defaults)
+    for a, d in zip(args, padded):
+        if d is None or not isinstance(d, _MUTABLE):
+            continue
+        if a.arg in statics:
+            out.append((
+                fn.lineno, "FDL002",
+                f"static arg '{a.arg}' of jitted '{fn.name}' has an "
+                "unhashable default — the first cache miss raises "
+                "TypeError"))
+        else:
+            out.append((
+                fn.lineno, "FDL002",
+                f"jit-decorated '{fn.name}' has mutable default for "
+                f"'{a.arg}' — state leaks across traces"))
+    return out
+
+
+# ------------------------------------------------------------------ FDL003
+def _check_import_time_device(tree: ast.Module
+                              ) -> List[Tuple[int, str, str]]:
+    """jnp.* / jax.device_put calls executed at module scope."""
+    out: List[Tuple[int, str, str]] = []
+    for st in tree.body:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef, ast.Import, ast.ImportFrom)):
+            continue
+        if isinstance(st, ast.If):
+            # `if TYPE_CHECKING:` / __main__ guards are not import work
+            continue
+        for call in (n for n in ast.walk(st) if isinstance(n, ast.Call)):
+            name = _dotted(call.func)
+            if name.startswith("jnp.") or name.startswith("jax.numpy.") \
+                    or name in ("jax.device_put", "jax.random.PRNGKey"):
+                out.append((
+                    call.lineno, "FDL003",
+                    f"'{name}' runs at import time — allocates on the "
+                    "default device before the program chose one"))
+    return out
+
+
+# ------------------------------------------------------------------ FDL004
+def _check_traced_branching(fn: ast.FunctionDef, call: ast.Call
+                            ) -> List[Tuple[int, str, str]]:
+    """Python `if`/`while` on a traced parameter inside a jitted fn."""
+    statics = _static_params(call, fn)
+    params = {a.arg for a in fn.args.posonlyargs + fn.args.args +
+              fn.args.kwonlyargs} - statics - {"self"}
+    out: List[Tuple[int, str, str]] = []
+
+    def is_none_test(test: ast.AST) -> bool:
+        return isinstance(test, ast.Compare) and \
+            all(isinstance(op, (ast.Is, ast.IsNot))
+                for op in test.ops)
+
+    for node in ast.walk(fn):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        test = node.test
+        if is_none_test(test):
+            continue
+        for n in ast.walk(test):
+            if isinstance(n, ast.Name) and n.id in params:
+                # `.shape`/`.ndim` reads are static; a bare traced value
+                # in a bool context is the hazard
+                parent_attr = any(
+                    isinstance(p, ast.Attribute) and
+                    p.attr in ("shape", "ndim", "dtype", "size")
+                    for p in ast.walk(test)
+                    if isinstance(p, ast.Attribute) and
+                    isinstance(p.value, ast.Name) and p.value.id == n.id)
+                if parent_attr:
+                    continue
+                out.append((
+                    node.lineno, "FDL004",
+                    f"Python branch on traced parameter '{n.id}' inside "
+                    f"jitted '{fn.name}' — use lax.cond/lax.select or "
+                    "mark it static"))
+                break
+    return out
+
+
+# ---------------------------------------------------------------- driver
+def lint_source(source: str, filename: str) -> List[Finding]:
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:
+        return [Finding("lint", "parse", filename, e.lineno or 0,
+                        f"syntax error: {e.msg}")]
+    sup = _suppressions(source)
+    raw: List[Tuple[int, str, str]] = []
+    raw += _check_import_time_device(tree)
+    for fn in _iter_functions(tree):
+        raw += _check_key_reuse(fn)
+        for dec in fn.decorator_list:
+            call = _jit_decoration(dec)
+            if call is None:
+                continue
+            raw += _check_jit_signature(fn, call)
+            raw += _check_traced_branching(fn, call)
+    out = []
+    for line, rule, msg in sorted(raw):
+        if rule in sup.get(line, ()):
+            continue
+        out.append(Finding("lint", rule, filename, line, msg))
+    return out
+
+
+def lint_file(path: Path) -> List[Finding]:
+    return lint_source(path.read_text(), str(path))
+
+
+def iter_py_files(roots: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    for root in roots:
+        p = Path(root)
+        if p.is_file():
+            files.append(p)
+        else:
+            files.extend(sorted(p.rglob("*.py")))
+    return files
+
+
+def lint_roots(roots: Optional[Sequence[str]] = None
+               ) -> Tuple[List[Finding], int]:
+    """Lint every ``*.py`` under the roots (default: ``src/``); returns
+    (findings, number of files checked)."""
+    files = iter_py_files(roots or DEFAULT_ROOTS)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f))
+    return findings, len(files)

@@ -1,0 +1,103 @@
+"""Retrace detector — count XLA compilations across a region of code.
+
+``fl/engine.py`` jits one training step per participating-subset SIZE
+(``UnifiedEngine._steps``); the known hazard is anything that silently
+multiplies that cache — weak-typed scalars, re-built closures, unhashable
+statics — turning "compile once, run for hours" into a compile per
+round. This context manager counts jit cache MISSES via
+``jax.monitoring``: jax emits a ``backend_compile`` duration event on
+every XLA compilation and nothing on a cache hit, so
+
+    with RetraceDetector() as det:
+        fed.run(rounds=5)
+    assert det.compiles <= expected
+
+is a direct, dependency-free probe. ``checkpoint()`` snapshots the count
+mid-region (the retrace regression test snapshots after round 1 and
+asserts the final count equals the snapshot).
+
+jax.monitoring has global listener registration only (no per-listener
+removal short of ``clear_event_listeners``, which would clobber other
+subscribers), so ONE module-level listener is registered lazily on first
+use and fans out to whichever detectors are currently active; inactive
+detectors cost a truth test per compile event.
+
+Not part of the default ``python -m repro.analysis`` run — detecting
+retraces requires actually executing the federation; the tier-1 test
+``tests/test_retrace.py`` is its consumer.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from jax import monitoring
+
+# any backend_compile duration event == one jit cache miss; match on the
+# stem so jax-version renames (backend_compile vs backend_compile_duration)
+# keep matching
+_COMPILE_EVENT_STEM = "/jax/core/compile/backend_compile"
+
+_ACTIVE: List["RetraceDetector"] = []
+_REGISTERED = False
+
+
+def _on_duration(event: str, duration: float, **kwargs) -> None:
+    if not event.startswith(_COMPILE_EVENT_STEM):
+        return
+    for det in _ACTIVE:
+        det._record(event)
+
+
+def _ensure_listener() -> None:
+    global _REGISTERED
+    if not _REGISTERED:
+        monitoring.register_event_duration_secs_listener(_on_duration)
+        _REGISTERED = True
+
+
+class RetraceDetector:
+    """Context manager counting XLA compilations while active.
+
+    ``compiles``   — count since ``__enter__`` (monotone).
+    ``checkpoint()`` — stash the current count and return it.
+    ``since_checkpoint`` — compiles since the last checkpoint (or entry).
+    ``events``     — the raw event names, for diagnostics.
+
+    Nesting is fine: each active detector counts independently.
+    """
+
+    def __init__(self) -> None:
+        self.compiles = 0
+        self.events: List[str] = []
+        self._mark = 0
+        self._entered = False
+
+    # called from the module listener
+    def _record(self, event: str) -> None:
+        self.compiles += 1
+        self.events.append(event)
+
+    def checkpoint(self) -> int:
+        self._mark = self.compiles
+        return self._mark
+
+    @property
+    def since_checkpoint(self) -> int:
+        return self.compiles - self._mark
+
+    def __enter__(self) -> "RetraceDetector":
+        if self._entered:
+            raise RuntimeError("RetraceDetector is not reentrant; "
+                               "create a new instance")
+        _ensure_listener()
+        self._entered = True
+        self.compiles = 0
+        self._mark = 0
+        self.events.clear()
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> Optional[bool]:
+        _ACTIVE.remove(self)
+        self._entered = False
+        return None

@@ -7,7 +7,6 @@ shallower client variants) of the same families.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 

@@ -12,10 +12,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Sequence
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import tfamily, vggops
 from repro.configs.vgg_family import VGGConfig, union_config

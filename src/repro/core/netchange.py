@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -145,15 +145,23 @@ class PlaneSpec:
                 out[off:off + n] = 1.0
         return out
 
-    def validate(self, tree, *, what: str = "tree", stacked: bool = False):
+    def validate(self, tree, *, what: str = "tree", stacked: bool = False,
+                 check_dtypes: bool = False):
         """Check ``tree`` matches this layout leaf-by-leaf; raises the
-        ragged-leaf contract error naming the path and both shapes."""
+        ragged-leaf contract error naming the path and both shapes.
+
+        ``check_dtypes`` stays opt-in: packing casts everything to f32,
+        so mask/multiplicity planes are legitimately built from f32
+        trees against specs recording bf16 leaf dtypes. Checkpoint and
+        manifest loaders, where the storage dtype IS the contract, pass
+        ``check_dtypes=True``."""
         flat, _ = _flatten(tree)
         if len(flat) != self.n_leaves:
             raise ValueError(
                 f"{what}: {len(flat)} leaves, expected {self.n_leaves}")
-        for (path, leaf), spath, sshape in zip(flat, self.paths,
-                                               self.shapes):
+        for (path, leaf), spath, sshape, sdtype in zip(flat, self.paths,
+                                                       self.shapes,
+                                                       self.dtypes):
             if path != spath:
                 raise ValueError(f"{what}: leaf '{'/'.join(path)}' where "
                                  f"'{'/'.join(spath)}' was expected — "
@@ -165,6 +173,11 @@ class PlaneSpec:
                                             ("K",) + sshape)
             elif got != sshape:
                 raise ragged_leaf_error(what, path, got, sshape)
+            if check_dtypes and str(leaf.dtype) != sdtype:
+                raise ValueError(
+                    f"{what}: leaf '{'/'.join(path)}' has dtype "
+                    f"{leaf.dtype}, expected {sdtype} — storage dtypes "
+                    "must match the spec")
         return flat
 
     # ------------------------------------------------------- serialization

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, MoEConfig
+from repro.configs.base import ModelConfig
 from repro.core import netchange as nc
 from repro.core import segments as sg
 from repro.models import transformer as T
@@ -49,12 +49,17 @@ def make_variant(cfg: ModelConfig, *, n_units: Optional[int] = None,
         kw["d_ff"] = _round8(cfg.d_ff * ffn_scale)
     if cfg.moe is not None:
         m = cfg.moe
+        # ffn_scale=1.0 must be the identity: rounding an unscaled width
+        # through _round8 would silently mutate the config (and push the
+        # cohort out of the segment-representable domain)
         kw["moe"] = dataclasses.replace(
             m,
             n_experts=n_experts if n_experts is not None else m.n_experts,
             top_k=min(m.top_k, n_experts if n_experts is not None else m.n_experts),
-            d_ff_expert=_round8(m.d_ff_expert * ffn_scale),
-            d_ff_shared=_round8(m.d_ff_shared * ffn_scale) if m.n_shared else 0,
+            d_ff_expert=(_round8(m.d_ff_expert * ffn_scale)
+                         if ffn_scale != 1.0 else m.d_ff_expert),
+            d_ff_shared=(_round8(m.d_ff_shared * ffn_scale)
+                         if ffn_scale != 1.0 and m.n_shared else m.d_ff_shared),
         )
     if d_rnn is not None and cfg.ssm is not None:
         kw["ssm"] = dataclasses.replace(cfg.ssm, d_rnn=d_rnn)
@@ -285,6 +290,17 @@ def segment_spec(from_cfg: ModelConfig, to_cfg: ModelConfig, *,
 
     def visit(path, leaf):
         keys = sg.path_keys(path)
+        if (keys[:2] == ("encoder", "units") and len(keys) == 4
+                and keys[2] == "mlp" and keys[3] in _MLP_SPEC):
+            # whisper encoder FFN rides cfg.d_ff too — one mapping shared
+            # by all (stacked) encoder layers, same tag ``up()`` uses
+            old, new = ffn
+            if old != new:
+                role, ax = _MLP_SPEC[keys[3]]
+                spec[keys] = segs(role, ax,
+                                  nc.dup_mapping(old, new, tag="e/ffn",
+                                                 seed=seed))
+            return leaf
         if len(keys) < 3 or keys[0] not in ("units", "rem"):
             return leaf
         tag0 = ("u" if keys[0] == "units" else "r") + f"/{keys[1]}"
@@ -314,6 +330,27 @@ def segment_spec(from_cfg: ModelConfig, to_cfg: ModelConfig, *,
 
 # ------------------------------------------------------------------ up/down
 
+def _transform_encoder(params, from_cfg: ModelConfig, to_cfg: ModelConfig,
+                       seed: int, mode: str):
+    """The whisper encoder's FFN is sized by ``cfg.d_ff`` like the
+    decoder blocks, so width transforms must move it too (found by the
+    ``repro.analysis`` contract checker: ``up`` used to pass the
+    ``encoder`` subtree through untouched, leaving d_ff-heterogeneous
+    encoder cohorts shape-broken). Encoder DEPTH lives in
+    ``cfg.encoder.n_layers`` and never varies inside a family, so only
+    the MLP width moves — one shared mapping (tag ``e/ffn``) across the
+    stacked encoder layers, matching ``segment_spec``."""
+    if "encoder" not in params or from_cfg.d_ff == to_cfg.d_ff:
+        return params
+    enc = dict(params["encoder"])
+    units = dict(enc["units"])
+    units["mlp"] = _transform_mlp(units["mlp"], from_cfg.d_ff, to_cfg.d_ff,
+                                  "e/ffn", seed, mode)
+    enc["units"] = units
+    params["encoder"] = enc
+    return params
+
+
 def _zeros_block_like(cfg: ModelConfig, kind: str):
     shapes = jax.eval_shape(
         lambda: T.block_init(jax.random.PRNGKey(0), cfg, kind,
@@ -334,6 +371,7 @@ def up(params, from_cfg: ModelConfig, to_cfg: ModelConfig, *, seed: int = 0):
         params["rem"] = {
             k: _transform_block(v, from_cfg, to_cfg, f"r/{k}", seed, "widen")
             for k, v in params["rem"].items()}
+    params = _transform_encoder(params, from_cfg, to_cfg, seed, "widen")
     # depth: pad the stacked axis with zero blocks (identity via residual)
     nu_from, nu_to = from_cfg.n_units, to_cfg.n_units
     if nu_to > nu_from:
@@ -365,4 +403,4 @@ def down(params, from_cfg: ModelConfig, to_cfg: ModelConfig, *, seed: int = 0,
         params["rem"] = {
             k: _transform_block(v, from_cfg, to_cfg, f"r/{k}", seed, nmode)
             for k, v in params["rem"].items()}
-    return params
+    return _transform_encoder(params, from_cfg, to_cfg, seed, nmode)

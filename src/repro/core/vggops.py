@@ -13,7 +13,7 @@ the conv->fc flatten boundary is handled by grouping fc rows by channel.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

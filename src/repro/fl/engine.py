@@ -204,12 +204,30 @@ class UnifiedEngine:
             self._prefix_paths = self._prefix_for(full)
         self._opt = sgd(self.lr, self.momentum)
         self._steps: Dict[int, Callable] = {}
+        self._step_traces: Dict[int, int] = {}
 
     # ----------------------------------------------------------- embedding
     def cache_stats(self) -> dict:
         """Hit/miss/size/bound of the embedding-artifact cache
         (``netchange.KeyedCache`` — one cache, one bound)."""
         return self._cache.stats()
+
+    def step_stats(self) -> dict:
+        """Introspection over the per-subset-size jitted steps — the
+        engine's known retrace hazard. ``traces[k]`` counts how many
+        times the size-``k`` step's Python body was traced (a trace ==
+        a jit cache miss; steady-state rounds must add none), and
+        ``cache_sizes`` reports jax's own per-function compile-cache
+        entry counts where available. ``analysis.retrace`` and the
+        retrace regression test read this."""
+        sizes = {}
+        for k, f in self._steps.items():
+            cs = getattr(f, "_cache_size", None)
+            if callable(cs):
+                sizes[k] = cs()
+        return {"subset_sizes": sorted(self._steps),
+                "traces": dict(self._step_traces),
+                "cache_sizes": sizes}
 
     def _client_mask(self, k: int):
         """(strict mask, filler, cov) at the fixed ``embed_seed`` — the
@@ -322,6 +340,15 @@ class UnifiedEngine:
                                in_specs=(pspec, pspec, pspec, pspec, pspec,
                                          P()),
                                out_specs=(pspec, pspec), check_rep=False)
+        inner = fn
+
+        def fn(sp, opt_state, masks_p, seg_mats, batch, step_idx):
+            # this Python body runs only when jit (re)traces — i.e. on a
+            # compile-cache miss — so the counter measures retraces
+            self._step_traces[k_count] = \
+                self._step_traces.get(k_count, 0) + 1
+            return inner(sp, opt_state, masks_p, seg_mats, batch, step_idx)
+
         # the round state is consumed step-over-step: donating the plane
         # and the optimizer-state plane lets XLA update them in place
         return jax.jit(fn, donate_argnums=(0, 1))

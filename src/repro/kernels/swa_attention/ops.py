@@ -1,7 +1,6 @@
 """Jitted wrapper matching the model-side decode_attention signature."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.swa_attention.decode import swa_decode
 

@@ -24,24 +24,26 @@ def run(arch: str, *, use_reduced: bool = True, batch: int = 4,
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg)
-    key = jax.random.PRNGKey(seed)
-    params = T.init_params(key, cfg)
+    key, k_init, k_aux, k_prompt = jax.random.split(
+        jax.random.PRNGKey(seed), 4)
+    params = T.init_params(k_init, cfg)
     npx = (cfg.frontend.n_prefix
            if cfg.frontend is not None and cfg.frontend.kind == "vision" else 0)
     cache_len = npx + prompt_len + gen
 
     aux = None
     if npx:
-        aux = jax.random.normal(key, (batch, npx, cfg.d_model),
+        aux = jax.random.normal(k_aux, (batch, npx, cfg.d_model),
                                 dtype=cfg.dtype)
-    if cfg.encoder is not None:
-        aux = jax.random.normal(key, (batch, cfg.encoder.n_ctx, cfg.d_model),
+    elif cfg.encoder is not None:
+        aux = jax.random.normal(k_aux, (batch, cfg.encoder.n_ctx, cfg.d_model),
                                 dtype=cfg.dtype)
 
     prefill = jax.jit(make_prefill_step(cfg, ctx=CPU_CTX, cache_len=cache_len))
     decode = jax.jit(make_decode_step(cfg, ctx=CPU_CTX))
 
-    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    prompts = jax.random.randint(k_prompt, (batch, prompt_len), 0,
+                                 cfg.vocab_size)
     t0 = time.time()
     b = {"tokens": prompts}
     if aux is not None:

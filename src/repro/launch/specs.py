@@ -3,7 +3,7 @@ the matching sharding trees — consumed by the multi-pod dry-run.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@ see EXPERIMENTS.md §Perf for the before/after.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

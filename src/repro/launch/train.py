@@ -17,12 +17,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_pytree
-from repro.configs import INPUT_SHAPES, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.data import LMPipeline
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 from repro.optim import adamw, cosine_with_warmup
-from repro.sharding.ctx import CPU_CTX, ShardCtx
+from repro.sharding.ctx import CPU_CTX
 
 
 def run(arch: str, *, use_reduced: bool = True, steps: int = 100,

@@ -8,9 +8,6 @@ dry-run/smoke test exercises (Pallas CPU execution is interpret-only).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

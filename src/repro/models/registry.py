@@ -1,15 +1,29 @@
-"""Model registry: uniform handles over the transformer substrate."""
+"""Model registry: uniform handles over the transformer substrate.
+
+Besides the per-architecture :class:`Model` handle, the registry is the
+ENUMERABLE surface for static tooling (``repro.analysis``): ``arch_ids()``
+lists every architecture, ``Model.param_shapes()`` gives the abstract
+parameter tree (``jax.eval_shape`` — no allocation), and ``plane_spec()``
+its packed-plane layout, so contract checkers can sweep the whole matrix
+without ever materializing a model.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
+from repro import configs
 from repro.configs import ModelConfig, get_config
+from repro.core.plane import PlaneSpec
 from repro.models import transformer as T
 from repro.sharding.ctx import CPU_CTX, ShardCtx
+
+
+def arch_ids() -> Tuple[str, ...]:
+    """Every registered architecture id, in registry order."""
+    return tuple(configs.ARCH_IDS)
 
 
 @dataclass(frozen=True)
@@ -18,6 +32,11 @@ class Model:
 
     def init(self, key):
         return T.init_params(key, self.cfg)
+
+    def param_shapes(self):
+        """Abstract parameter tree (ShapeDtypeStructs) — eval_shape of
+        ``init``, no FLOPs, no device memory."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
 
     def forward(self, params, tokens, *, ctx: ShardCtx = CPU_CTX, aux=None):
         return T.forward(params, self.cfg, tokens, ctx=ctx, aux=aux)
@@ -37,3 +56,9 @@ class Model:
 def get_model(arch_or_cfg) -> Model:
     cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) else get_config(arch_or_cfg)
     return Model(cfg)
+
+
+def plane_spec(arch_or_cfg) -> PlaneSpec:
+    """Packed-plane layout of an architecture's parameter tree, derived
+    abstractly (hashable; usable as a static jit argument)."""
+    return PlaneSpec.from_tree(get_model(arch_or_cfg).param_shapes())

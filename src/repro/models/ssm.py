@@ -7,8 +7,6 @@ over time (mLSTM's chunkwise-parallel form is a §Perf candidate).
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,10 +7,9 @@ run the identical math locally.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
-import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 

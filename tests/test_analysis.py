@@ -1,0 +1,258 @@
+"""Static analysis layer (repro.analysis; ISSUE 7).
+
+Lint rules are exercised on inline source snippets (both directions:
+the defect fires, the idiomatic fix is silent, a ``fedlint: ignore``
+suppresses), the contract checker runs clean in quick mode, the kernel
+validator runs clean on the real kernel surface AND detects a
+deliberately broken case, and the CLI exits 0/1 accordingly.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import Finding, run
+from repro.analysis import kernels_check, lint
+from repro.analysis.__main__ import main as cli_main
+
+
+def _lint(src):
+    return lint.lint_source(textwrap.dedent(src), "snippet.py")
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------------- FDL001
+def test_fdl001_key_reuse_fires():
+    fs = _lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.normal(key, (3,))
+            return a + b
+    """)
+    assert _rules(fs) == ["FDL001"]
+    assert "key" in fs[0].msg
+
+
+def test_fdl001_split_retires_key():
+    assert _lint("""
+        import jax
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.normal(k2, (3,))
+            return a + b
+    """) == []
+
+
+def test_fdl001_fold_in_and_loop():
+    # fold_in per iteration is the idiom; reusing the loop key is not
+    assert _lint("""
+        import jax
+        def ok(key, n):
+            return [jax.random.normal(jax.random.fold_in(key, i), (2,))
+                    for i in range(n)]
+    """) == []
+    fs = _lint("""
+        import jax
+        def bad(key, n):
+            out = []
+            for _ in range(n):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """)
+    assert _rules(fs) == ["FDL001"]
+
+
+def test_fdl001_exclusive_branches_do_not_sum():
+    # if/else arms are exclusive paths — one use per arm is fine
+    assert _lint("""
+        import jax
+        def f(key, flag):
+            if flag:
+                return jax.random.normal(key, (2,))
+            else:
+                return jax.random.uniform(key, (2,))
+    """) == []
+
+
+def test_fdl001_early_return_branch_does_not_leak():
+    assert _lint("""
+        import jax
+        def f(key, flag):
+            if flag:
+                return jax.random.normal(key, (2,))
+            return jax.random.uniform(key, (2,))
+    """) == []
+
+
+def test_fdl001_nonkey_names_exempt():
+    # `key_pos` bound to a visibly non-random source is not a PRNG key
+    assert _lint("""
+        import jax.numpy as jnp
+        def f(S):
+            key_pos = jnp.arange(S)
+            return key_pos + key_pos
+    """) == []
+
+
+def test_fdl001_suppression_comment():
+    assert _lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.normal(key, (3,))  # fedlint: ignore[FDL001]
+            return a + b
+    """) == []
+
+
+# ------------------------------------------------------------- FDL002
+def test_fdl002_mutable_jit_default():
+    fs = _lint("""
+        import jax
+        @jax.jit
+        def f(x, opts={}):
+            return x
+    """)
+    assert _rules(fs) == ["FDL002"]
+    assert _lint("""
+        import jax
+        @jax.jit
+        def f(x, n=3):
+            return x * n
+    """) == []
+
+
+# ------------------------------------------------------------- FDL003
+def test_fdl003_import_time_device_work():
+    fs = _lint("""
+        import jax.numpy as jnp
+        TABLE = jnp.arange(1024)
+    """)
+    assert _rules(fs) == ["FDL003"]
+    # numpy at import time is fine; jnp inside functions is fine
+    assert _lint("""
+        import numpy as np
+        import jax.numpy as jnp
+        TABLE = np.arange(1024)
+        def f():
+            return jnp.arange(4)
+    """) == []
+
+
+# ------------------------------------------------------------- FDL004
+def test_fdl004_python_branch_on_traced_value():
+    fs = _lint("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert _rules(fs) == ["FDL004"]
+
+
+def test_fdl004_static_args_and_shape_reads_exempt():
+    assert _lint("""
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode):
+            if mode == "fast":
+                return x
+            if x.ndim > 1:
+                return x.sum(0)
+            return -x
+    """) == []
+
+
+def test_findings_carry_location():
+    fs = _lint("""
+        import jax
+        @jax.jit
+        def f(x, opts={}):
+            return x
+    """)
+    (f,) = fs
+    assert f.where == "snippet.py" and f.line > 0
+    assert "FDL002" in f.format()
+
+
+# ----------------------------------------------------------- contracts
+def test_contracts_quick_mode_clean():
+    """The registry contract matrix (quick subset) holds: up/down shape
+    preservation, segment coverage, mask algebra, plane round-trips."""
+    report = run(["contracts"], quick=True)
+    assert report.ok, "\n".join(f.format() for f in report.findings)
+    assert report.checked["contracts"] >= 3   # vgg + 2 transformer archs
+
+
+# ------------------------------------------------------------- kernels
+def test_kernel_validator_clean_on_real_surface():
+    findings, n = kernels_check.check_all()
+    assert findings == [], "\n".join(f.format() for f in findings)
+    assert n >= 12
+
+
+def test_kernel_validator_detects_missing_kernel():
+    """A wrapper that silently falls off the pallas path is a finding."""
+    fs = kernels_check._case_findings(
+        "fake", lambda x: x.sum(0), (jax.ShapeDtypeStruct((4, 8),
+                                                          jnp.float32),),
+        (8,))
+    assert "no-kernel" in [f.rule for f in fs]
+
+
+def test_kernel_validator_detects_pad_leak():
+    """An output whose aval is the padded extent (not the caller's
+    shape) is flagged — padded columns must never leak."""
+    from repro.kernels.fedavg import ops
+    n = 1000                          # lane-odd: padded to 1024 inside
+    fs = kernels_check._case_findings(
+        "padleak",
+        lambda p, w: ops.plane_agg(p, w, use_kernel=True, interpret=True),
+        (jax.ShapeDtypeStruct((4, n), jnp.float32),
+         jax.ShapeDtypeStruct((4,), jnp.float32)),
+        (1024,))                      # wrong on purpose: padded extent
+    assert "pad-slice" in [f.rule for f in fs]
+
+
+def test_kernel_validator_detects_vmem_blowout():
+    """A block so large its double-buffered footprint exceeds the
+    per-core VMEM budget is flagged before anything would launch."""
+    from repro.kernels.fedavg import ops
+    n = 1 << 22
+    fs = kernels_check._case_findings(
+        "vmem",
+        lambda p, w: ops.plane_agg(p, w, block=1 << 21, use_kernel=True,
+                                   interpret=True),
+        (jax.ShapeDtypeStruct((8, n), jnp.float32),
+         jax.ShapeDtypeStruct((8,), jnp.float32)),
+        (n,))
+    assert "vmem-budget" in [f.rule for f in fs]
+
+
+# ----------------------------------------------------------------- CLI
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("import numpy as np\nX = np.ones(3)\n")
+    assert cli_main(["--pass", "lint", "--lint-root", str(clean)]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import jax.numpy as jnp\nX = jnp.ones(3)\n")
+    assert cli_main(["--pass", "lint", "--lint-root", str(dirty)]) == 1
+    out = capsys.readouterr().out
+    assert "FDL003" in out
+
+
+def test_report_api():
+    f = Finding("lint", "FDL001", "x.py", 3, "msg")
+    assert "x.py:3" in f.format() and "FDL001" in f.format()
+    report = run(["lint"], lint_roots=["src/repro/analysis"])
+    assert report.ok and report.checked["lint"] > 0

@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.models.attention import (blockwise_attention, decode_attention,
                                     ring_positions)
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 
 
 def naive_attention(q, k, v, causal=True, window=0):

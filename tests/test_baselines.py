@@ -7,7 +7,7 @@ from repro.configs.vgg_family import scaled, vgg
 from repro.core import ClusteredFL, FlexiFed, vgg_chain
 from repro.models import vgg as V
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 
 
 def _params(archs):

@@ -55,7 +55,7 @@ def test_checkpoint_resume_reproduces_run(kind, tmp_path):
 
     ckdir = str(tmp_path / kind)
     backend.samplers = mk()                # fresh stream = a fresh 6-round job
-    fed(3, checkpoint_dir=ckdir, checkpoint_every=3).run(key)   # "interrupt"
+    fed(3, checkpoint_dir=ckdir, checkpoint_every=3).run(key)   # "interrupt"  # fedlint: ignore[FDL001] resume must replay the SAME stream
     backend.samplers = mk()                # resumed process starts cold...
     resumed = fed(6).run(key, resume_from=checkpoint_path(ckdir, 3))
 

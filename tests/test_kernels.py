@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 
 
 # ----------------------------------------------------------------- fedavg

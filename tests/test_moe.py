@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import moe as M
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 
 
 def _cfg(capacity=8.0, top_k=2, n_experts=4):

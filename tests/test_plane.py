@@ -286,6 +286,79 @@ def test_stacked_plane_checkpoint_roundtrip(tmp_path):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+# ----------------------------------------------------- manifest round-trip
+def test_manifest_roundtrip_json_and_equality():
+    """``to_manifest`` -> json -> ``from_manifest`` rebuilds the SAME
+    spec (paths, shapes, dtypes, offsets, size — and the treedef, since
+    models here are plain dict pytrees), including non-f32 leaves."""
+    import json
+    tree = {"enc": {"w": jnp.zeros((3, 4), jnp.bfloat16),
+                    "b": jnp.zeros((4,), jnp.float32)},
+            "head": jnp.zeros((4, 2), jnp.float32)}
+    spec = pl.PlaneSpec.from_tree(tree)
+    man = json.loads(json.dumps(spec.to_manifest()))
+    spec2 = pl.PlaneSpec.from_manifest(man)
+    assert spec2 == spec
+    # the rebuilt spec round-trips real data bit-exactly
+    sp = pl.pack(tree, spec)
+    back = pl.unpack(sp, spec2)
+    assert back["enc"]["w"].dtype == jnp.bfloat16
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_manifest_roundtrip_union_architecture():
+    fam, gcfg = _families()["tmoe"]
+    spec = pl.PlaneSpec.from_tree(global_shapes(fam, gcfg))
+    spec2 = pl.PlaneSpec.from_manifest(spec.to_manifest())
+    assert (spec2.paths, spec2.shapes, spec2.dtypes, spec2.offsets,
+            spec2.size) == (spec.paths, spec.shapes, spec.dtypes,
+                            spec.offsets, spec.size)
+
+
+# --------------------------------------------------- validate error paths
+def test_validate_ragged_leaf_names_path_and_shapes():
+    spec = pl.PlaneSpec.from_tree({"a": jnp.zeros((2, 3)),
+                                   "b": {"w": jnp.zeros((4,))}})
+    with pytest.raises(ValueError, match=r"b/w.*\(5,\).*\(4,\)"):
+        spec.validate({"a": jnp.zeros((2, 3)), "b": {"w": jnp.zeros((5,))}},
+                      what="load")
+    with pytest.raises(ValueError, match="leaves"):
+        spec.validate({"a": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match="structure"):
+        spec.validate({"a": jnp.zeros((2, 3)), "c": {"w": jnp.zeros((4,))}})
+
+
+def test_validate_stacked_vs_unstacked():
+    tree = {"a": jnp.zeros((2, 3)), "b": jnp.zeros((4,))}
+    spec = pl.PlaneSpec.from_tree(tree)
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x, x]), tree)
+    spec.validate(stacked, stacked=True)          # (K,)+shape accepted
+    spec.validate(tree)                           # exact shape accepted
+    with pytest.raises(ValueError, match=r"a.*\(2, 3\)"):
+        spec.validate(tree, stacked=True)         # missing the K axis
+    with pytest.raises(ValueError, match=r"a.*\(3, 2, 3\)"):
+        spec.validate(stacked)                    # unexpected K axis
+    ragged = dict(stacked)
+    ragged["b"] = jnp.zeros((2, 4))               # K=2 where a has K=3
+    spec.validate(ragged, stacked=True)           # per-leaf trailing only...
+    with pytest.raises(ValueError, match=r"b.*\(2, 4\)"):
+        pl.pack_stacked(ragged, spec)             # ...pack checks K too
+
+
+def test_validate_dtype_mismatch_opt_in():
+    """dtype checking stays opt-in: the engine packs f32 mask planes
+    against specs recording bf16 leaves; loaders where storage dtype IS
+    the contract pass ``check_dtypes=True``."""
+    spec = pl.PlaneSpec.from_tree({"w": jnp.zeros((2, 2), jnp.bfloat16)})
+    f32 = {"w": jnp.zeros((2, 2), jnp.float32)}
+    spec.validate(f32)                            # default: shapes only
+    with pytest.raises(ValueError, match="dtype.*float32.*bfloat16"):
+        spec.validate(f32, check_dtypes=True)
+    spec.validate({"w": jnp.zeros((2, 2), jnp.bfloat16)}, check_dtypes=True)
+
+
 # ------------------------------------------------------------ cache stats
 def test_engine_cache_stats_and_shared_bound():
     """The engine's embedding artifacts live in ONE KeyedCache with the

@@ -1,0 +1,95 @@
+"""Retrace regression (analysis.retrace; ISSUE 7): ``Federation.run``
+on the unified backend compiles everything in round 1 and NOTHING after
+— across full and sampled participation. The known hazard is the
+engine's per-subset-size jit cache (``UnifiedEngine._steps``): a
+weak-typed scalar or re-built closure would silently turn one compile
+into a compile per round, which no accuracy test can see.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.retrace import RetraceDetector
+from repro.configs.vgg_family import scaled, vgg
+from repro.core import VGGFamily
+from repro.data import EASY, ClientSampler, image_classification, iid_partition
+from repro.fl import (Federation, FedADPStrategy, Participation,
+                      UnifiedBackend)
+
+FAMILY = VGGFamily()
+
+
+def test_detector_counts_jit_cache_misses():
+    """Sanity: a fresh jit compiles once; the cache hit is silent; a new
+    input shape is a new compile."""
+    @jax.jit
+    def f(x):
+        return x * 2 + 1
+
+    with RetraceDetector() as det:
+        f(np.ones((3,), np.float32)).block_until_ready()
+        first = det.compiles
+        assert first >= 1
+        det.checkpoint()
+        f(np.full((3,), 2.0, np.float32)).block_until_ready()   # cache hit
+        assert det.since_checkpoint == 0
+        f(np.ones((5,), np.float32)).block_until_ready()        # new shape
+        assert det.since_checkpoint >= 1
+    assert det.events                     # raw names kept for diagnostics
+
+
+def _setup():
+    cfgs = [scaled(vgg(a), 0.125, 32) for a in ("vgg13", "vgg16")]
+    n = 160
+    data = image_classification(EASY, n, seed=0)
+    test = image_classification(EASY, 80, seed=9)
+    parts = iid_partition(n, len(cfgs), seed=0)
+    samplers = [ClientSampler(data, p, round_fraction=0.5, batch_size=16,
+                              seed=i) for i, p in enumerate(parts)]
+    return cfgs, samplers, test
+
+
+@pytest.mark.parametrize("pname,participation", [
+    ("full", Participation()),
+    ("sample", Participation.sample(0.5, seed=2)),
+])
+def test_federation_compiles_nothing_after_round_one(pname, participation):
+    """Rounds >= 2 hit the round-1 jit caches: zero backend_compile
+    events after the first round's record is emitted (training step,
+    eval step, and every embedding/aggregation helper included).
+    Sampled participation keeps the subset SIZE constant, so it must
+    not mint new entries in the per-size step cache either."""
+    cfgs, samplers, test = _setup()
+    backend = UnifiedBackend(FAMILY, cfgs, samplers, local_epochs=1,
+                             lr=0.05, momentum=0.9)
+    strategy = FedADPStrategy(FAMILY, cfgs,
+                              [s.n_samples for s in samplers])
+    det = RetraceDetector()
+    rounds_seen = []
+    traces_after_r1 = {}
+
+    def after_round(rec):
+        rounds_seen.append(rec["round"])
+        if len(rounds_seen) == 1:
+            det.checkpoint()              # everything up to here may compile
+            traces_after_r1.update(backend.engine.step_stats()["traces"])
+
+    fed = Federation(strategy, backend, rounds=3, eval_batch=test,
+                     eval_every=1, participation=participation,
+                     callbacks=[after_round])
+    with det:
+        res = fed.run(jax.random.PRNGKey(0))
+
+    assert len(res["history"]) == 3
+    assert det.compiles > 0, "round 1 must have compiled the step"
+    assert det.since_checkpoint == 0, (
+        f"{pname}: {det.since_checkpoint} compile(s) AFTER round 1: "
+        f"{det.events[det._mark:]}")
+    # the per-size step cache stops growing after round 1 (round 1 may
+    # hold >1 entry: the sampler's merged tail batch is a second shape)
+    stats = backend.engine.step_stats()
+    assert stats["traces"] == traces_after_r1, stats
+    assert stats["cache_sizes"] == stats["traces"], (
+        "jax compiled entries the wrapper never saw", stats)
+    sizes = {2} if pname == "full" else {1}
+    assert set(stats["subset_sizes"]) == sizes

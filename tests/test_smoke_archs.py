@@ -14,7 +14,7 @@ from repro.launch.steps import lm_loss, make_train_step
 from repro.models import get_model
 from repro.optim import sgd
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 B, S = 2, 16
 
 

@@ -10,7 +10,7 @@ from repro.configs import get_config, reduced
 from repro.core import tfamily
 from repro.models import get_model
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 
 
 def _variant_pair(arch, **kw):

@@ -13,7 +13,7 @@ from repro.configs import get_config, reduced
 from repro.core import tfamily
 
 BASE = reduced(get_config("glm4-9b"), n_units=3, d_model=64)
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 
 
 @given(units=st.lists(st.integers(1, 3), min_size=1, max_size=4),

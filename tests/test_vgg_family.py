@@ -9,7 +9,7 @@ from repro.configs.vgg_family import (PAPER_COHORT, paper_client_archs,
 from repro.core import vggops
 from repro.models import vgg as V
 
-KEY = jax.random.PRNGKey(0)
+KEY = jax.random.PRNGKey(0)  # fedlint: ignore[FDL003] shared fixture; CPU-only test suite
 COHORT = {a: scaled(vgg(a)) for a in PAPER_COHORT}
 GLOBAL = union_config(list(COHORT.values()))
 X = jax.random.normal(KEY, (3, 32, 32, 3))

@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""fedlint — standalone entry point for ``repro.analysis``.
+
+Same flags as ``python -m repro.analysis``; exists so the checker runs
+from a clean checkout without exporting PYTHONPATH:
+
+    ./tools/fedlint.py                      # all static passes
+    ./tools/fedlint.py --pass lint          # AST rules only (no jax work)
+    ./tools/fedlint.py --pass contracts --quick
+"""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
