@@ -21,25 +21,35 @@ host platform (set BEFORE jax initializes — works standalone or with
 FEDADP_BENCH_ONLY=unified) and runs the unified path shard_map-ed over
 a client mesh.
 
-An ``agg_layout`` microbench (ISSUE 5) times the aggregation pass ALONE
-— ``fedavg_stacked`` on the union cohort with coverage masks + fallback
-— in both layouts: ``leaf`` (the per-leaf reference dispatch, one kernel
-launch per union leaf) vs ``plane`` (the packed ``core.plane`` path, the
-whole model in ONE fused kernel pass). Rows carry the ``agg_layout``
-column and a ``dispatches`` count; the engine rows are tagged with the
-layout their round actually runs (``plane`` for unified since ISSUE 5,
-``tree`` for the loop).
+An ``agg_layout`` microbench (ISSUE 5, extended by ISSUE 8) times the
+aggregation pass ALONE — ``fedavg_stacked`` on the union cohort with
+coverage masks + fallback — in all three layouts: ``leaf`` (the
+per-leaf reference dispatch, one kernel launch per union leaf) vs
+``plane`` (the packed ``core.plane`` path, the whole model in ONE
+fused kernel pass) vs ``stream`` (the O(P·k_chunk) chunked
+``PlaneAccumulator`` path that scales the client axis past what a
+resident ``(K, P)`` plane allows). The microbench sweeps the SCALE Ks
+(64, 128 by default — training rounds there would be
+wall-clock-prohibitive on CI, the aggregation pass is the part that
+scales) and every row carries a ``peak_agg_bytes`` column
+(``core.aggregation.last_agg_stats``) so the O(K·P) → O(P) memory drop
+is diffable, not just the wall clock. Engine rows are tagged with the
+layout their round actually ran (``engine.agg_stats()`` — "plane",
+"stream" or "edge"; ``tree`` for the loop) plus the same peak-bytes
+column.
 
 Outputs:
   * CSV rows ``unified/K{K}/{loop|unified}/{agg_mode},us_per_round,...``
     plus per-(K, agg_mode) speedups, and
-    ``unified/agg/K{K}/{leaf|plane}/{agg_mode},us_per_call,...`` for the
-    aggregation-layout microbench,
+    ``unified/agg/K{K}/{leaf|plane|stream}/{agg_mode},us_per_call,...``
+    for the aggregation-layout microbench,
   * a machine-readable ``BENCH_unified.json`` (path override:
     FEDADP_BENCH_JSON) so the perf trajectory is diffable across PRs.
 
 Env: FEDADP_BENCH_FULL=1 paper-scale protocol; FEDADP_BENCH_SMOKE=1
-tiny-K single-round run for CI (seconds, not minutes).
+tiny-K single-round run for CI (seconds, not minutes — still includes
+one K=64 streaming row). ``--K 4,8,64`` (comma list, validated before
+any work runs) overrides both sweeps' cohort sizes.
 """
 from __future__ import annotations
 
@@ -88,8 +98,11 @@ def _cohort(K: int, n_per_client: int, batch: int, archs=DEPTH_ARCHS):
 
 def _per_round(family, cfgs, samplers, test, engine: str, rounds: int
                ) -> dict:
-    """{agg_mode: seconds-per-round}; one Simulator per engine so grad fns
-    / engine steps stay warm across the agg_mode sweep."""
+    """{agg_mode: (seconds-per-round, engine agg stats | None)}; one
+    Simulator per engine so grad fns / engine steps stay warm across the
+    agg_mode sweep. The unified stats come from ``engine.agg_stats()``
+    — the layout the round ACTUALLY ran plus its peak aggregation
+    footprint (DESIGN.md §9)."""
     base = FLRunConfig(method="fedadp", rounds=1, local_epochs=1, lr=0.05,
                        momentum=0.9, eval_every=10 ** 9, engine=engine)
     mesh = cohort_mesh(len(cfgs)) if engine == "unified" else None
@@ -101,24 +114,53 @@ def _per_round(family, cfgs, samplers, test, engine: str, rounds: int
         sim.run()                               # warmup: pays compilation
         sim.cfg = dataclasses.replace(sim.cfg, rounds=rounds)
         sim.samplers = samplers()
-        out[agg_mode] = sim.run()["wall_s"] / rounds
+        sec = sim.run()["wall_s"] / rounds
+        stats = None
+        if engine == "unified":
+            be = next(b for k, b in sim._backends.items()
+                      if k[0] == "unified")
+            stats = be.engine.agg_stats()
+        out[agg_mode] = (sec, stats)
     return out
 
 
+AGG_LAYOUTS = ("leaf", "plane", "stream")
+STREAM_K_CHUNK = 16                      # aggregation.default_k_chunk
+
+
 def _agg_microbench(csv: List[str], records: List[dict], Ks, reps: int):
-    """Aggregation-dominated rounds, both layouts: per-leaf dispatch vs
-    the packed plane pass, on the union cohort's coverage average (masks
-    + fallback — the heaviest variant both layouts fuse)."""
+    """Aggregation-dominated rounds, all three layouts, each timed the
+    way a ROUND actually executes it: ``leaf`` aggregates the resident
+    stacked trees per leaf (the loop/tree path), ``plane`` runs one
+    fused ``plane_agg`` pass on the RESIDENT packed plane, ``stream``
+    consumes the resident plane in ``(k_chunk, P)`` row chunks through
+    a ``PlaneAccumulator``. The unified engine trains in packed space
+    and keeps the plane resident across rounds (packing is a one-time
+    embed cost, not a per-round one — fl/engine.py), so pre-packing
+    outside the timed loop is the per-round truth; the tree-interface
+    adapter (``fedavg_stacked`` layout="plane"/"stream" on a stacked
+    TREE) pays one pack per call on top. All on the union cohort's
+    coverage average (masks + fallback — the heaviest variant the
+    fused layouts fuse). This sweep carries the SCALE Ks (training
+    rounds at K=128 are CI-prohibitive; the aggregation pass is the
+    part the streaming layout scales) and the ``peak_agg_bytes``
+    column."""
     import time
 
     import jax
-    import jax.numpy as jnp
 
+    from repro.core import plane as planemod
     from repro.core.aggregation import (fedavg_stacked, global_shapes,
                                         stack_trees, subset_weights)
     from repro.fl.engine import UnifiedEngine
+    from repro.kernels.fedavg import ops as kops
+    from repro.kernels.fedavg.fedavg import on_tpu
 
+    use_kernel = on_tpu()
     for K in Ks:
+        # large-K cells keep the wall clock sane by cutting reps, not
+        # coverage — every (K, agg_mode, layout) cell still runs
+        reps_k = reps if K <= 16 else max(3, reps // 6)
         cfgs = [scaled(vgg(DEPTH_ARCHS[k % len(DEPTH_ARCHS)]), 0.125, 64)
                 for k in range(K)]
         eng = UnifiedEngine(VGGFamily(), cfgs, [1] * K, method="fedadp",
@@ -137,32 +179,96 @@ def _agg_microbench(csv: List[str], records: List[dict], Ks, reps: int):
         stacked = stack_trees([rand(i) for i in range(K)])
         fallback = rand(K)
         w = subset_weights([1] * K)
-        for agg_mode in AGG_MODES:
+        wj = jax.numpy.asarray(w, jax.numpy.float32)
+        spec, _ = planemod.PlaneSpec.from_stacked(stacked)
+        P = spec.size
+        x_p = planemod.pack_stacked(stacked, spec, what="bench/x")
+        m_p = planemod.pack_stacked(eng.cov_masks, spec, what="bench/m")
+        fb_p = planemod.pack(fallback, spec, what="bench/fb")
+        jax.block_until_ready((x_p, m_p, fb_p))
+        kc = min(STREAM_K_CHUNK, K)
+
+        def run_leaf(agg_mode):
             kw = ({} if agg_mode == "filler"
                   else dict(masks=eng.cov_masks, fallback=fallback))
+            return fedavg_stacked(stacked, w, layout="leaf", **kw)
+
+        def run_plane(agg_mode):
+            kw = ({} if agg_mode == "filler"
+                  else dict(masks=m_p, fallback=fb_p))
+            return kops.plane_agg(x_p, wj, use_kernel=use_kernel, **kw)
+
+        stream_stats = {}
+
+        def run_stream(agg_mode):
+            acc = kops.PlaneAccumulator(P, use_kernel=use_kernel,
+                                        k_hint=kc)
+            cov = agg_mode == "coverage"
+            for lo in range(0, K, kc):
+                hi = min(lo + kc, K)
+                acc.update(x_p[lo:hi], wj[lo:hi],
+                           masks=m_p[lo:hi] if cov else None)
+            out = acc.finish(renorm=cov, fallback=fb_p if cov else None)
+            stream_stats.update(acc.stats())
+            return out
+
+        for agg_mode in AGG_MODES:
             per = {}
-            for layout in ("leaf", "plane"):
-                out = fedavg_stacked(stacked, w, layout=layout, **kw)
+            for layout in AGG_LAYOUTS:
+                run = {"leaf": run_leaf, "plane": run_plane,
+                       "stream": run_stream}[layout]
+                out = run(agg_mode)
                 jax.block_until_ready(out)          # pay compilation
                 t0 = time.perf_counter()
-                for _ in range(reps):
-                    out = fedavg_stacked(stacked, w, layout=layout, **kw)
+                for _ in range(reps_k):
+                    out = run(agg_mode)
                 jax.block_until_ready(out)
-                sec = (time.perf_counter() - t0) / reps
+                sec = (time.perf_counter() - t0) / reps_k
                 per[layout] = sec
-                dispatches = 1 if layout == "plane" else n_leaves
+                dispatches = n_leaves if layout == "leaf" else 1
+                peak = (stream_stats["peak_bytes"]
+                        if layout == "stream" else 4 * K * P)
                 csv.append(f"unified/agg/K{K}/{layout}/{agg_mode},"
-                           f"{sec * 1e6:.0f},reps={reps}")
+                           f"{sec * 1e6:.0f},reps={reps_k}")
                 records.append({"cohort": "agg", "K": K, "engine": "agg",
                                 "agg_mode": agg_mode, "agg_layout": layout,
                                 "us_per_call": round(sec * 1e6),
-                                "dispatches": dispatches, "reps": reps})
+                                "dispatches": dispatches, "reps": reps_k,
+                                "k_chunk": kc if layout == "stream"
+                                else None,
+                                "peak_agg_bytes": peak})
             csv.append(
                 f"unified/agg/K{K}/speedup/{agg_mode},"
                 f"{per['leaf'] / max(per['plane'], 1e-9):.2f},x")
+            csv.append(
+                f"unified/agg/K{K}/stream_speedup/{agg_mode},"
+                f"{per['leaf'] / max(per['stream'], 1e-9):.2f},x")
 
 
-def main(csv: List[str]):
+def parse_ks(text: str):
+    """Eagerly validate a ``--K`` comma list — bad input dies at
+    argparse time, before any cohort builds or compiles."""
+    import argparse
+    parts = [p.strip() for p in text.split(",") if p.strip()]
+    if not parts:
+        raise argparse.ArgumentTypeError(
+            f"--K {text!r}: expected a comma list of cohort sizes, "
+            "e.g. --K 4,8,64")
+    out = []
+    for p in parts:
+        try:
+            k = int(p)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"--K {text!r}: {p!r} is not an int")
+        if k < 1:
+            raise argparse.ArgumentTypeError(
+                f"--K {text!r}: cohort size {k} must be >= 1")
+        out.append(k)
+    return tuple(out)
+
+
+def main(csv: List[str], Ks=None):
     import jax
     if _DEV and len(jax.devices()) != int(_DEV):
         # jax was initialized before this module could set XLA_FLAGS
@@ -174,38 +280,43 @@ def main(csv: List[str]):
     smoke = os.environ.get("FEDADP_BENCH_SMOKE")
     full = os.environ.get("FEDADP_BENCH_FULL")
     if smoke:
-        Ks, (n_per_client, batch, rounds) = (2,), (32, 16, 1)
-        agg_Ks, agg_reps = (2,), 5
+        train_Ks, (n_per_client, batch, rounds) = (2,), (32, 16, 1)
+        agg_Ks, agg_reps = (2, 64), 5     # K=64: one CI streaming row
     elif full:
-        Ks, (n_per_client, batch, rounds) = (4, 8, 16), (256, 64, 5)
-        agg_Ks, agg_reps = (4, 8), 50
+        train_Ks, (n_per_client, batch, rounds) = (4, 8, 16), (256, 64, 5)
+        agg_Ks, agg_reps = (4, 8, 16, 64, 128), 50
     else:
-        Ks, (n_per_client, batch, rounds) = (4, 8, 16), (64, 32, 3)
-        agg_Ks, agg_reps = (4, 8), 30
+        train_Ks, (n_per_client, batch, rounds) = (4, 8, 16), (64, 32, 3)
+        agg_Ks, agg_reps = (4, 8, 16, 64, 128), 30
+    if Ks:                               # --K overrides BOTH sweeps
+        train_Ks = agg_Ks = tuple(Ks)
     records = []
     for cohort, archs in COHORTS.items():
         prefix = "unified" if cohort == "depth" else f"unified/{cohort}"
-        for K in Ks:
+        for K in train_Ks:
             family, cfgs, samplers, test = _cohort(K, n_per_client, batch,
                                                    archs)
             per = {}
             for engine in ("loop", "unified"):
                 per[engine] = _per_round(family, cfgs, samplers, test,
                                          engine, rounds)
-                for agg_mode, sec in per[engine].items():
+                for agg_mode, (sec, stats) in per[engine].items():
+                    stats = stats or {}
                     csv.append(f"{prefix}/K{K}/{engine}/{agg_mode},"
                                f"{sec * 1e6:.0f},rounds={rounds}")
                     records.append({"cohort": cohort, "K": K,
                                     "engine": engine, "agg_mode": agg_mode,
-                                    "agg_layout": ("plane"
-                                                   if engine == "unified"
-                                                   else "tree"),
+                                    "agg_layout": stats.get("layout",
+                                                            "tree"),
                                     "us_per_round": round(sec * 1e6),
-                                    "rounds": rounds})
+                                    "rounds": rounds,
+                                    "k_chunk": stats.get("k_chunk"),
+                                    "peak_agg_bytes":
+                                        stats.get("peak_bytes")})
             for agg_mode in AGG_MODES:
                 csv.append(
                     f"{prefix}/K{K}/speedup/{agg_mode},"
-                    f"{per['loop'][agg_mode] / max(per['unified'][agg_mode], 1e-9):.2f},x")
+                    f"{per['loop'][agg_mode][0] / max(per['unified'][agg_mode][0], 1e-9):.2f},x")
     _agg_microbench(csv, records, agg_Ks, agg_reps)
     path = os.environ.get("FEDADP_BENCH_JSON", "BENCH_unified.json")
     with open(path, "w") as f:
@@ -222,5 +333,11 @@ def main(csv: List[str]):
 
 
 if __name__ == "__main__":
-    rows = main(["name,us_per_call,derived"])
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--K", type=parse_ks, default=None, metavar="K1,K2,...",
+                    help="comma list of cohort sizes (overrides the "
+                         "smoke/full/default sweeps; validated before "
+                         "any work runs)")
+    rows = main(["name,us_per_call,derived"], Ks=ap.parse_args().K)
     print("\n".join(rows))

@@ -164,6 +164,30 @@ def cases():
                    p, wt, masks=m, mult=mu, fallback=fb,
                    use_kernel=True, interpret=True),
                (x(n), w, x(n), x(n), _sds(n)), (n,))
+    # streaming surface (DESIGN.md §9): the chunked accumulate + finish
+    # pair behind fedavg_stacked(layout="stream"). Kc is a CHUNK of
+    # client rows (smaller than any realistic cohort — the chunk
+    # boundary is the contract), the buffers are (n,); shapes hit the
+    # lane-odd pad-then-slice path, an even plane, and a multi-MiB
+    # accumulator at the auto-selected block.
+    Kc = 4
+    a = _sds  # (n,) accumulator aval
+    for n in (n_odd, n_even, n_big):
+        yield (f"plane_accum/N={n}",
+               lambda nm, dn, cv, c, wt: ops.plane_accum(
+                   nm, dn, cv, c, wt, use_kernel=True, interpret=True),
+               (a(n), a(n), a(n), _sds(Kc, n), _sds(Kc)), (n,))
+        yield (f"plane_accum_masked_mult/N={n}",
+               lambda nm, dn, cv, c, wt, m, mu: ops.plane_accum(
+                   nm, dn, cv, c, wt, masks=m, mult=mu,
+                   use_kernel=True, interpret=True),
+               (a(n), a(n), a(n), _sds(Kc, n), _sds(Kc), _sds(Kc, n),
+                _sds(Kc, n)), (n,))
+        yield (f"plane_finish/N={n}",
+               lambda nm, dn, cv, fb: ops.plane_finish(
+                   nm, dn, cv, fallback=fb, use_kernel=True,
+                   interpret=True),
+               (a(n), a(n), a(n), a(n)), (n,))
     # leaf-shaped wrappers: lane-odd tensor + sub-lane tensor
     for shape in ((33, 7), (5,), (256, 130)):
         n = math.prod(shape)

@@ -41,6 +41,7 @@ contribute, with their weights renormalized over the covering subset
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional, Sequence
 
 import jax
@@ -52,6 +53,8 @@ from repro.core.segments import path_keys as sg_path_keys
 
 COVERAGE_POLICIES = ("loose", "strict")
 AGG_MODES = ("filler", "coverage")
+
+_log = logging.getLogger("repro.core.aggregation")
 
 
 def client_weights(n_samples: Sequence[int]) -> np.ndarray:
@@ -164,17 +167,90 @@ def coverage_mask(family, client_cfg, global_cfg, *,
 
 
 # ---------------------------------------------------------- aggregation
-AGG_LAYOUTS = ("plane", "leaf")
+AGG_LAYOUTS = ("plane", "stream", "leaf")
+
+# "stream" once the materialized cohort plane would cross this (or K
+# grows past _AUTO_STREAM_K): past here the O(P·K_chunk) accumulator
+# beats holding (K, P) + the kernel's temporaries resident
+_AUTO_STREAM_K = 32
+_AUTO_STREAM_BYTES = 256 * 2 ** 20
+_auto_logged: set = set()
 
 
-def fedavg(trees: Sequence, weights) -> object:
+def resolve_agg_layout(layout: Optional[str], *, backend: Optional[str] = None,
+                       k: Optional[int] = None, p: Optional[int] = None,
+                       k_chunk: Optional[int] = None) -> str:
+    """The ONE ``agg_layout="auto"`` rule. Explicit layouts pass through
+    (validated against ``AGG_LAYOUTS``); ``"auto"``/``None`` picks from
+    the backend and cohort shape:
+
+      * ``"stream"`` when the caller pinned a ``k_chunk``, or the cohort
+        plane is large (K > 32 or K·P·4 bytes > 256 MiB) — the streaming
+        accumulator's O(P·K_chunk) memory envelope,
+      * ``"plane"`` otherwise — the whole-plane fused pass, fastest at
+        small K on every backend (BENCH_new.json),
+      * ``"leaf"`` is NEVER auto-selected: it is the per-leaf reference
+        dispatch, kept only for pinning tests and benchmarks.
+
+    The decision is logged once per distinct (backend, choice) so runs
+    are diagnosable without log spam, and is overridable everywhere the
+    knob appears (``FLRunConfig.agg_layout``, strategy, engine).
+    """
+    if layout in AGG_LAYOUTS:
+        return layout
+    if layout not in (None, "auto"):
+        raise ValueError(f"agg_layout={layout!r}, expected 'auto' or one "
+                         f"of {AGG_LAYOUTS}")
+    if backend is None:
+        backend = jax.default_backend()
+    big = (k is not None and k > _AUTO_STREAM_K) or (
+        k is not None and p is not None
+        and 4 * k * p > _AUTO_STREAM_BYTES)
+    choice = "stream" if (k_chunk is not None or big) else "plane"
+    key = (backend, choice)
+    if key not in _auto_logged:
+        _auto_logged.add(key)
+        _log.info("agg_layout='auto' -> %r (backend=%s, K=%s, P=%s, "
+                  "k_chunk=%s)", choice, backend, k, p, k_chunk)
+    return choice
+
+
+_last_stats: dict = {}
+
+
+def last_agg_stats() -> dict:
+    """Stats of the most recent ``fedavg_stacked`` call on this process:
+    ``layout``, ``k_chunk`` (streaming only), ``rows``/``n`` (cohort
+    shape) and ``peak_bytes`` — the resident aggregation footprint
+    (whole ``4·K·P`` plane for "plane"/"leaf"; the accumulator triple
+    plus one ``4·k_chunk·P`` chunk for "stream",
+    ``PlaneAccumulator.stats``). Diagnostic surface for benchmarks
+    (``unified_bench``'s peak-memory column) — not part of the math."""
+    return dict(_last_stats)
+
+
+def _record_stats(**kw) -> None:
+    _last_stats.clear()
+    _last_stats.update(kw)
+
+
+def default_k_chunk(k: int, k_chunk: Optional[int] = None) -> int:
+    """The streaming chunk size: the caller's pin, else 16 rows (a chunk
+    small enough that three accumulator buffers + one chunk undercut the
+    whole plane from K = 64 up, large enough to amortize dispatch)."""
+    return max(1, min(k_chunk if k_chunk is not None else 16, k))
+
+
+def fedavg(trees: Sequence, weights, *, layout: Optional[str] = None,
+           k_chunk: Optional[int] = None) -> object:
     """omega^{t+1} = sum_k W_k omega_k  (paper Eq. 1) — ONE
     implementation: stack + a single packed-plane pass (the old
     per-leaf Python accumulate loop, with its per-client f32
     round-trip, is gone)."""
     w = jnp.asarray(weights, jnp.float32)
     assert len(trees) == w.shape[0]
-    return fedavg_stacked(stack_trees(trees), w)
+    return fedavg_stacked(stack_trees(trees), w, layout=layout,
+                          k_chunk=k_chunk)
 
 
 @functools.partial(jax.jit,
@@ -201,7 +277,8 @@ def _plane_pass(stacked, w, masks, mult, fallback, *, spec,
 def fedavg_stacked(stacked, weights, *, masks=None, mult=None,
                    renorm: bool = True, fallback=None,
                    use_kernel: Optional[bool] = None,
-                   layout: Optional[str] = None):
+                   layout: Optional[str] = None,
+                   k_chunk: Optional[int] = None):
     """Aggregate a stacked tree: every leaf (K, ...) -> (...).
 
     Without ``masks`` this is Eq. 1 verbatim. With ``masks`` (a stacked
@@ -214,32 +291,145 @@ def fedavg_stacked(stacked, weights, *, masks=None, mult=None,
     ``W_k m_k / mult_k`` — the multiplicity-aware average for width
     embeddings, fused into the same kernel pass.
 
-    ``layout=None``/"plane" (the default) packs the whole tree into one
-    ``(K, P)`` plane and aggregates in a single fused kernel dispatch
-    (``core.plane`` + ``kernels/fedavg.plane_agg``); "leaf" is the
-    per-leaf reference dispatch the plane path is pinned against.
-    ``use_kernel=None`` auto-selects the Pallas kernel (compiled) on a
-    TPU backend and the jnp fallback everywhere else. Masks/mult/
-    fallback trees are validated leaf-by-leaf — a structure or shape
-    mismatch raises naming the offending leaf path.
+    ``layout=None``/"auto" resolves per ``resolve_agg_layout``: "plane"
+    packs the whole tree into one ``(K, P)`` plane and aggregates in a
+    single fused kernel dispatch (``core.plane`` +
+    ``kernels/fedavg.plane_agg``); "stream" consumes the cohort in
+    ``(k_chunk, P)`` row chunks through a :class:`PlaneAccumulator`, so
+    no more than one chunk plus three ``(P,)`` buffers is ever resident
+    — identical math (accumulate + one divide), O(P·k_chunk) memory;
+    "leaf" is the per-leaf reference dispatch the plane path is pinned
+    against. ``use_kernel=None`` auto-selects the Pallas kernel
+    (compiled) on a TPU backend and the jnp fallback everywhere else.
+    Masks/mult/fallback trees are validated leaf-by-leaf — a structure
+    or shape mismatch raises naming the offending leaf path.
     """
     w = jnp.asarray(weights, jnp.float32)
     if use_kernel is None:
         from repro.kernels.fedavg.fedavg import on_tpu
         use_kernel = on_tpu()
-    layout = layout or "plane"
-    if layout not in AGG_LAYOUTS:
-        raise ValueError(f"layout={layout!r}, expected one of "
-                         f"{AGG_LAYOUTS}")
     if mult is not None:
         assert masks is not None, "mult needs masks (coverage aggregation)"
+    spec, _ = plane.PlaneSpec.from_stacked(stacked)
+    layout = resolve_agg_layout(layout, k=int(w.shape[0]), p=spec.size,
+                                k_chunk=k_chunk)
     if layout == "plane":
-        spec, _ = plane.PlaneSpec.from_stacked(stacked)
+        _record_stats(layout="plane", k_chunk=None, rows=int(w.shape[0]),
+                      n=spec.size, peak_bytes=4 * int(w.shape[0]) * spec.size)
         return _plane_pass(stacked, w, masks, mult, fallback, spec=spec,
                            renorm=renorm, use_kernel=bool(use_kernel))
+    if layout == "stream":
+        return _stream_pass(
+            stacked, w, masks, mult, fallback, spec=spec, renorm=renorm,
+            use_kernel=bool(use_kernel),
+            k_chunk=default_k_chunk(int(w.shape[0]), k_chunk))
+    _record_stats(layout="leaf", k_chunk=None, rows=int(w.shape[0]),
+                  n=spec.size, peak_bytes=4 * int(w.shape[0]) * spec.size)
     return _fedavg_stacked_leaf(stacked, w, masks=masks, mult=mult,
                                 renorm=renorm, fallback=fallback,
                                 use_kernel=use_kernel)
+
+
+def _stream_pass(stacked, w, masks, mult, fallback, *, spec,
+                 renorm: bool, use_kernel: bool, k_chunk: int):
+    """The streaming realization of ``fedavg_stacked``: pack each
+    ``k_chunk``-row slice on its own (``plane.stacked_rows`` +
+    ``pack_stacked``), stream it into a :class:`PlaneAccumulator`
+    (donated buffers, one jitted step per chunk), and close with the
+    single divide/fallback pass — never more than one ``(k_chunk, P)``
+    chunk resident. Equals ``_plane_pass`` to 1e-6 (the accumulate is
+    the same masked weighted sum, split associatively)."""
+    from repro.kernels.fedavg import ops as kops
+    acc = kops.PlaneAccumulator(spec.size, use_kernel=use_kernel,
+                                k_hint=k_chunk)
+    for lo, hi in plane.chunk_bounds(int(w.shape[0]), k_chunk):
+        x = plane.pack_stacked(plane.stacked_rows(stacked, lo, hi), spec,
+                               what="fedavg_stacked/stream")
+        m = (plane.pack_stacked(plane.stacked_rows(masks, lo, hi), spec,
+                                what="fedavg_stacked/stream-masks")
+             if masks is not None else None)
+        mu = (plane.pack_stacked(plane.stacked_rows(mult, lo, hi), spec,
+                                 what="fedavg_stacked/stream-mult")
+              if mult is not None else None)
+        acc.update(x, w[lo:hi], masks=m, mult=mu)
+    fb = (plane.pack(fallback, spec, what="fedavg_stacked/fallback")
+          if fallback is not None else None)
+    out = acc.finish(renorm=(masks is not None and renorm), fallback=fb)
+    _record_stats(layout="stream", k_chunk=k_chunk, **acc.stats())
+    return plane.unpack(out, spec)
+
+
+def plane_partials(x, w, masks=None, mult=None):
+    """Edge-reduce unit of the two-level hierarchy, pure jnp (and hence
+    ``shard_map``-able — the engine psums the triple over the cohort
+    mesh): one sub-cohort's packed rows ``x (K_g, P)`` with GLOBAL subset
+    weights ``w (K_g,)`` -> the partial ``(num, den, cov)`` triple,
+    each ``(P,)``. Summing triples across groups and finishing once
+    (``finish_partials``) equals the flat aggregation exactly — the
+    masked weighted sum is associative."""
+    from repro.kernels.fedavg import ref as kref
+    z = jnp.zeros(x.shape[-1], jnp.float32)
+    return kref.plane_accum_ref(z, z, z, x, w, masks, mult)
+
+
+def finish_partials(num, den, cov, *, renorm: bool = True, fallback=None):
+    """Global reduce tail: close summed ``(P,)`` partial triples with the
+    one divide/fallback pass (``ref.plane_finish_ref``)."""
+    from repro.kernels.fedavg import ref as kref
+    return kref.plane_finish_ref(num, den, cov, fallback, renorm=renorm)
+
+
+def fedavg_hierarchical(stacked, weights, *, groups, masks=None, mult=None,
+                        renorm: bool = True, fallback=None,
+                        use_kernel: Optional[bool] = None,
+                        k_chunk: Optional[int] = None):
+    """Two-level hierarchical aggregation: ``groups`` (a partition of
+    ``range(K)`` into edge sub-cohorts, any sizes/order) each stream
+    their rows into their OWN :class:`PlaneAccumulator` (the edge
+    reduce), the partial triples merge by summation (the global reduce),
+    and ONE finish pass closes — exact vs. the flat aggregation by
+    associativity, for every split. Weights are the GLOBAL subset
+    weights throughout; per-group renormalization would be wrong and is
+    never applied. ``masks``/``mult``/``fallback``/``renorm`` follow
+    ``fedavg_stacked``."""
+    w = jnp.asarray(weights, jnp.float32)
+    K = int(w.shape[0])
+    flat_idx = sorted(int(i) for g in groups for i in g)
+    if flat_idx != list(range(K)):
+        raise ValueError(
+            f"groups must partition range({K}) exactly, got {groups!r}")
+    if mult is not None:
+        assert masks is not None, "mult needs masks (coverage aggregation)"
+    if use_kernel is None:
+        from repro.kernels.fedavg.fedavg import on_tpu
+        use_kernel = on_tpu()
+    from repro.kernels.fedavg import ops as kops
+    spec, _ = plane.PlaneSpec.from_stacked(stacked)
+    kc = default_k_chunk(K, k_chunk)
+
+    def packed_rows(tree, sel, what):
+        rows = jax.tree.map(lambda a: a[sel], tree)
+        return plane.pack_stacked(rows, spec, what=what)
+
+    total = None
+    for g in groups:
+        idx = np.asarray(list(g), np.int32)
+        acc = kops.PlaneAccumulator(spec.size, use_kernel=bool(use_kernel),
+                                    k_hint=kc)
+        for lo in range(0, idx.size, kc):
+            sel = idx[lo:lo + kc]
+            acc.update(
+                packed_rows(stacked, sel, "fedavg_hierarchical"),
+                w[sel],
+                masks=(packed_rows(masks, sel, "fedavg_hierarchical/masks")
+                       if masks is not None else None),
+                mult=(packed_rows(mult, sel, "fedavg_hierarchical/mult")
+                      if mult is not None else None))
+        total = acc if total is None else total.merge(acc)
+    fb = (plane.pack(fallback, spec, what="fedavg_hierarchical/fallback")
+          if fallback is not None else None)
+    out = total.finish(renorm=(masks is not None and renorm), fallback=fb)
+    return plane.unpack(out, spec)
 
 
 def _fedavg_stacked_leaf(stacked, w, *, masks, mult, renorm, fallback,
@@ -309,7 +499,8 @@ def _fedavg_stacked_leaf(stacked, w, *, masks, mult, renorm, fallback,
 def fedavg_masked(trees: Sequence, weights, masks: Sequence, *,
                   mult: Optional[Sequence] = None, renorm: bool = True,
                   fallback=None, use_kernel: Optional[bool] = None,
-                  layout: Optional[str] = None):
+                  layout: Optional[str] = None,
+                  k_chunk: Optional[int] = None):
     """List-of-trees layout of the coverage-weighted average: the
     HeteroFL rule — average each coordinate over only the clients that
     hold it (optionally multiplicity-aware via ``mult``, a list of
@@ -320,7 +511,8 @@ def fedavg_masked(trees: Sequence, weights, masks: Sequence, *,
                           masks=stack_trees(masks),
                           mult=stack_trees(mult) if mult is not None else None,
                           renorm=renorm, fallback=fallback,
-                          use_kernel=use_kernel, layout=layout)
+                          use_kernel=use_kernel, layout=layout,
+                          k_chunk=k_chunk)
 
 
 def stack_trees(trees: Sequence):

@@ -30,10 +30,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
-from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
-                                    client_weights, coverage_mask, fedavg,
-                                    fedavg_masked, multiplicity,
-                                    subset_weights)
+from repro.core.aggregation import (AGG_LAYOUTS, AGG_MODES,
+                                    COVERAGE_POLICIES, client_weights,
+                                    coverage_mask, fedavg, fedavg_masked,
+                                    multiplicity, subset_weights)
 from repro.core.netchange import KeyedCache, round_embed_seed
 
 
@@ -46,8 +46,20 @@ class FedADP:
     coverage: str = "loose"      # the loop-reference reading
     agg_mode: str = "filler"     # the paper's Eq. 1
     base_seed: int = 0
+    agg_layout: Optional[str] = None   # aggregation layout: None/"auto"
+                                       # resolves per cohort shape
+                                       # (aggregation.resolve_agg_layout);
+                                       # "plane" | "stream" | "leaf" pin
+    k_chunk: Optional[int] = None      # streaming chunk rows (None = auto)
 
     def __post_init__(self):
+        if self.agg_layout not in (None, "auto") + AGG_LAYOUTS:
+            raise ValueError(
+                f"agg_layout={self.agg_layout!r}, expected None, 'auto' "
+                f"or one of {AGG_LAYOUTS}")
+        if self.k_chunk is not None and int(self.k_chunk) < 1:
+            raise ValueError(f"k_chunk={self.k_chunk!r}, expected a "
+                             f"positive int or None")
         if self.coverage not in COVERAGE_POLICIES:
             raise ValueError(f"coverage={self.coverage!r}, expected one of "
                              f"{COVERAGE_POLICIES}")
@@ -159,8 +171,11 @@ class FedADP:
                      for k in selected]
             return fedavg_masked(expanded, w, masks,
                                  mult=(None if mults[0] is None else mults),
-                                 renorm=True, fallback=global_params)
-        return fedavg(expanded, w)
+                                 renorm=True, fallback=global_params,
+                                 layout=self.agg_layout,
+                                 k_chunk=self.k_chunk)
+        return fedavg(expanded, w, layout=self.agg_layout,
+                      k_chunk=self.k_chunk)
 
     def round(self, global_params, local_train: Callable, round_idx: int,
               selected: Optional[Sequence[int]] = None):

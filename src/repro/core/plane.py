@@ -268,6 +268,25 @@ def requantize(plane: jnp.ndarray, spec: PlaneSpec) -> jnp.ndarray:
     return jnp.concatenate(pieces, axis=-1)
 
 
+# ----------------------------------------------------- streaming helpers
+def chunk_bounds(k: int, k_chunk: int) -> Tuple[Tuple[int, int], ...]:
+    """Row-chunk bounds ``((lo, hi), ...)`` covering ``k`` rows in
+    ``k_chunk``-sized chunks (last chunk ragged when ``k_chunk`` does not
+    divide ``k``). The ONE chunking rule every streaming consumer shares
+    — equal chunk sizes are what keep the engine's per-size jitted step
+    cache at one entry per round shape."""
+    if k_chunk < 1:
+        raise ValueError(f"k_chunk={k_chunk!r} must be >= 1")
+    k_chunk = min(k_chunk, k)
+    return tuple((lo, min(lo + k_chunk, k)) for lo in range(0, k, k_chunk))
+
+
+def stacked_rows(stacked, lo: int, hi: int):
+    """Row-slice a stacked tree: every leaf ``(K, ...)`` ->
+    ``(hi - lo, ...)`` — the tree-level view of a plane row chunk."""
+    return jax.tree.map(lambda a: a[lo:hi], stacked)
+
+
 # ------------------------------------------------- packed cohort builders
 def cohort_planes(family, client_cfgs: Sequence, global_cfg, *,
                   seed: int = 0, coverage: str = "loose"):

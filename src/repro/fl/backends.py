@@ -125,13 +125,15 @@ class UnifiedBackend:
     def __init__(self, family, client_cfgs: Sequence, samplers: List, *,
                  local_epochs: int = 1, lr: float = 0.01,
                  momentum: float = 0.0, use_kernel: Optional[bool] = None,
-                 mesh=None, seed: int = 0):
+                 mesh=None, seed: int = 0, agg_layout: str = "auto",
+                 k_chunk: Optional[int] = None):
         self.family = family
         self.client_cfgs = list(client_cfgs)
         self.samplers = samplers
         self.local_epochs = local_epochs
         self.lr, self.momentum = lr, momentum
         self.use_kernel, self.mesh, self.seed = use_kernel, mesh, seed
+        self.agg_layout, self.k_chunk = agg_layout, k_chunk
         self.strategy: Optional[Strategy] = None
         self.engine: Optional[UnifiedEngine] = None
         self._engine_key = None
@@ -153,11 +155,23 @@ class UnifiedBackend:
         # mappings from it, so the engine must too; backend `seed` is the
         # fallback for per-client-state strategies, which only embed once)
         embed_seed = getattr(strategy, "base_seed", self.seed)
+        # the aggregation layout / streaming chunk: an EXPLICIT strategy
+        # setting wins (the strategy's aggregate must match the engine's),
+        # otherwise the backend's knob (itself defaulting to "auto" —
+        # core.aggregation.resolve_agg_layout picks per cohort shape)
+        agg_layout = getattr(strategy, "agg_layout", None)
+        if agg_layout in (None, "auto", "leaf"):
+            # "leaf" is a loop-side reference layout; the engine has no
+            # per-leaf path, so it falls through to the backend's knob
+            agg_layout = self.agg_layout
+        k_chunk = getattr(strategy, "k_chunk", None)
+        if k_chunk is None:
+            k_chunk = self.k_chunk
         key = (strategy.name, getattr(strategy, "filler", "zero"),
                getattr(strategy, "agg_mode", "filler"),
                getattr(strategy, "coverage", "loose"),
                getattr(strategy, "narrow_mode", "paper"), embed_seed,
-               tuple(n_samples))
+               tuple(n_samples), agg_layout, k_chunk)
         if self.engine is None or self._engine_key != key:
             self._engine_key = key
             self.engine = UnifiedEngine(
@@ -168,7 +182,8 @@ class UnifiedBackend:
                 coverage=getattr(strategy, "coverage", "loose"),
                 narrow_mode=getattr(strategy, "narrow_mode", "paper"),
                 use_kernel=self.use_kernel, mesh=self.mesh,
-                embed_seed=embed_seed)
+                embed_seed=embed_seed, agg_layout=agg_layout,
+                k_chunk=k_chunk)
         return self
 
     @property

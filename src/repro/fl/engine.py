@@ -77,25 +77,32 @@ ONE bounded ``netchange.KeyedCache`` shared-sizing with the loop's
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import plane, segments as sg
 from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
                                     client_weights, coverage_and_filler,
-                                    global_shapes, loosen, stack_trees,
+                                    default_k_chunk, finish_partials,
+                                    global_shapes, loosen, plane_partials,
+                                    resolve_agg_layout, stack_trees,
                                     subset_weights)
 from repro.core.baselines import _cluster_ids
 from repro.core.netchange import (KeyedCache, NARROW_MODES,
                                   round_embed_seed)
 from repro.kernels.fedavg import ops as kops
+from repro.kernels.fedavg.fedavg import on_tpu
 from repro.optim import sgd
-from repro.sharding.rules import stacked_client_spec
+from repro.sharding.ctx import CohortCtx
+
+ENGINE_LAYOUTS = ("auto", "plane", "stream")
 
 
 def client_embedding(family, client_cfgs: Sequence, global_cfg, *,
@@ -110,6 +117,42 @@ def client_embedding(family, client_cfgs: Sequence, global_cfg, *,
         masks.append(m)
         fillers.append(f)
     return stack_trees(masks), stack_trees(fillers)
+
+
+# ---- the engine's hot plane algebra as module-level jitted programs:
+# eager versions built a handful of full (K_rows, P) temporaries per call
+# (BENCH_new.json showed the plane layout losing to the tree path on CPU
+# exactly here); module-level jits also share compile caches across
+# engines of the same plane shape
+@jax.jit
+def _fused_round_start(gp: jnp.ndarray, m: jnp.ndarray, f: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """Depth-only round start on gathered rows: ``up(down(g))`` is
+    literally ``g·m + f·(1−m)`` there."""
+    return gp[None, :] * m + f * (1.0 - m)
+
+
+@jax.jit
+def _fold_rows(sp: jnp.ndarray, cov_p: jnp.ndarray, gp: jnp.ndarray
+               ) -> jnp.ndarray:
+    """filler_mode="global" on gathered rows: substitute the server's
+    current values on the coordinates a client does not cover."""
+    return sp * cov_p + gp[None, :] * (1.0 - cov_p)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("renorm", "use_kernel", "fold_global"))
+def _plane_agg_fused(sp, w, cov_p, mult_p, gp, *, renorm: bool,
+                     use_kernel: bool, fold_global: bool):
+    """The whole (sub-)plane aggregation as ONE jitted program:
+    ``fold_global`` fuses filler_mode="global"'s uncovered-coordinate
+    substitution into the same pass (no eager (K, P) temporaries), then
+    a single ``plane_agg`` dispatch."""
+    if fold_global:
+        sp = sp * cov_p + gp[None, :] * (1.0 - cov_p)
+        cov_p = mult_p = gp = None
+    return kops.plane_agg(sp, w, masks=cov_p, mult=mult_p, fallback=gp,
+                          renorm=renorm, use_kernel=use_kernel)
 
 
 @dataclass
@@ -134,8 +177,20 @@ class UnifiedEngine:
     embed_seed: int = 0                  # base NetChange seed; fedadp
                                          # rounds derive per-(round, k)
                                          # seeds from it (round_embed_seed)
+    agg_layout: str = "auto"             # "auto" | "plane" | "stream":
+                                         # whole-plane vs O(P·k_chunk)
+                                         # streaming fedadp rounds
+    k_chunk: Optional[int] = None        # streaming chunk rows (None=auto)
 
     def __post_init__(self):
+        if self.agg_layout not in ENGINE_LAYOUTS:
+            raise ValueError(
+                f"agg_layout={self.agg_layout!r}, expected one of "
+                f"{ENGINE_LAYOUTS} (the engine has no per-leaf layout — "
+                f"'leaf' lives in core.aggregation only)")
+        if self.k_chunk is not None and int(self.k_chunk) < 1:
+            raise ValueError(f"k_chunk={self.k_chunk!r}, expected a "
+                             f"positive int or None")
         if self.agg_mode not in AGG_MODES:
             raise ValueError(f"agg_mode={self.agg_mode!r}, expected one of "
                              f"{AGG_MODES}")
@@ -173,31 +228,49 @@ class UnifiedEngine:
         # matrices, coverage/multiplicity rows, prefix column masks —
         # sharing the sizing rule with the loop's FedADP cache
         self._cache = KeyedCache(n_clients=len(self.client_cfgs))
-        # fixed-seed cohort embedding: per-client-state methods live here
-        # permanently; for fedadp it is the depth-only fast path (where
-        # the embedding is seed-invariant anyway). The strict mask (and
-        # with it the strict coverage reading) is seed-invariant even on
+        # fixed-seed cohort embedding, DEDUPLICATED per unique client
+        # config: 100×-scale cohorts repeat a handful of architectures,
+        # so the seed-invariant artifacts (strict mask, filler, coverage
+        # reading, multiplicity at embed_seed — all functions of the
+        # config alone) are built once per UNIQUE config and stored as
+        # (U, P) row planes; client k's row is a gather through the uid
+        # index. The full (K, P) planes and stacked trees are LAZY
+        # caches (cached_property) for tree-facing consumers — the
+        # streaming round path only ever gathers chunk rows, keeping
+        # round memory O(P·k_chunk) at any K. The strict mask (and with
+        # it the strict coverage reading) is seed-invariant even on
         # width cohorts — To-Wider lands a client parameter on EVERY
         # union channel of a widened axis no matter the mapping.
-        trip = [self._client_mask(k) for k in range(len(self.client_cfgs))]
-        self.masks = stack_trees([t[0] for t in trip])
-        self.filler = stack_trees([t[1] for t in trip])
-        self.cov_masks = stack_trees([t[2] for t in trip])
-        # ...and the same four parallel trees as row-aligned planes,
-        # packed once: all per-round mask algebra happens on these
-        self.masks_p = plane.pack_stacked(self.masks, self.plane_spec)
-        self.filler_p = plane.pack_stacked(self.filler, self.plane_spec)
-        self.cov_p = plane.pack_stacked(self.cov_masks, self.plane_spec)
+        uid_of: Dict[Any, int] = {}
+        for cfg in self.client_cfgs:
+            uid_of.setdefault(cfg, len(uid_of))
+        self._uniq_cfgs = list(uid_of)
+        self._uid = np.asarray([uid_of[c] for c in self.client_cfgs],
+                               np.int32)
+        self._uid_jnp = jnp.asarray(self._uid)
+        utrip = [self._uid_mask(u) for u in range(len(self._uniq_cfgs))]
+        self._umask_p = jnp.stack([plane.pack(t[0], self.plane_spec)
+                                   for t in utrip])
+        self._ufill_p = jnp.stack([plane.pack(t[1], self.plane_spec)
+                                   for t in utrip])
+        self._ucov_p = jnp.stack([plane.pack(t[2], self.plane_spec)
+                                  for t in utrip])
         if self._depth_only:
             self._seg_mats0: Dict = {}
-            self._mult0 = None
-            self.mult_p = None
+            self._umult_p = None
         else:
             segs = [self._client_seg(k, self.embed_seed)
                     for k in range(len(self.client_cfgs))]
             self._seg_mats0 = sg.stack_matrices([s[0] for s in segs])
-            self._mult0 = stack_trees([s[1] for s in segs])
-            self.mult_p = plane.pack_stacked(self._mult0, self.plane_spec)
+            rep = [int(np.argmax(self._uid == u))
+                   for u in range(len(self._uniq_cfgs))]
+            self._umult_p = jnp.stack([
+                plane.pack(self._client_seg(k, self.embed_seed)[1],
+                           self.plane_spec) for k in rep])
+        self._ctx = CohortCtx(mesh=self.mesh, client_axes=self.client_axes,
+                              k_chunk=self.k_chunk)
+        self._edge_fns: Dict = {}
+        self._agg_stats: Dict = {}
         self.clusters = _cluster_ids(self.client_cfgs)
         if self.method == "flexifed":
             full = tuple(range(len(self.client_cfgs)))
@@ -229,18 +302,78 @@ class UnifiedEngine:
                 "traces": dict(self._step_traces),
                 "cache_sizes": sizes}
 
-    def _client_mask(self, k: int):
-        """(strict mask, filler, cov) at the fixed ``embed_seed`` — the
-        strict mask is seed-invariant always; filler and the loose cov
-        reading are seed-invariant on depth-only cohorts (the only place
-        the fixed filler/cov are used for fedadp)."""
+    def _uid_mask(self, u: int):
+        """(strict mask, filler, cov) of UNIQUE config ``u`` at the fixed
+        ``embed_seed`` — the strict mask is seed-invariant always; filler
+        and the loose cov reading are seed-invariant on depth-only
+        cohorts (the only place the fixed filler/cov are used for
+        fedadp). Built once per unique architecture, not per client."""
         def build():
             mask, filler = coverage_and_filler(
-                self.family, self.client_cfgs[k], self.global_cfg,
+                self.family, self._uniq_cfgs[u], self.global_cfg,
                 seed=self.embed_seed)
             cov = mask if self.coverage == "strict" else loosen(mask, filler)
             return (mask, filler, cov)
-        return self._cache.get(("mask", k), build)
+        return self._cache.get(("mask", "uid", u), build)
+
+    def _client_mask(self, k: int):
+        """Client k's (strict mask, filler, cov) — a uid-deduplicated
+        view of ``_uid_mask``."""
+        return self._uid_mask(int(self._uid[k]))
+
+    # ---- lazy full-cohort views (tree-facing consumers only): the
+    # streaming round path never touches these, so a K=256 engine holds
+    # (U, P) per-uid rows, not four (K, P) planes
+    @functools.cached_property
+    def masks(self):
+        return stack_trees([self._client_mask(k)[0]
+                            for k in range(len(self.client_cfgs))])
+
+    @functools.cached_property
+    def filler(self):
+        return stack_trees([self._client_mask(k)[1]
+                            for k in range(len(self.client_cfgs))])
+
+    @functools.cached_property
+    def cov_masks(self):
+        return stack_trees([self._client_mask(k)[2]
+                            for k in range(len(self.client_cfgs))])
+
+    @functools.cached_property
+    def masks_p(self):
+        return self._umask_p[self._uid_jnp]
+
+    @functools.cached_property
+    def filler_p(self):
+        return self._ufill_p[self._uid_jnp]
+
+    @functools.cached_property
+    def cov_p(self):
+        return self._ucov_p[self._uid_jnp]
+
+    @functools.cached_property
+    def mult_p(self):
+        return (None if self._umult_p is None
+                else self._umult_p[self._uid_jnp])
+
+    # ---- chunk-row gathers from the per-uid store: ``(len(ks), P)``
+    # rows for a participating chunk, never the full plane
+    def _uid_rows(self, store: jnp.ndarray, ks: Sequence[int]
+                  ) -> jnp.ndarray:
+        return store[self._uid_jnp[jnp.asarray(list(ks))]]
+
+    def _mask_rows(self, ks) -> jnp.ndarray:
+        return self._uid_rows(self._umask_p, ks)
+
+    def _filler_rows(self, ks) -> jnp.ndarray:
+        return self._uid_rows(self._ufill_p, ks)
+
+    def _cov_rows(self, ks) -> jnp.ndarray:
+        return self._uid_rows(self._ucov_p, ks)
+
+    def _mult_rows(self, ks) -> Optional[jnp.ndarray]:
+        return (None if self._umult_p is None
+                else self._uid_rows(self._umult_p, ks))
 
     def _client_seg(self, k: int, seed: int):
         """(E Eᵀ matrices, multiplicity tree) for client k at one seed —
@@ -331,7 +464,7 @@ class UnifiedEngine:
 
         fn = step_core
         if self.mesh is not None:
-            pspec = stacked_client_spec(self.mesh, self.client_axes, k_count)
+            pspec = self._ctx.row_spec(k_count)
             if pspec != P():
                 # local training is independent per client: every operand
                 # carries the K axis (plane rows, mask rows, stacked
@@ -389,11 +522,13 @@ class UnifiedEngine:
     def _round_start_packed(self, gp: jnp.ndarray, selected=None
                             ) -> jnp.ndarray:
         """Depth-only round start, fused on planes: ``up(down(g))`` is
-        literally ``g·m + f·(1−m)`` there — one broadcast expression over
-        the gathered mask/filler rows instead of a per-leaf tree-map."""
-        m = self._rows(self.masks_p, selected)
-        f = self._rows(self.filler_p, selected)
-        return gp[None, :] * m + f * (1.0 - m)
+        literally ``g·m + f·(1−m)`` there — one jitted broadcast over
+        the uid-gathered mask/filler rows instead of a per-leaf
+        tree-map."""
+        ks = (range(len(self.client_cfgs)) if selected is None
+              else list(selected))
+        return _fused_round_start(gp, self._mask_rows(ks),
+                                  self._filler_rows(ks))
 
     def round_start(self, global_params, selected=None, round_idx: int = 0):
         """Stacked per-client views of a global model: the unified-space
@@ -451,6 +586,25 @@ class UnifiedEngine:
                                  jnp.asarray(i, jnp.int32))
         return sp
 
+    def _train_packed_chunked(self, sp: jnp.ndarray,
+                              stacked_batches: Sequence,
+                              masks_p: jnp.ndarray, seg_mats,
+                              k_chunk: int) -> jnp.ndarray:
+        """``_train_packed`` in ``k_chunk``-row chunks: the per-client
+        -state methods must keep the full ``(K, P)`` state anyway, but
+        chunking bounds the TRAINING working set (grads + donated
+        optimizer plane) to O(P·k_chunk), and equal chunk sizes reuse
+        one per-size jitted step."""
+        parts = []
+        for lo, hi in plane.chunk_bounds(int(sp.shape[0]), k_chunk):
+            parts.append(self._train_packed(
+                sp[lo:hi],
+                [jax.tree.map(lambda a: a[lo:hi], b)
+                 for b in stacked_batches],
+                masks_p[lo:hi],
+                jax.tree.map(lambda a: a[lo:hi], seg_mats)))
+        return jnp.concatenate(parts, axis=0)
+
     def train_round(self, stacked, stacked_batches: Sequence, *, masks=None,
                     seg_mats=None):
         """Tree-facing wrapper over ``_train_packed``: packs the stacked
@@ -469,22 +623,117 @@ class UnifiedEngine:
             self.plane_spec)
 
     # --------------------------------------------------------- aggregation
+    def _use_kernel(self) -> bool:
+        return on_tpu() if self.use_kernel is None else bool(self.use_kernel)
+
+    def agg_stats(self) -> dict:
+        """Accounting of the LAST aggregation pass — layout, row count,
+        and ``peak_bytes`` (the resident aggregation working set: the
+        whole ``(K, P)`` sub-plane for layout "plane"; three ``(P,)``
+        buffers + one ``(k_chunk, P)`` chunk for "stream" —
+        ``PlaneAccumulator.stats``). The bench's peak-memory column and
+        the O(P·k_chunk) envelope test read this."""
+        return dict(self._agg_stats)
+
     def _aggregate_packed(self, sp: jnp.ndarray, w, gp=None, cov_p=None,
                           mult_p=None) -> jnp.ndarray:
-        """FedADP Eq. 1-2 over the (sub-)plane in ONE fused kernel pass
-        (``kernels/fedavg.plane_agg``) — weights already renormalized
-        over the participating subset by the caller."""
+        """FedADP Eq. 1-2 over the (sub-)plane in ONE fused jitted pass
+        (``_plane_agg_fused`` → ``kernels/fedavg.plane_agg``) — weights
+        already renormalized over the participating subset by the
+        caller."""
         w = jnp.asarray(w, jnp.float32)
+        self._agg_stats = {
+            "layout": "plane", "k_chunk": None,
+            "rows": int(sp.shape[0]), "n": int(sp.shape[1]),
+            "peak_bytes": 4 * int(sp.shape[0]) * int(sp.shape[1])}
+        uk = self._use_kernel()
         if self.agg_mode == "coverage":
             assert gp is not None, \
                 'agg_mode="coverage" needs the current global params'
-            return kops.plane_agg(sp, w, masks=cov_p, mult=mult_p,
-                                  renorm=True, fallback=gp,
-                                  use_kernel=self.use_kernel)
+            return _plane_agg_fused(sp, w, cov_p, mult_p, gp, renorm=True,
+                                    use_kernel=uk, fold_global=False)
         if self.filler_mode == "global":
             assert gp is not None
-            sp = sp * cov_p + gp[None, :] * (1.0 - cov_p)
-        return kops.plane_agg(sp, w, use_kernel=self.use_kernel)
+            return _plane_agg_fused(sp, w, cov_p, None, gp, renorm=True,
+                                    use_kernel=uk, fold_global=True)
+        return _plane_agg_fused(sp, w, None, None, None, renorm=True,
+                                use_kernel=uk, fold_global=False)
+
+    def _edge_fn(self, k_count: int, pspec, has_mask: bool, has_mult: bool,
+                 fold: bool):
+        """Build (once per signature) the shard-mapped edge reduce: each
+        device runs the pure-jnp ``aggregation.plane_partials`` on its
+        LOCAL rows, a ``psum`` over the client axes is the global reduce
+        — exact by associativity, no gather of the full plane on any
+        device."""
+        axes = (self.client_axes if len(self.client_axes) > 1
+                else self.client_axes[0])
+
+        def psum3(trip):
+            return tuple(jax.lax.psum(t, axes) for t in trip)
+
+        if fold:
+            def body(sp, w, cov_p, gp):
+                folded = sp * cov_p + gp[None, :] * (1.0 - cov_p)
+                return psum3(plane_partials(folded, w))
+            in_specs = (pspec, pspec, pspec, P())
+        elif has_mult:
+            def body(sp, w, cov_p, mult_p):
+                return psum3(plane_partials(sp, w, cov_p, mult_p))
+            in_specs = (pspec, pspec, pspec, pspec)
+        elif has_mask:
+            def body(sp, w, cov_p):
+                return psum3(plane_partials(sp, w, cov_p))
+            in_specs = (pspec, pspec, pspec)
+        else:
+            def body(sp, w):
+                return psum3(plane_partials(sp, w))
+            in_specs = (pspec, pspec)
+        return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=(P(), P(), P()),
+                                 check_rep=False))
+
+    def _edge_reduce_packed(self, sp: jnp.ndarray, w, gp=None, cov_p=None,
+                            mult_p=None) -> Optional[jnp.ndarray]:
+        """Two-level hierarchical aggregation over the cohort mesh
+        (DESIGN.md §9): sub-cohort "edge" reducers (one per mesh slot of
+        the client axes) pre-reduce their rows to partial
+        (num, den, cov) triples, the psum combines them, and ONE
+        replicated finish pass closes. Weights are the GLOBAL subset
+        weights — per-edge renormalization would be wrong and never
+        happens. Returns ``None`` when the rows don't shard over the
+        mesh (caller falls back to the flat fused pass)."""
+        if self.mesh is None:
+            return None
+        k_count = int(sp.shape[0])
+        pspec = self._ctx.row_spec(k_count)
+        if pspec == P():
+            return None
+        coverage = self.agg_mode == "coverage"
+        fold = (not coverage) and self.filler_mode == "global"
+        has_mask = coverage and cov_p is not None
+        has_mult = coverage and mult_p is not None
+        key = (k_count, has_mask, has_mult, fold)
+        if key not in self._edge_fns:
+            self._edge_fns[key] = self._edge_fn(k_count, pspec, has_mask,
+                                                has_mult, fold)
+        fn = self._edge_fns[key]
+        w = jnp.asarray(w, jnp.float32)
+        if fold:
+            trip = fn(sp, w, cov_p, gp)
+        elif has_mult:
+            trip = fn(sp, w, cov_p, mult_p)
+        elif has_mask:
+            trip = fn(sp, w, cov_p)
+        else:
+            trip = fn(sp, w)
+        self._agg_stats = {
+            "layout": "edge", "k_chunk": None, "rows": k_count,
+            "n": int(sp.shape[1]), "edges": self._ctx.edge_extent,
+            "peak_bytes": 4 * int(sp.shape[1]) * (
+                3 + -(-k_count // max(self._ctx.edge_extent, 1)))}
+        return finish_partials(*trip, renorm=coverage,
+                               fallback=gp if coverage else None)
 
     def aggregate_global(self, stacked, global_params=None, selected=None,
                          *, cov=None, mult=None):
@@ -629,6 +878,13 @@ class UnifiedEngine:
         sel = self._resolve(selected)
         spec = self.plane_spec
         if self.method == "fedadp":
+            ks = (list(range(len(self.client_cfgs))) if sel is None
+                  else list(sel))
+            layout = resolve_agg_layout(self.agg_layout, k=len(ks),
+                                        p=spec.size, k_chunk=self.k_chunk)
+            if layout == "stream":
+                return self._run_fedadp_stream(state, stacked_batches, sel,
+                                               round_idx)
             w = subset_weights(self.n_samples, sel)
             gp = plane.pack(state, spec, what="run_round/state")
             need_cov = (self.agg_mode == "coverage"
@@ -636,20 +892,21 @@ class UnifiedEngine:
             if self._depth_only:
                 start = self._round_start_packed(gp, sel)
                 trained = self._train_packed(
-                    start, stacked_batches, self._rows(self.masks_p, sel),
-                    {})
-                cov_p = self._rows(self.cov_p, sel) if need_cov else None
-                out = self._aggregate_packed(
+                    start, stacked_batches, self._mask_rows(ks), {})
+                cov_p = self._cov_rows(ks) if need_cov else None
+                out = self._edge_reduce_packed(
                     trained, w, gp if need_cov else None, cov_p, None)
+                if out is None:
+                    out = self._aggregate_packed(
+                        trained, w, gp if need_cov else None, cov_p, None)
                 return plane.unpack(out, spec)
-            ks = (list(range(len(self.client_cfgs))) if sel is None else sel)
             seeds = [self._round_seed(round_idx, k) for k in ks]
             segs = [self._client_seg(k, s) for k, s in zip(ks, seeds)]
             seg_mats = sg.stack_matrices([s[0] for s in segs])
             start = self._round_start_width(state, sel, round_idx)
             trained = self._train_packed(
                 start, stacked_batches,
-                self._rows(self.masks_p, sel),     # seed-invariant rows
+                self._mask_rows(ks),               # seed-invariant rows
                 seg_mats)
             cov_p = (jnp.stack([self._client_cov_row(k, s)
                                 for k, s in zip(ks, seeds)])
@@ -657,16 +914,26 @@ class UnifiedEngine:
             mult_p = (jnp.stack([self._client_mult_row(k, s)
                                  for k, s in zip(ks, seeds)])
                       if self.agg_mode == "coverage" else None)
-            out = self._aggregate_packed(
+            out = self._edge_reduce_packed(
                 trained, w, gp if need_cov else None, cov_p, mult_p)
+            if out is None:
+                out = self._aggregate_packed(
+                    trained, w, gp if need_cov else None, cov_p, mult_p)
             return plane.unpack(out, spec)
         # per-client-state methods: the stacked tree packs to (K, P),
         # participants are row slices, and the state scatters back as rows
         sp = plane.pack_stacked(state, spec, what="run_round/state")
-        masks_p = self._rows(self.masks_p, sel)
+        ks = (list(range(len(self.client_cfgs))) if sel is None
+              else list(sel))
+        masks_p = self._mask_rows(ks)
         seg_mats = self._gather(self._seg_mats0, sel)
-        trained = self._train_packed(self._rows(sp, sel), stacked_batches,
-                                     masks_p, seg_mats)
+        if self.k_chunk is not None:
+            trained = self._train_packed_chunked(
+                self._rows(sp, sel), stacked_batches, masks_p, seg_mats,
+                default_k_chunk(len(ks), self.k_chunk))
+        else:
+            trained = self._train_packed(self._rows(sp, sel),
+                                         stacked_batches, masks_p, seg_mats)
         if sel is None:
             new = trained
         else:
@@ -678,3 +945,67 @@ class UnifiedEngine:
         elif self.method != "standalone":
             raise ValueError(self.method)
         return plane.unpack_stacked(new, spec)
+
+    def _run_fedadp_stream(self, state, stacked_batches: Sequence, sel,
+                           round_idx: int):
+        """The streaming fedadp round (DESIGN.md §9): the participating
+        cohort is consumed in ``k_chunk``-row chunks — round start, local
+        training and the aggregation UPDATE all happen per chunk, so no
+        more than one ``(k_chunk, P)`` slab of round state is ever
+        resident (plus the accumulator's three ``(P,)`` buffers);
+        ``finish`` closes with the one divide/fallback pass. Identical
+        math to the whole-plane round for every agg/filler mode (the
+        masked weighted sum splits associatively; weights stay the GLOBAL
+        subset weights), verified to 1e-6 in tests/test_streaming.py.
+        Chunks of equal size reuse one per-size jitted training step and
+        one accumulate program — steady-state rounds compile nothing
+        (tests/test_retrace.py)."""
+        spec = self.plane_spec
+        ks = (list(range(len(self.client_cfgs))) if sel is None
+              else list(sel))
+        w = subset_weights(self.n_samples, sel)
+        gp = plane.pack(state, spec, what="run_round/state")
+        kc = default_k_chunk(len(ks), self.k_chunk)
+        coverage = self.agg_mode == "coverage"
+        fold = (not coverage) and self.filler_mode == "global"
+        acc = kops.PlaneAccumulator(spec.size,
+                                    use_kernel=self._use_kernel(),
+                                    k_hint=kc)
+        for lo, hi in plane.chunk_bounds(len(ks), kc):
+            cks = ks[lo:hi]
+            m_rows = self._mask_rows(cks)
+            if self._depth_only:
+                seeds = None
+                seg_mats: Dict = {}
+                start = _fused_round_start(gp, m_rows,
+                                           self._filler_rows(cks))
+            else:
+                seeds = [self._round_seed(round_idx, k) for k in cks]
+                segs = [self._client_seg(k, s)
+                        for k, s in zip(cks, seeds)]
+                seg_mats = sg.stack_matrices([s[0] for s in segs])
+                start = self._round_start_width(state, cks, round_idx)
+            trained = self._train_packed(
+                start,
+                [jax.tree.map(lambda a: a[lo:hi], b)
+                 for b in stacked_batches],
+                m_rows, seg_mats)
+            wk = jnp.asarray(w[lo:hi], jnp.float32)
+            if coverage or fold:
+                cov_rows = (self._cov_rows(cks) if self._depth_only
+                            else jnp.stack([self._client_cov_row(k, s)
+                                            for k, s in zip(cks, seeds)]))
+            if coverage:
+                mult_rows = (None if self._depth_only
+                             else jnp.stack([self._client_mult_row(k, s)
+                                             for k, s in zip(cks, seeds)]))
+                acc.update(trained, wk, masks=cov_rows, mult=mult_rows)
+            elif fold:
+                acc.update(_fold_rows(trained, cov_rows, gp), wk)
+            else:
+                acc.update(trained, wk)
+        out = acc.finish(renorm=coverage,
+                         fallback=gp if coverage else None)
+        self._agg_stats = {"layout": "stream", "k_chunk": kc,
+                           **acc.stats()}
+        return plane.unpack(out, spec)

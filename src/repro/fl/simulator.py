@@ -42,6 +42,13 @@ Beyond-paper knobs (ablations in EXPERIMENTS.md):
   * embed_seed:   base seed of the NetChange To-Wider mappings (None =
                   follow `seed`); both engines derive identical
                   per-(round, client) mappings from it.
+  * agg_layout:   "auto" (default: resolve_agg_layout picks "plane" at
+                  small K and "stream" past K=32 / 256 MiB cohorts,
+                  logged once per backend) | "plane" | "stream" — the
+                  streaming layout aggregates in O(P·k_chunk) memory
+                  (DESIGN.md §9).
+  * k_chunk:      streaming chunk rows (None = auto, 16); pinning it
+                  implies "stream" under agg_layout="auto".
 
 All config values are validated eagerly at ``FLRunConfig`` construction.
 """
@@ -90,6 +97,12 @@ class FLRunConfig:
     use_kernel: Optional[bool] = None    # unified path: None = auto (TPU)
     participation: float = 1.0           # client fraction per round
     participation_seed: int = 0          # per-round sampling seed
+    agg_layout: str = "auto"             # aggregation layout: auto (pick
+                                         # per backend + cohort shape,
+                                         # logged once) | plane | stream
+    k_chunk: Optional[int] = None        # streaming chunk rows; pinning
+                                         # it implies layout "stream"
+                                         # under "auto"
 
     def __post_init__(self):
         # fail at construction, not after `rounds` of work mid-run
@@ -126,6 +139,16 @@ class FLRunConfig:
                 or not isinstance(self.embed_seed, int)):
             raise ValueError(f"embed_seed={self.embed_seed!r} must be an "
                              "int (or None to follow `seed`)")
+        if self.agg_layout not in ("auto", "plane", "stream"):
+            raise ValueError(
+                f"agg_layout={self.agg_layout!r}, expected 'auto', "
+                "'plane' or 'stream' ('leaf' is the per-leaf reference "
+                "layout of core.aggregation, not a run option)")
+        if self.k_chunk is not None and (
+                isinstance(self.k_chunk, bool)
+                or not isinstance(self.k_chunk, int) or self.k_chunk < 1):
+            raise ValueError(f"k_chunk={self.k_chunk!r} must be a "
+                             "positive int (or None for auto)")
 
     @property
     def resolved_embed_seed(self) -> int:
@@ -176,14 +199,16 @@ class Simulator:
             self.cfg.method, self.family, self.client_cfgs, self.n_samples,
             narrow_mode=self.cfg.narrow_mode, filler=self.cfg.filler,
             coverage=self.cfg.coverage, agg_mode=self.cfg.agg_mode,
-            base_seed=self.cfg.resolved_embed_seed)
+            base_seed=self.cfg.resolved_embed_seed,
+            agg_layout=self.cfg.agg_layout, k_chunk=self.cfg.k_chunk)
 
     def _backend(self, kind: str):
         cfg = self.cfg
         # key only on what each backend actually depends on, so e.g. a
         # seed sweep on the loop engine keeps its warm grad fns
         bkey = (kind, cfg.local_epochs, cfg.lr, cfg.momentum) + (
-            (cfg.use_kernel, cfg.resolved_embed_seed)
+            (cfg.use_kernel, cfg.resolved_embed_seed, cfg.agg_layout,
+             cfg.k_chunk)
             if kind == "unified" else ())
         if bkey not in self._backends:
             if kind == "unified":
@@ -191,7 +216,8 @@ class Simulator:
                     self.family, self.client_cfgs, self.samplers,
                     local_epochs=cfg.local_epochs, lr=cfg.lr,
                     momentum=cfg.momentum, use_kernel=cfg.use_kernel,
-                    mesh=self.mesh, seed=cfg.resolved_embed_seed)
+                    mesh=self.mesh, seed=cfg.resolved_embed_seed,
+                    agg_layout=cfg.agg_layout, k_chunk=cfg.k_chunk)
             else:
                 self._backends[bkey] = LoopBackend(
                     self.family, self.client_cfgs, self.samplers,

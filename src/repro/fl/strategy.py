@@ -100,12 +100,14 @@ class FedADPStrategy:
     def __init__(self, family, client_cfgs, n_samples, *,
                  narrow_mode: str = "paper", filler: str = "zero",
                  coverage: str = "loose", agg_mode: str = "filler",
-                 base_seed: int = 0):
+                 base_seed: int = 0, agg_layout: str = "auto",
+                 k_chunk=None):
         if filler not in FILLERS:
             raise ValueError(f"filler={filler!r}, expected one of {FILLERS}")
         self.algo = FedADP(family, client_cfgs, n_samples,
                            narrow_mode=narrow_mode, coverage=coverage,
-                           agg_mode=agg_mode, base_seed=base_seed)
+                           agg_mode=agg_mode, base_seed=base_seed,
+                           agg_layout=agg_layout, k_chunk=k_chunk)
         self.filler = filler
         self.coverage = coverage
         self.agg_mode = agg_mode
@@ -113,6 +115,8 @@ class FedADPStrategy:
         self.base_seed = base_seed       # engine must down() the same way
                                          # and draw the same per-round
                                          # To-Wider mappings as the loop
+        self.agg_layout = agg_layout     # ...and aggregate with the same
+        self.k_chunk = k_chunk           # layout / streaming chunk
         self.family = family
         self.client_cfgs = list(self.algo.client_cfgs)
         self.n_samples = list(n_samples)
@@ -212,13 +216,15 @@ class FlexiFedStrategy(_PerClientStrategy):
 def make_strategy(method: str, family, client_cfgs, n_samples, *,
                   narrow_mode: str = "paper", filler: str = "zero",
                   coverage: str = "loose", agg_mode: str = "filler",
-                  base_seed: int = 0) -> Strategy:
+                  base_seed: int = 0, agg_layout: str = "auto",
+                  k_chunk=None) -> Strategy:
     """Strategy factory keyed on the method names ``FLRunConfig`` uses."""
     if method == "fedadp":
         return FedADPStrategy(family, client_cfgs, n_samples,
                               narrow_mode=narrow_mode, filler=filler,
                               coverage=coverage, agg_mode=agg_mode,
-                              base_seed=base_seed)
+                              base_seed=base_seed, agg_layout=agg_layout,
+                              k_chunk=k_chunk)
     if method == "standalone":
         return StandaloneStrategy(family, client_cfgs, n_samples)
     if method == "clustered":

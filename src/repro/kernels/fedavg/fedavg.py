@@ -23,9 +23,38 @@ from jax.experimental import pallas as pl
 
 LANE = 128
 
+# per-core VMEM and the pipeline's double buffering (pallas guide) — the
+# budget the auto-selected P-tile must fit; kernels_check validates the
+# same numbers statically
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+DOUBLE_BUFFER = 2
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def select_block(n: int, k_rows: int, *, row_streams: int,
+                 col_streams: int = 1, budget: int = VMEM_BUDGET_BYTES,
+                 cap: int = 1 << 16) -> int:
+    """Per-backend auto-selected P-tile: the largest lane-multiple block
+    whose double-buffered VMEM footprint fits the budget.
+
+    ``row_streams`` counts the ``(K, T)`` operands (plane, masks, mult),
+    ``col_streams`` the ``(1, T)`` ones (fallback, output, accumulators) —
+    f32 each. The old fixed ``block=4096`` under-tiled small cohorts
+    (more grid steps than needed) and could not adapt to large K; this
+    picks the tile from the cohort shape instead. ``cap`` bounds the
+    tile so interpret-mode tracing stays cheap; an EXPLICIT ``block``
+    argument anywhere in ``ops`` still passes through uncapped.
+    """
+    bytes_per_col = 4 * (row_streams * max(k_rows, 1) + col_streams)
+    blk = budget // (DOUBLE_BUFFER * bytes_per_col)
+    blk = min(blk, cap)
+    if n >= LANE:
+        blk = min(blk, -(-n // LANE) * LANE)
+    blk = max(LANE, (blk // LANE) * LANE)
+    return blk
 
 
 def _kernel(x_ref, w_ref, o_ref):
@@ -96,6 +125,136 @@ def _plane_kernel(*refs, renorm: bool, has_mult: bool, has_fb: bool):
         covered = jnp.sum(m, axis=0, keepdims=True) > 0
         num = jnp.where(covered, num, fb)
     o_ref[...] = num.astype(o_ref.dtype)
+
+
+def _accum_kernel(*refs, has_mask: bool, has_mult: bool):
+    # The streaming accumulate pass: num/den/cov are (1, T) RUNNING
+    # accumulator blocks ALIASED input->output (in-place — the caller
+    # donates them), x [, m, mu]: (K_chunk, T) chunk blocks, w: (K, 1).
+    # Per coordinate the chunk contributes
+    #   num += Σ_k (w_k m_k [/ mu_k]) x_k
+    #   den += Σ_k  w_k m_k [/ mu_k]
+    #   cov += Σ_k  m_k
+    # so after streaming every chunk, ONE finish pass (``_finish_kernel``)
+    # reproduces the whole-plane kernel exactly: renorm divides num/den
+    # where den > 0, and cov > 0 is the same "some client covers this
+    # coordinate" criterion ``_plane_kernel`` reads from Σ m — kept as a
+    # separate buffer so the w=0 corner case agrees bit-for-bit.
+    it = iter(refs)
+    num_in, den_in, cov_in = next(it), next(it), next(it)
+    x = next(it)[...].astype(jnp.float32)
+    w = next(it)[...].astype(jnp.float32)           # (K, 1)
+    m = next(it)[...].astype(jnp.float32) if has_mask else jnp.ones_like(x)
+    mu = next(it)[...].astype(jnp.float32) if has_mult else None
+    num_o, den_o, cov_o = next(it), next(it), next(it)
+    wm = w * m
+    if has_mult:
+        # mu <= 0 (zero padding) treated as 1 — harmless, m is 0 there
+        wm = wm / jnp.where(mu > 0, mu, 1.0)
+    num_o[...] = (num_in[...].astype(jnp.float32)
+                  + jnp.sum(wm * x, axis=0, keepdims=True)
+                  ).astype(num_o.dtype)
+    den_o[...] = (den_in[...].astype(jnp.float32)
+                  + jnp.sum(wm, axis=0, keepdims=True)).astype(den_o.dtype)
+    cov_o[...] = (cov_in[...].astype(jnp.float32)
+                  + jnp.sum(m, axis=0, keepdims=True)).astype(cov_o.dtype)
+
+
+def _finish_kernel(*refs, renorm: bool, has_fb: bool):
+    # The one divide pass closing a streamed accumulation: num/den/cov
+    # [, fb]: (1, T) blocks -> out (1, T). Same per-coordinate semantics
+    # as the tail of ``_plane_kernel``.
+    it = iter(refs)
+    num = next(it)[...].astype(jnp.float32)
+    den = next(it)[...].astype(jnp.float32)
+    cov = next(it)[...].astype(jnp.float32)
+    fb = next(it)[...].astype(jnp.float32) if has_fb else None
+    o_ref = next(it)
+    out = num
+    if renorm:
+        out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+    if has_fb:
+        out = jnp.where(cov > 0, out, fb)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def plane_accum_2d(num, den, cov, x, w, m=None, mu=None, *,
+                   block: int = 4096, interpret: Optional[bool] = None):
+    """One streaming accumulate step: num/den/cov ``(1, N)`` f32 running
+    buffers (updated IN PLACE via ``input_output_aliases`` — callers
+    donate them under jit), x [, m, mu] ``(K_chunk, N)``, w ``(K_chunk,)``,
+    N a multiple of 128 and of ``block``. Returns the updated triple.
+
+    The O(P)-memory realization of ``plane_agg_2d``: a cohort streams
+    through in ``K_chunk``-row chunks, only the three (N,) accumulators
+    and one chunk are ever resident, and ``plane_finish_2d`` closes with
+    the single divide/fallback pass. NOT jitted here — ``ops``'s
+    accumulator wraps it in a donated jit so the aliasing actually
+    updates in place.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    K, N = x.shape
+    assert num.shape == den.shape == cov.shape == (1, N), \
+        (num.shape, den.shape, cov.shape, x.shape)
+    if mu is not None:
+        assert m is not None, "mult needs masks"
+    block = min(block, N)
+    assert N % LANE == 0 and N % block == 0, (N, block)
+    acc = pl.BlockSpec((1, block), lambda i: (0, i))
+    row = pl.BlockSpec((K, block), lambda i: (0, i))
+    ins = [num, den, cov, x, w.reshape(K, 1)]
+    specs = [acc, acc, acc, row, pl.BlockSpec((K, 1), lambda i: (0, 0))]
+    if m is not None:
+        assert m.shape == (K, N), (m.shape, x.shape)
+        ins.append(m)
+        specs.append(row)
+    if mu is not None:
+        assert mu.shape == (K, N), (mu.shape, x.shape)
+        ins.append(mu)
+        specs.append(row)
+    sds = jax.ShapeDtypeStruct((1, N), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_accum_kernel, has_mask=m is not None,
+                          has_mult=mu is not None),
+        grid=(N // block,),
+        in_specs=specs,
+        out_specs=(acc, acc, acc),
+        out_shape=(sds, sds, sds),
+        input_output_aliases={0: 0, 1: 1, 2: 2},
+        interpret=interpret,
+    )(*ins)
+
+
+def plane_finish_2d(num, den, cov, fb=None, *, block: int = 4096,
+                    interpret: Optional[bool] = None, renorm: bool = True):
+    """The final divide pass of a streamed accumulation: num/den/cov
+    [, fb]: ``(1, N)`` -> ``(1, N)`` f32. ``renorm`` divides num by den
+    where den > 0; coordinates with cov == 0 (no client ever covered
+    them) take ``fb``. Composes with ``plane_accum_2d`` to reproduce
+    ``plane_agg_2d`` exactly."""
+    if interpret is None:
+        interpret = not on_tpu()
+    _, N = num.shape
+    assert num.shape == den.shape == cov.shape == (1, N)
+    block = min(block, N)
+    assert N % LANE == 0 and N % block == 0, (N, block)
+    acc = pl.BlockSpec((1, block), lambda i: (0, i))
+    ins = [num, den, cov]
+    specs = [acc, acc, acc]
+    if fb is not None:
+        assert fb.shape == (1, N), (fb.shape, num.shape)
+        ins.append(fb)
+        specs.append(acc)
+    return pl.pallas_call(
+        functools.partial(_finish_kernel, renorm=renorm,
+                          has_fb=fb is not None),
+        grid=(N // block,),
+        in_specs=specs,
+        out_specs=acc,
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(*ins)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "renorm"))

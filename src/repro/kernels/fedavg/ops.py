@@ -1,14 +1,17 @@
 """Jitted public wrappers: aggregate arbitrary-shaped stacked tensors."""
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.fedavg import ref
-from repro.kernels.fedavg.fedavg import (LANE, on_tpu, plane_agg_2d,
-                                         weighted_sum_2d,
+from repro.kernels.fedavg.fedavg import (LANE, on_tpu, plane_accum_2d,
+                                         plane_agg_2d, plane_finish_2d,
+                                         select_block, weighted_sum_2d,
                                          weighted_sum_masked_2d,
                                          weighted_sum_masked_mult_2d)
 
@@ -39,8 +42,18 @@ def _pad_cols(a, pad: int):
     return jnp.pad(a, width)
 
 
+# the jnp oracle as ONE jitted program (CPU/GPU hot path): the eager
+# call used to build ~6 full (K, P) temporaries per aggregation — jit
+# fuses them and was the plane layout's missing CPU win (BENCH_new.json
+# showed plane losing to the tree path exactly on this path)
+_plane_agg_ref_jit = jax.jit(
+    lambda plane, w, masks, mult, fallback, renorm: ref.plane_agg_ref(
+        plane, w, masks=masks, mult=mult, fallback=fallback, renorm=renorm),
+    static_argnums=(5,))
+
+
 def plane_agg(plane, w, *, masks=None, mult=None, fallback=None,
-              renorm: bool = True, block: int = 4096,
+              renorm: bool = True, block: Optional[int] = None,
               interpret: Optional[bool] = None,
               use_kernel: Optional[bool] = None):
     """Aggregate a packed ``(K, P)`` parameter plane in ONE pass:
@@ -55,10 +68,13 @@ def plane_agg(plane, w, *, masks=None, mult=None, fallback=None,
     a single tiled kernel dispatch instead of one per leaf.
 
     ``use_kernel=None`` auto-selects the Pallas kernel on TPU and the
-    jnp oracle (``ref.plane_agg_ref``) elsewhere; the two agree to 1e-6
-    (tests/test_plane.py). The parameter axis is zero-padded up to a
-    ``block`` multiple so the grid tiles evenly — padded columns are
-    uncovered by construction and slice away.
+    jnp oracle (``ref.plane_agg_ref``, as ONE jitted program) elsewhere;
+    the two agree to 1e-6 (tests/test_plane.py). The parameter axis is
+    zero-padded up to a ``block`` multiple so the grid tiles evenly —
+    padded columns are uncovered by construction and slice away.
+    ``block=None`` auto-selects the P-tile from the cohort shape and the
+    VMEM budget (``fedavg.select_block``); an explicit int passes
+    through lane-rounded but otherwise verbatim.
     """
     if mult is not None:
         assert masks is not None, "mult needs masks (coverage aggregation)"
@@ -67,9 +83,12 @@ def plane_agg(plane, w, *, masks=None, mult=None, fallback=None,
     if use_kernel is None:
         use_kernel = on_tpu()
     if not use_kernel:
-        return ref.plane_agg_ref(plane, w, masks=masks, mult=mult,
-                                 fallback=fallback, renorm=renorm)
+        return _plane_agg_ref_jit(plane, w, masks, mult, fallback, renorm)
     K, n = plane.shape
+    if block is None:
+        rows = 1 + (masks is not None) + (mult is not None)
+        block = select_block(n, K, row_streams=rows,
+                             col_streams=1 + (fallback is not None))
     # lane-round the tile, then zero-pad the plane up to a tile multiple
     # (full-size tiles even when P is lane-odd — no divisor hunting)
     blk = -(-min(block, n) // LANE) * LANE
@@ -125,3 +144,218 @@ def weighted_sum_masked(stacked, w, masks, *, mult=None, block: int = 4096,
         out = weighted_sum_masked_mult_2d(flat, w, mflat, muflat, block=blk,
                                           interpret=interpret, renorm=renorm)
     return out[:n].reshape(shape)
+
+
+# ------------------------------------------------- streaming accumulation
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=("block", "interpret", "use_kernel"))
+def _accum_step(num, den, cov, x, w, m, mu, *, block: int,
+                interpret: Optional[bool], use_kernel: bool):
+    """One donated accumulate step on PADDED ``(1, N)`` buffers — the
+    Pallas streaming kernel (aliased in-place) on TPU, the jnp oracle
+    (fused by this jit, buffers still donated) elsewhere."""
+    if use_kernel:
+        return plane_accum_2d(num, den, cov, x, w, m, mu, block=block,
+                              interpret=interpret)
+    return ref.plane_accum_ref(num, den, cov, x, w, m, mu)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "renorm", "block",
+                                             "interpret", "use_kernel"))
+def _accum_finish(num, den, cov, fb, *, n: int, renorm: bool, block: int,
+                  interpret: Optional[bool], use_kernel: bool):
+    """The final divide pass on padded buffers, sliced back to ``(n,)``."""
+    if fb is not None:
+        fb = _pad_cols(fb.astype(jnp.float32), num.shape[1] - fb.shape[0]
+                       ).reshape(1, -1)
+    if use_kernel:
+        out = plane_finish_2d(num, den, cov, fb, block=block,
+                              interpret=interpret, renorm=renorm)[0]
+    else:
+        out = ref.plane_finish_ref(num[0], den[0], cov[0],
+                                   None if fb is None else fb[0],
+                                   renorm=renorm)
+    return out[:n]
+
+
+def plane_accum(num, den, cov, chunk, w, *, masks=None, mult=None,
+                block: Optional[int] = None,
+                interpret: Optional[bool] = None,
+                use_kernel: Optional[bool] = None):
+    """Functional streaming accumulate on UNPADDED ``(n,)`` buffers:
+    ``(num, den, cov) + (K_chunk, n) chunk -> updated (num, den, cov)``.
+
+    The stateless face of :class:`PlaneAccumulator` (which keeps its
+    buffers padded and donated across chunks — prefer it in loops; this
+    wrapper pads and slices per call). ``use_kernel=None`` auto-selects
+    the Pallas kernel on TPU, the jnp oracle elsewhere; the two agree to
+    1e-6. The analysis gate traces THIS surface
+    (``analysis/kernels_check.py``)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if mult is not None:
+        assert masks is not None, "mult needs masks (coverage aggregation)"
+    K, n = chunk.shape
+    assert num.shape == den.shape == cov.shape == (n,), \
+        (num.shape, den.shape, cov.shape, chunk.shape)
+    if not use_kernel:
+        return ref.plane_accum_ref(num, den, cov, chunk, w, masks, mult)
+    if block is None:
+        rows = 1 + (masks is not None) + (mult is not None)
+        block = select_block(n, K, row_streams=rows, col_streams=6)
+    blk = -(-min(block, max(n, LANE)) // LANE) * LANE
+    pad = (-n) % blk
+    trip = plane_accum_2d(
+        _pad_cols(num, pad).reshape(1, -1),
+        _pad_cols(den, pad).reshape(1, -1),
+        _pad_cols(cov, pad).reshape(1, -1),
+        _pad_cols(chunk, pad), w,
+        _pad_cols(masks, pad) if masks is not None else None,
+        _pad_cols(mult, pad) if mult is not None else None,
+        block=blk, interpret=interpret)
+    return tuple(t[0, :n] for t in trip)
+
+
+def plane_finish(num, den, cov, *, fallback=None, renorm: bool = True,
+                 block: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None):
+    """Close a streamed accumulation on UNPADDED ``(n,)`` buffers ->
+    ``(n,)`` f32 — renorm divide where den > 0, ``fallback`` where no
+    client ever covered (cov == 0). ``plane_accum`` chunks + this equal
+    ``plane_agg`` on the whole plane to 1e-6."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    n = num.shape[0]
+    assert num.shape == den.shape == cov.shape == (n,)
+    if not use_kernel:
+        return ref.plane_finish_ref(num, den, cov, fallback, renorm=renorm)
+    if block is None:
+        block = select_block(n, 1, row_streams=0, col_streams=5)
+    blk = -(-min(block, max(n, LANE)) // LANE) * LANE
+    pad = (-n) % blk
+    out = plane_finish_2d(
+        _pad_cols(num, pad).reshape(1, -1),
+        _pad_cols(den, pad).reshape(1, -1),
+        _pad_cols(cov, pad).reshape(1, -1),
+        (_pad_cols(fallback, pad).reshape(1, -1)
+         if fallback is not None else None),
+        block=blk, interpret=interpret, renorm=renorm)
+    return out[0, :n]
+
+
+class PlaneAccumulator:
+    """Streaming O(P)-memory plane aggregation state (DESIGN.md §9).
+
+    Holds three running ``(P,)`` buffers — numerator, renorm denominator
+    and coverage count — and consumes a cohort in ``(K_chunk, P)`` row
+    chunks: ``update`` is ONE donated jitted step per chunk (the Pallas
+    streaming kernel with in-place aliasing on TPU, the fused jnp oracle
+    elsewhere), so aggregation memory is the three buffers plus one
+    chunk, independent of the cohort size K. ``finish`` closes with the
+    single divide/fallback pass and reproduces ``plane_agg`` on the
+    whole plane to 1e-6.
+
+    Hierarchical (two-level) aggregation composes for free: edge
+    reducers each stream their sub-cohort into their own accumulator,
+    ``merge`` sums the partial triples (exact — the masked weighted sum
+    is associative), and the global reducer finishes once.
+
+    ``stats()`` reports the donated-buffer accounting the memory
+    envelope test asserts on: ``buffer_bytes`` (the three padded
+    buffers) and ``peak_bytes`` (buffers + the largest chunk's streamed
+    operands) — O(P·K_chunk), never O(P·K).
+    """
+
+    def __init__(self, n: int, *, block: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None, k_hint: int = 16):
+        self.n = int(n)
+        self.use_kernel = on_tpu() if use_kernel is None else bool(use_kernel)
+        self.interpret = interpret
+        if block is None:
+            # the VMEM-budgeted tile only matters on the kernel path;
+            # the jnp oracle just wants minimal column padding
+            block = (select_block(self.n, k_hint, row_streams=3,
+                                  col_streams=6)
+                     if self.use_kernel else LANE)
+        self.block = -(-min(block, max(self.n, LANE)) // LANE) * LANE
+        self._pad = (-self.n) % self.block
+        shape = (1, self.n + self._pad)
+        self._num = jnp.zeros(shape, jnp.float32)
+        self._den = jnp.zeros(shape, jnp.float32)
+        self._cov = jnp.zeros(shape, jnp.float32)
+        self.rows = 0
+        self.chunks = 0
+        self.peak_rows = 0
+        self._streams = 1
+
+    def update(self, chunk, w, *, masks=None, mult=None):
+        """Accumulate one ``(K_chunk, n)`` row chunk with weights ``w``
+        (``(K_chunk,)`` — already renormalized over the FULL cohort by
+        the caller; chunking must not change the weights)."""
+        if mult is not None:
+            assert masks is not None, "mult needs masks"
+        kc, n = chunk.shape
+        assert n == self.n, (n, self.n)
+        x = _pad_cols(jnp.asarray(chunk, jnp.float32), self._pad)
+        m = (_pad_cols(jnp.asarray(masks, jnp.float32), self._pad)
+             if masks is not None else None)
+        mu = (_pad_cols(jnp.asarray(mult, jnp.float32), self._pad)
+              if mult is not None else None)
+        self._num, self._den, self._cov = _accum_step(
+            self._num, self._den, self._cov, x,
+            jnp.asarray(w, jnp.float32), m, mu,
+            block=self.block, interpret=self.interpret,
+            use_kernel=self.use_kernel)
+        self.rows += int(kc)
+        self.chunks += 1
+        self.peak_rows = max(self.peak_rows, int(kc))
+        self._streams = max(self._streams,
+                            1 + (m is not None) + (mu is not None))
+        return self
+
+    def merge(self, other: "PlaneAccumulator"):
+        """Global reduce of the two-level hierarchy: sum another edge
+        reducer's partial triple into this one (exact by associativity).
+        Layouts must match (same n and padded block)."""
+        assert other.n == self.n and other._num.shape == self._num.shape, \
+            "merge needs accumulators over the same plane layout"
+        self._num = self._num + other._num
+        self._den = self._den + other._den
+        self._cov = self._cov + other._cov
+        self.rows += other.rows
+        self.chunks += other.chunks
+        self.peak_rows = max(self.peak_rows, other.peak_rows)
+        self._streams = max(self._streams, other._streams)
+        return self
+
+    def partials(self):
+        """The raw (num, den, cov) triple, unpadded ``(n,)`` each — what
+        an edge reducer ships to the global reduce."""
+        return (self._num[0, :self.n], self._den[0, :self.n],
+                self._cov[0, :self.n])
+
+    def finish(self, *, renorm: bool = True, fallback=None):
+        """The one divide pass -> ``(n,)`` f32. ``renorm`` divides by the
+        accumulated covering mass where positive; ``fallback``
+        substitutes on coordinates no streamed client covered."""
+        fb = (jnp.asarray(fallback, jnp.float32)
+              if fallback is not None else None)
+        return _accum_finish(self._num, self._den, self._cov, fb,
+                             n=self.n, renorm=renorm, block=self.block,
+                             interpret=self.interpret,
+                             use_kernel=self.use_kernel)
+
+    def stats(self) -> dict:
+        """Donated-buffer accounting: the accumulation's memory envelope
+        is ``buffer_bytes`` (3 padded f32 buffers) + the largest chunk's
+        streamed operands — O(P·K_chunk), independent of total rows."""
+        n_pad = self.n + self._pad
+        buffers = 3 * n_pad * 4
+        chunk_bytes = self.peak_rows * n_pad * 4 * self._streams
+        return {"n": self.n, "padded": n_pad, "block": self.block,
+                "rows": self.rows, "chunks": self.chunks,
+                "peak_chunk_rows": self.peak_rows,
+                "buffer_bytes": buffers, "chunk_bytes": chunk_bytes,
+                "peak_bytes": buffers + chunk_bytes}

@@ -27,6 +27,47 @@ def plane_agg_ref(x, w, *, masks=None, mult=None, fallback=None,
     return out
 
 
+def plane_accum_ref(num, den, cov, x, w, m=None, mu=None):
+    """Streaming accumulate oracle: num/den/cov ``(N,)`` (or ``(1, N)``)
+    running buffers, x [, m, mu]: ``(K_chunk, N)``, w: ``(K_chunk,)`` ->
+    the updated (num, den, cov). One chunk of
+    ``fedavg.plane_accum_2d``'s math: num += Σ w·m[/mu]·x,
+    den += Σ w·m[/mu], cov += Σ m (m = 1 when absent)."""
+    keep = num.ndim == 2
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if m is None and mu is None:
+        # unmasked Eq. 1 chunk: one dot instead of (K_chunk, N)
+        # temporaries — den/cov updates collapse to scalars
+        s = wf @ xf
+        kc = jnp.float32(x.shape[0])
+        return (num + (s[None] if keep else s),
+                den + jnp.sum(wf), cov + kc)
+    mf = m.astype(jnp.float32) if m is not None else jnp.ones_like(xf)
+    wm = wf[:, None] * mf
+    if mu is not None:
+        muf = mu.astype(jnp.float32)
+        wm = wm / jnp.where(muf > 0, muf, 1.0)
+    return (num + jnp.sum(wm * xf, axis=0, keepdims=keep),
+            den + jnp.sum(wm, axis=0, keepdims=keep),
+            cov + jnp.sum(mf, axis=0, keepdims=keep))
+
+
+def plane_finish_ref(num, den, cov, fallback=None, *, renorm: bool = True):
+    """The one divide pass closing a streamed accumulation (oracle for
+    ``fedavg.plane_finish_2d``): renorm divides num by den where den > 0;
+    coordinates no client ever covered (cov == 0) take ``fallback`` —
+    exactly the whole-plane kernel's tail, so accumulate-then-finish
+    equals ``plane_agg_ref``."""
+    out = num.astype(jnp.float32)
+    if renorm:
+        den = den.astype(jnp.float32)
+        out = jnp.where(den > 0, out / jnp.where(den > 0, den, 1.0), 0.0)
+    if fallback is not None:
+        out = jnp.where(cov > 0, out, fallback.astype(jnp.float32))
+    return out
+
+
 def weighted_sum_masked_ref(x, w, m, *, mult=None, renorm: bool = True):
     """x, m [, mult]: (K, N); w: (K,) -> (N,) fp32 — coverage-weighted
     average; with ``mult`` the per-coordinate client weight is

@@ -53,3 +53,48 @@ class ShardCtx:
 
 
 CPU_CTX = ShardCtx()
+
+
+@dataclass(frozen=True)
+class CohortCtx:
+    """Client-axis distribution context of the unified FL engine
+    (DESIGN.md §5, §9): which mesh axes the cohort's K (plane-row) axis
+    shards over, and the streaming chunk pin. One frozen object threads
+    the engine's two scaling mechanisms — ``row_spec`` drives both the
+    shard-mapped training step and the two-level edge reduce (each mesh
+    slot of the client axes is one "edge" sub-cohort), ``k_chunk`` pins
+    the O(P·k_chunk) streaming aggregation."""
+    mesh: Optional[Mesh] = None
+    client_axes: Tuple[str, ...] = ("clients",)
+    k_chunk: Optional[int] = None       # streaming rows (None = auto)
+
+    @property
+    def edge_extent(self) -> int:
+        """How many edge reducers the client axes hold (1 = no mesh)."""
+        if self.mesh is None or not self.client_axes:
+            return 1
+        ext = 1
+        for a in self.client_axes:
+            ext *= int(self.mesh.shape[a])
+        return ext
+
+    def row_spec(self, n_rows: int) -> P:
+        """Spec for ``(n_rows, ...)`` cohort planes/trees: K over the
+        client axes, replicated when it doesn't divide (the rules.py
+        divisibility convention)."""
+        if self.mesh is None:
+            return P()
+        from repro.sharding.rules import stacked_client_spec
+        return stacked_client_spec(self.mesh, self.client_axes, n_rows)
+
+    def edge_groups(self, ks) -> list:
+        """The two-level reduce's sub-cohorts: the participating client
+        ids split contiguously, one group per mesh slot of the client
+        axes — exactly the rows ``row_spec`` lands on each device. With
+        no (usable) mesh the whole cohort is one group."""
+        ks = list(ks)
+        e = self.edge_extent
+        if e <= 1 or len(ks) % e != 0:
+            return [ks]
+        step = len(ks) // e
+        return [ks[i * step:(i + 1) * step] for i in range(e)]

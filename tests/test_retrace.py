@@ -93,3 +93,40 @@ def test_federation_compiles_nothing_after_round_one(pname, participation):
         "jax compiled entries the wrapper never saw", stats)
     sizes = {2} if pname == "full" else {1}
     assert set(stats["subset_sizes"]) == sizes
+
+
+def test_chunked_streaming_rounds_compile_nothing_after_round_one():
+    """ISSUE 8: the streaming layout (``agg_layout="stream"`` with a
+    pinned ``k_chunk``) trains and accumulates chunk-by-chunk — every
+    chunk after round 1 must hit the SAME per-size jitted step and the
+    SAME donated accumulate step. k_chunk=1 divides the K=2 subset, so
+    each round runs 2 equal-size chunks; rounds >= 2 compile nothing."""
+    cfgs, samplers, test = _setup()
+    backend = UnifiedBackend(FAMILY, cfgs, samplers, local_epochs=1,
+                             lr=0.05, momentum=0.9, agg_layout="stream",
+                             k_chunk=1)
+    strategy = FedADPStrategy(FAMILY, cfgs,
+                              [s.n_samples for s in samplers])
+    det = RetraceDetector()
+    rounds_seen = []
+
+    def after_round(rec):
+        rounds_seen.append(rec["round"])
+        if len(rounds_seen) == 1:
+            det.checkpoint()
+
+    fed = Federation(strategy, backend, rounds=3, eval_batch=test,
+                     eval_every=1, callbacks=[after_round])
+    with det:
+        res = fed.run(jax.random.PRNGKey(0))
+
+    assert len(res["history"]) == 3
+    assert backend.engine.agg_stats()["layout"] == "stream"
+    assert backend.engine.agg_stats()["k_chunk"] == 1
+    assert det.compiles > 0, "round 1 must have compiled the step"
+    assert det.since_checkpoint == 0, (
+        f"{det.since_checkpoint} compile(s) AFTER round 1 on the "
+        f"chunked path: {det.events[det._mark:]}")
+    # chunking must not mint per-chunk step entries: every chunk is the
+    # same size, so ONE subset-size bucket serves all of them
+    assert set(backend.engine.step_stats()["subset_sizes"]) == {1}
