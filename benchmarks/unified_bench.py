@@ -38,11 +38,21 @@ layout their round actually ran (``engine.agg_stats()`` — "plane",
 "stream" or "edge"; ``tree`` for the loop) plus the same peak-bytes
 column.
 
+A ``wire`` microbench (ISSUE 9) times the COMPRESSED aggregation pass —
+client-side error-feedback encode (``core.quant``) + the fused
+dequantize-accumulate streaming kernel — for every wire format
+(f32 / bf16 / int8 / int8+sparse) on the width cohort's coverage
+average, and emits ``bytes_per_round`` (the client->server payload) and
+``reduction`` columns next to the wall clock: the wire is a
+bytes-on-the-network optimization first.
+
 Outputs:
   * CSV rows ``unified/K{K}/{loop|unified}/{agg_mode},us_per_round,...``
-    plus per-(K, agg_mode) speedups, and
+    plus per-(K, agg_mode) speedups,
     ``unified/agg/K{K}/{leaf|plane|stream}/{agg_mode},us_per_call,...``
-    for the aggregation-layout microbench,
+    for the aggregation-layout microbench, and
+    ``unified/wire/K{K}/{wire},us_per_call,bytes_per_round=...`` for
+    the wire-format microbench,
   * a machine-readable ``BENCH_unified.json`` (path override:
     FEDADP_BENCH_JSON) so the perf trajectory is diffable across PRs.
 
@@ -245,6 +255,109 @@ def _agg_microbench(csv: List[str], records: List[dict], Ks, reps: int):
                 f"{per['leaf'] / max(per['stream'], 1e-9):.2f},x")
 
 
+WIRES = ("f32", "bf16", "int8", "int8+sparse")
+WIRE_TILE = 256
+
+
+def _wire_microbench(csv: List[str], records: List[dict], Ks, reps: int):
+    """The quantized wire (ISSUE 9, DESIGN.md §10), timed the way the
+    compressed round actually runs it: per ``(k_chunk, P)`` chunk, the
+    client-side error-feedback encode (``engine._wire_encode`` — the
+    same jit the round uses) then the server-side fold — ``update_q``
+    (fused dequantize-accumulate, int8) or ``update`` (bf16/f32) — and
+    one ``finish``. On the WIDTH cohort under the coverage average, so
+    the sparse wire has real uncovered coordinates to drop. Every row
+    carries ``bytes_per_round`` (client->server payload:
+    ``core.quant.payload_nbytes``) next to ``us_per_call`` and
+    ``peak_agg_bytes`` — the wire is a bytes-on-the-network
+    optimization first, a wall-clock one second."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import plane as planemod
+    from repro.core import quant
+    from repro.core.aggregation import subset_weights
+    from repro.fl.engine import UnifiedEngine, _wire_encode
+    from repro.kernels.fedavg import ops as kops
+    from repro.kernels.fedavg.fedavg import on_tpu
+
+    use_kernel = on_tpu()
+    for K in Ks:
+        reps_k = reps if K <= 16 else max(3, reps // 6)
+        cfgs = [scaled(vgg(WIDTH_ARCHS[k % len(WIDTH_ARCHS)]), 0.125, 64)
+                for k in range(K)]
+        eng = UnifiedEngine(VGGFamily(), cfgs, [1] * K, method="fedadp",
+                            agg_mode="coverage")
+        spec = eng.plane_spec
+        P = spec.size
+        key = jax.random.PRNGKey(0)
+        x_p = jax.random.normal(jax.random.fold_in(key, K), (K, P),
+                                jnp.float32)
+        m_p = planemod.pack_stacked(eng.cov_masks, spec, what="bench/m")
+        fb_p = jnp.zeros((P,), jnp.float32)
+        wj = jnp.asarray(subset_weights([1] * K), jnp.float32)
+        res = jnp.zeros((K, P), jnp.float32)
+        covered = [int(c) for c in jax.device_get(m_p.sum(axis=1))]
+        jax.block_until_ready((x_p, m_p, res))
+        kc = min(STREAM_K_CHUNK, K)
+
+        def run(wire):
+            fmt = "int8" if wire.startswith("int8") else wire
+            sparse = wire.endswith("sparse")
+            acc = kops.PlaneAccumulator(
+                P, use_kernel=use_kernel, k_hint=kc,
+                q_tile=WIRE_TILE if fmt == "int8" else None)
+            for lo in range(0, K, kc):
+                hi = min(lo + kc, K)
+                m = m_p[lo:hi]
+                if fmt == "f32":
+                    acc.update(x_p[lo:hi], wj[lo:hi], masks=m)
+                    continue
+                vals, scales, _ = _wire_encode(
+                    x_p[lo:hi], res[lo:hi], m if sparse else None,
+                    fmt=fmt, tile=WIRE_TILE)
+                if fmt == "int8":
+                    acc.update_q(vals, scales, wj[lo:hi], masks=m)
+                else:
+                    acc.update(vals, wj[lo:hi], masks=m)
+            out = acc.finish(renorm=True, fallback=fb_p)
+            return out, acc.stats()
+
+        f32_bytes = 4 * K * P
+        base_row = None
+        for wire in WIRES:
+            fmt = "int8" if wire.startswith("int8") else wire
+            sparse = wire.endswith("sparse")
+            out, stats = run(wire)
+            jax.block_until_ready(out)              # pay compilation
+            t0 = time.perf_counter()
+            for _ in range(reps_k):
+                out, stats = run(wire)
+            jax.block_until_ready(out)
+            sec = (time.perf_counter() - t0) / reps_k
+            bytes_round = sum(
+                quant.payload_nbytes(fmt, P, tile=WIRE_TILE,
+                                     covered=covered[k] if sparse else None)
+                for k in range(K))
+            red = f32_bytes / bytes_round
+            base_row = base_row if base_row is not None else sec
+            csv.append(f"unified/wire/K{K}/{wire},{sec * 1e6:.0f},"
+                       f"bytes_per_round={bytes_round} "
+                       f"reduction={red:.2f}x")
+            records.append({"cohort": "wire", "K": K, "engine": "agg",
+                            "agg_mode": "coverage", "wire": wire,
+                            "sparse": sparse,
+                            "tile": WIRE_TILE if fmt == "int8" else None,
+                            "us_per_call": round(sec * 1e6),
+                            "bytes_per_round": bytes_round,
+                            "f32_bytes": f32_bytes,
+                            "reduction": round(red, 3), "reps": reps_k,
+                            "k_chunk": kc,
+                            "peak_agg_bytes": stats["peak_bytes"]})
+
+
 def parse_ks(text: str):
     """Eagerly validate a ``--K`` comma list — bad input dies at
     argparse time, before any cohort builds or compiles."""
@@ -318,6 +431,7 @@ def main(csv: List[str], Ks=None):
                     f"{prefix}/K{K}/speedup/{agg_mode},"
                     f"{per['loop'][agg_mode][0] / max(per['unified'][agg_mode][0], 1e-9):.2f},x")
     _agg_microbench(csv, records, agg_Ks, agg_reps)
+    _wire_microbench(csv, records, agg_Ks, agg_reps)
     path = os.environ.get("FEDADP_BENCH_JSON", "BENCH_unified.json")
     with open(path, "w") as f:
         json.dump({"bench": "unified_bench",

@@ -408,6 +408,78 @@ def check_plane(case: Case) -> List[Finding]:
     return out
 
 
+def check_quant(case: Case) -> List[Finding]:
+    """Wire-format algebra (core.quant) on the cohort's own plane size:
+    bf16 encode→decode is exactly the bf16 cast, int8 error is bounded by
+    half a quantization step per tile, the error-feedback identity
+    ``deq(q) + e' == x + e`` holds exactly, masked encoding zeroes
+    off-mask coordinates, and the payload byte accounting is consistent.
+    A few vector ops on one (1, P) row — no model math."""
+    from repro.core import quant
+    out: List[Finding] = []
+    fam = case.family
+    union = fam.union(list(case.client_cfgs))
+    spec = plane.PlaneSpec.from_tree(global_shapes(fam, union))
+    where = f"{case.name}/quant"
+    n, tile = spec.size, quant.DEFAULT_TILE
+    rng = np.random.default_rng(SEED)
+    x = jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+    # bf16: the wire IS the cast
+    vb, sb = quant.quantize(x, "bf16", tile=tile)
+    if sb is not None or vb.dtype != jnp.bfloat16:
+        out.append(Finding("contracts", "quant-bf16", where, 0,
+                           "bf16 wire must be a scale-free bfloat16 cast"))
+    db = np.asarray(quant.dequantize(vb, sb, tile=tile))
+    want = np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32))
+    if not np.array_equal(db, want):
+        out.append(Finding("contracts", "quant-bf16", where, 0,
+                           "dequantize(quantize(x, bf16)) != bf16 cast"))
+    # int8: symmetric per-tile, error ≤ scale/2
+    vq, sq = quant.quantize(x, "int8", tile=tile)
+    if vq.dtype != jnp.int8 or sq.shape != (1, quant.n_tiles(n, tile)):
+        out.append(Finding(
+            "contracts", "quant-int8", where, 0,
+            f"int8 wire: values {vq.dtype}, scales {tuple(sq.shape)} — "
+            f"expected int8 values + (1, {quant.n_tiles(n, tile)}) scales"))
+    dq = np.asarray(quant.dequantize(vq, sq, tile=tile))
+    step = np.repeat(np.asarray(sq), tile, axis=1)[:, :n]
+    if (np.abs(dq - np.asarray(x)) > step / 2 + 1e-7).any():
+        out.append(Finding(
+            "contracts", "quant-int8", where, 0,
+            "int8 round-trip error exceeds half a quantization step"))
+    # error feedback: deq(q) + e' == x + e exactly
+    e = jnp.asarray(rng.standard_normal((1, n)) * 0.01, jnp.float32)
+    vals, scales, e2 = quant.encode(x, e, "int8", tile=tile)
+    lhs = np.asarray(quant.dequantize(vals, scales, tile=tile)) \
+        + np.asarray(e2)
+    if not np.array_equal(lhs, np.asarray(x + e)):
+        out.append(Finding(
+            "contracts", "quant-ef", where, 0,
+            "error-feedback identity deq(q) + e' != x + e"))
+    # masked encoding zeroes off-mask coordinates (values AND residual)
+    mask = jnp.asarray(rng.integers(0, 2, (1, n)), jnp.float32)
+    vm, sm, em = quant.encode(x, e, "int8", tile=tile, mask=mask)
+    off = np.asarray(mask) == 0.0
+    if np.asarray(vm)[off].any() or np.asarray(em)[off].any():
+        out.append(Finding(
+            "contracts", "quant-mask", where, 0,
+            "masked encode leaks nonzero values or residual off-mask"))
+    # payload accounting: dense = values + scales; sparse = covered count
+    nt = quant.n_tiles(n, tile)
+    if quant.payload_nbytes("int8", n, tile=tile) != n + 4 * nt:
+        out.append(Finding("contracts", "quant-bytes", where, 0,
+                           "dense int8 payload != n·1 + n_tiles·4 bytes"))
+    cov = int(np.asarray(mask).sum())
+    if quant.payload_nbytes("int8", n, tile=tile, covered=cov) \
+            != cov + 4 * nt:
+        out.append(Finding("contracts", "quant-bytes", where, 0,
+                           "sparse int8 payload != covered·1 + n_tiles·4"))
+    if quant.payload_nbytes("f32", n, tile=tile) != 4 * n:
+        out.append(Finding("contracts", "quant-bytes", where, 0,
+                           "f32 payload != n·4 bytes"))
+    return out
+
+
 def check_representable(case: Case) -> List[Finding]:
     """The enumerated cohorts are the unified engine's domain — each
     must be segment-representable (the eligibility gate)."""
@@ -419,7 +491,7 @@ def check_representable(case: Case) -> List[Finding]:
 
 
 CHECKS = (check_representable, check_updown, check_segment_spec,
-          check_coverage, check_multiplicity, check_plane)
+          check_coverage, check_multiplicity, check_plane, check_quant)
 
 
 def check_case(case: Case) -> List[Finding]:

@@ -188,6 +188,32 @@ def cases():
                    nm, dn, cv, fallback=fb, use_kernel=True,
                    interpret=True),
                (a(n), a(n), a(n), a(n)), (n,))
+    # quantized-wire surface (DESIGN.md §10): the fused
+    # dequantize-accumulate pass behind wire="int8". int8 chunk rows +
+    # a per-tile f32 scale grid (whole-array resident operand); same
+    # lane-odd / even / multi-MiB planes as the f32 streaming cases.
+    tile = 256
+    nt = lambda n: -(-n // tile)  # noqa: E731
+    for n in (n_odd, n_even, n_big):
+        yield (f"plane_accum_q/N={n}",
+               lambda nm, dn, cv, c, s, wt: ops.plane_accum_q(
+                   nm, dn, cv, c, s, wt, tile=tile,
+                   use_kernel=True, interpret=True),
+               (a(n), a(n), a(n), _sds(Kc, n, dtype=jnp.int8),
+                _sds(Kc, nt(n)), _sds(Kc)), (n,))
+        yield (f"plane_accum_q_masked_mult/N={n}",
+               lambda nm, dn, cv, c, s, wt, m, mu: ops.plane_accum_q(
+                   nm, dn, cv, c, s, wt, masks=m, mult=mu, tile=tile,
+                   use_kernel=True, interpret=True),
+               (a(n), a(n), a(n), _sds(Kc, n, dtype=jnp.int8),
+                _sds(Kc, nt(n)), _sds(Kc), _sds(Kc, n), _sds(Kc, n)),
+               (n,))
+        yield (f"plane_accum_q_fold/N={n}",
+               lambda nm, dn, cv, c, s, wt, m, b: ops.plane_accum_q(
+                   nm, dn, cv, c, s, wt, masks=m, base=b, tile=tile,
+                   use_kernel=True, interpret=True),
+               (a(n), a(n), a(n), _sds(Kc, n, dtype=jnp.int8),
+                _sds(Kc, nt(n)), _sds(Kc), _sds(Kc, n), a(n)), (n,))
     # leaf-shaped wrappers: lane-odd tensor + sub-lane tensor
     for shape in ((33, 7), (5,), (256, 130)):
         n = math.prod(shape)

@@ -8,6 +8,8 @@ from repro.core.plane import (  # noqa: F401
     ragged_leaf_error, requantize, unpack, unpack_stacked)
 from repro.core.netchange import (  # noqa: F401
     KeyedCache, NARROW_MODES, round_embed_seed)
+from repro.core.quant import (  # noqa: F401
+    WIRE_FORMATS, dequantize, payload_nbytes, quantize, wire_itemsize)
 from repro.core.fedadp import FedADP  # noqa: F401
 from repro.core.baselines import ClusteredFL, FlexiFed, Standalone, vgg_chain  # noqa: F401
 from repro.core.family import TransformerFamily, VGGFamily  # noqa: F401

@@ -1,0 +1,173 @@
+"""Quantized wire formats for plane aggregation (DESIGN.md §10).
+
+What a client ships each round is a packed ``(P,)`` plane row (or a
+``(K_chunk, P)`` chunk of rows — ``core.plane``); this module defines
+how those rows encode on the wire:
+
+  * ``"f32"``   — the uncompressed baseline: full f32 rows, no encoding.
+  * ``"bf16"``  — a plain dtype cast, 2 bytes/coordinate, no side data.
+                  The aggregation kernels cast every operand to f32
+                  internally, so bf16 chunks stream through the SAME
+                  fused accumulate pass as f32 ones.
+  * ``"int8"``  — symmetric per-tile quantization, 1 byte/coordinate
+                  plus one f32 scale per ``tile`` coordinates: the row
+                  splits into dense tiles of ``tile`` columns (a lane
+                  multiple, default 256), each tile carries
+                  ``scale = max|x| / 127`` and ``q = round(x / scale)``
+                  clipped to [-127, 127].  Dequantization is ``q·scale``
+                  — fused into the streaming accumulate by
+                  ``kernels/fedavg.plane_accum_q`` so the cohort is
+                  never materialized in f32.
+
+Sparsity rides the coverage mask: a narrow client covers only a subset
+of the union plane's coordinates (``core.segments`` /
+``aggregation.coverage_mask`` describe which), and under
+``agg_mode="coverage"`` the uncovered coordinates never enter the
+average — so the client need not ship them at all.  ``encode`` with a
+0/1 ``mask`` zeroes the off-mask coordinates before quantizing (a zero
+int8 payload compresses to nothing on the wire; ``payload_nbytes``
+counts only the covered coordinates), and the masked accumulate kernel
+reproduces the dense result exactly.
+
+Error feedback (Seide et al.; Karimireddy et al., 2019) keeps the
+quantization unbiased ACROSS rounds: each client holds a residual ``e``
+(f32, client-side only — never on the wire) and encodes
+``q = Q(x + e)``, ``e' = (x + e) - deq(q)``, so the noise a round drops
+is re-injected the next round instead of accumulating.  The residual
+identity ``deq(q) + e' == x + e`` is checked by the contract verifier
+(``analysis/contracts.py``); residual planes persist through
+``checkpoint.save_plane`` so resumed compressed runs bit-match
+uninterrupted ones (``fl/federation.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+WIRE_FORMATS = ("f32", "bf16", "int8")
+INT8_MAX = 127.0
+DEFAULT_TILE = 256   # scale granularity: one f32 scale per `tile` coords
+_LANE = 128          # tiles must be lane multiples (kernels/fedavg.LANE)
+
+_ITEMSIZE = {"f32": 4, "bf16": 2, "int8": 1}
+
+
+def wire_itemsize(fmt: str) -> int:
+    """Bytes per coordinate of the VALUES payload."""
+    if fmt not in WIRE_FORMATS:
+        raise ValueError(f"wire={fmt!r}, expected one of {WIRE_FORMATS}")
+    return _ITEMSIZE[fmt]
+
+
+def validate_tile(tile: int) -> int:
+    if (isinstance(tile, bool) or not isinstance(tile, int)
+            or tile < _LANE or tile % _LANE):
+        raise ValueError(f"wire tile={tile!r} must be a positive multiple "
+                         f"of {_LANE} (lane-aligned scale tiles)")
+    return tile
+
+
+def n_tiles(n: int, tile: int = DEFAULT_TILE) -> int:
+    """Number of scale tiles covering an ``n``-coordinate row (the last
+    tile may straddle the row end; its scale is computed over the real
+    coordinates only)."""
+    return -(-int(n) // int(tile))
+
+
+def _tiled(x: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """(..., n) -> (..., n_tiles, tile), zero-padded to a tile multiple."""
+    n = x.shape[-1]
+    pad = (-n) % tile
+    if pad:
+        width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, width)
+    return x.reshape(x.shape[:-1] + (-1, tile))
+
+
+def quantize(x, fmt: str, *, tile: int = DEFAULT_TILE, mask=None
+             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Encode ``x`` (..., n) f32 for the wire -> ``(values, scales)``.
+
+    ``fmt="f32"``/``"bf16"``: a cast, ``scales`` is None.  ``"int8"``:
+    symmetric per-tile quantization — ``scales`` has shape
+    ``(..., n_tiles(n, tile))``, all-zero tiles get scale 0 (their
+    payload is exactly 0, and dequantization multiplies by the raw
+    scale, so 0·0 round-trips).  A 0/1 ``mask`` zeroes off-mask
+    coordinates BEFORE the scale is computed (the sparse wire: only
+    covered coordinates ship; scales adapt to the covered values).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if mask is not None:
+        x = x * jnp.asarray(mask, jnp.float32)
+    if fmt == "f32":
+        return x, None
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16), None
+    if fmt != "int8":
+        raise ValueError(f"wire={fmt!r}, expected one of {WIRE_FORMATS}")
+    tile = validate_tile(tile)
+    n = x.shape[-1]
+    xt = _tiled(x, tile)
+    scales = jnp.max(jnp.abs(xt), axis=-1) / INT8_MAX
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(xt / safe[..., None]), -INT8_MAX, INT8_MAX)
+    q = q.astype(jnp.int8).reshape(x.shape[:-1] + (-1,))[..., :n]
+    return q, scales
+
+
+def dequantize(values, scales=None, *, tile: int = DEFAULT_TILE
+               ) -> jnp.ndarray:
+    """Decode a wire payload back to f32.  int8 payloads need their
+    ``scales``; bf16/f32 are casts (``scales`` ignored/None)."""
+    values = jnp.asarray(values)
+    if values.dtype != jnp.int8:
+        return values.astype(jnp.float32)
+    assert scales is not None, "int8 payloads need their per-tile scales"
+    tile = validate_tile(tile)
+    n = values.shape[-1]
+    qt = _tiled(values.astype(jnp.float32), tile)
+    x = qt * jnp.asarray(scales, jnp.float32)[..., None]
+    return x.reshape(values.shape[:-1] + (-1,))[..., :n]
+
+
+def encode(x, residual, fmt: str, *, tile: int = DEFAULT_TILE, mask=None
+           ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], jnp.ndarray]:
+    """Error-feedback encode: ``q = Q(x + e)`` ->
+    ``(values, scales, new_residual)``.
+
+    The residual identity ``deq(values, scales) + new_residual == x + e``
+    holds on every shipped (on-``mask``) coordinate; off-mask
+    coordinates carry no payload AND no residual (they never enter the
+    coverage average, so there is no noise to feed back).
+    ``residual=None`` starts from zero (round 0).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    e = jnp.zeros_like(x) if residual is None else \
+        jnp.asarray(residual, jnp.float32)
+    xe = x + e
+    values, scales = quantize(xe, fmt, tile=tile, mask=mask)
+    new_e = xe - dequantize(values, scales, tile=tile)
+    if mask is not None:
+        new_e = new_e * jnp.asarray(mask, jnp.float32)
+    return values, scales, new_e
+
+
+def values_nbytes(fmt: str, count: int) -> int:
+    """Bytes of the VALUES payload for ``count`` shipped coordinates."""
+    return int(count) * wire_itemsize(fmt)
+
+
+def scales_nbytes(fmt: str, n: int, *, tile: int = DEFAULT_TILE) -> int:
+    """Bytes of the scale side-channel (int8 only: one f32 per tile,
+    dense over the row — sparsity does not thin the scale grid)."""
+    return 4 * n_tiles(n, tile) if fmt == "int8" else 0
+
+
+def payload_nbytes(fmt: str, n: int, *, tile: int = DEFAULT_TILE,
+                   covered: Optional[int] = None) -> int:
+    """Total wire bytes for one ``n``-coordinate row: values (all ``n``
+    coordinates dense, or only ``covered`` of them under the sparse
+    wire) + the dense per-tile scales for int8."""
+    count = n if covered is None else covered
+    return values_nbytes(fmt, count) + scales_nbytes(fmt, n, tile=tile)

@@ -126,7 +126,8 @@ class UnifiedBackend:
                  local_epochs: int = 1, lr: float = 0.01,
                  momentum: float = 0.0, use_kernel: Optional[bool] = None,
                  mesh=None, seed: int = 0, agg_layout: str = "auto",
-                 k_chunk: Optional[int] = None):
+                 k_chunk: Optional[int] = None, wire: str = "f32",
+                 wire_tile: int = 256, wire_sparse: bool = False):
         self.family = family
         self.client_cfgs = list(client_cfgs)
         self.samplers = samplers
@@ -134,6 +135,8 @@ class UnifiedBackend:
         self.lr, self.momentum = lr, momentum
         self.use_kernel, self.mesh, self.seed = use_kernel, mesh, seed
         self.agg_layout, self.k_chunk = agg_layout, k_chunk
+        self.wire, self.wire_tile = wire, wire_tile
+        self.wire_sparse = wire_sparse
         self.strategy: Optional[Strategy] = None
         self.engine: Optional[UnifiedEngine] = None
         self._engine_key = None
@@ -167,11 +170,22 @@ class UnifiedBackend:
         k_chunk = getattr(strategy, "k_chunk", None)
         if k_chunk is None:
             k_chunk = self.k_chunk
+        # the wire format follows the same rule: a strategy that carries
+        # the knobs (FedADPStrategy) wins over the backend defaults —
+        # "f32" on the strategy means uncompressed only when the backend
+        # agrees (backend-level wire is the deployment-wide default)
+        wire = getattr(strategy, "wire", None)
+        if wire in (None, "f32"):
+            wire = self.wire
+        wire_tile = getattr(strategy, "wire_tile", None) or self.wire_tile
+        wire_sparse = (getattr(strategy, "wire_sparse", False)
+                       or self.wire_sparse)
         key = (strategy.name, getattr(strategy, "filler", "zero"),
                getattr(strategy, "agg_mode", "filler"),
                getattr(strategy, "coverage", "loose"),
                getattr(strategy, "narrow_mode", "paper"), embed_seed,
-               tuple(n_samples), agg_layout, k_chunk)
+               tuple(n_samples), agg_layout, k_chunk, wire, wire_tile,
+               wire_sparse)
         if self.engine is None or self._engine_key != key:
             self._engine_key = key
             self.engine = UnifiedEngine(
@@ -183,7 +197,8 @@ class UnifiedBackend:
                 narrow_mode=getattr(strategy, "narrow_mode", "paper"),
                 use_kernel=self.use_kernel, mesh=self.mesh,
                 embed_seed=embed_seed, agg_layout=agg_layout,
-                k_chunk=k_chunk)
+                k_chunk=k_chunk, wire=wire, wire_tile=wire_tile,
+                wire_sparse=wire_sparse)
         return self
 
     @property
@@ -197,6 +212,27 @@ class UnifiedBackend:
         """Embedding-artifact cache counters of the bound engine
         (``netchange.KeyedCache``)."""
         return self.engine.cache_stats() if self.engine is not None else None
+
+    # ------------------------------------------------------- wire format
+    def wire_stats(self) -> Optional[dict]:
+        """Byte accounting of the engine's last compressed round (empty
+        when ``wire="f32"``, None before ``bind``)."""
+        return self.engine.wire_stats() if self.engine is not None else None
+
+    def wire_residuals(self):
+        """The engine's per-client error-feedback residual plane
+        ``(K, P)`` f32, or None when no compressed round has run — what
+        the Federation checkpoints next to the round state."""
+        return (self.engine.wire_residuals() if self.engine is not None
+                else None)
+
+    def load_wire_residuals(self, arr):
+        """Restore a checkpointed residual plane into the bound engine
+        (the compressed-run resume path)."""
+        if self.engine is None:
+            raise ValueError("load_wire_residuals needs a bound engine "
+                             "(Federation binds before resuming)")
+        self.engine.load_wire_residuals(arr)
 
     # ------------------------------------------------------- batch stream
     def _stacked_round_batches(self, selected: Sequence[int]

@@ -87,7 +87,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import plane, segments as sg
+from repro.core import plane, quant, segments as sg
 from repro.core.aggregation import (AGG_MODES, COVERAGE_POLICIES,
                                     client_weights, coverage_and_filler,
                                     default_k_chunk, finish_partials,
@@ -140,6 +140,14 @@ def _fold_rows(sp: jnp.ndarray, cov_p: jnp.ndarray, gp: jnp.ndarray
     return sp * cov_p + gp[None, :] * (1.0 - cov_p)
 
 
+@functools.partial(jax.jit, static_argnames=("fmt", "tile"))
+def _wire_encode(x, res, mask, *, fmt: str, tile: int):
+    """Error-feedback wire encode of a gathered row chunk (ONE jitted
+    program per (fmt, tile, masked?) signature — steady-state rounds
+    compile nothing): ``core.quant.encode`` on ``(k_chunk, P)`` rows."""
+    return quant.encode(x, res, fmt, tile=tile, mask=mask)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("renorm", "use_kernel", "fold_global"))
 def _plane_agg_fused(sp, w, cov_p, mult_p, gp, *, renorm: bool,
@@ -181,6 +189,13 @@ class UnifiedEngine:
                                          # whole-plane vs O(P·k_chunk)
                                          # streaming fedadp rounds
     k_chunk: Optional[int] = None        # streaming chunk rows (None=auto)
+    wire: str = "f32"                    # client->server payload encoding
+                                         # (core.quant): "f32" | "bf16" |
+                                         # "int8" — non-f32 rides the
+                                         # streaming round path
+    wire_tile: int = quant.DEFAULT_TILE  # int8 scale tile (lane multiple)
+    wire_sparse: bool = False            # ship covered coords only —
+                                         # needs agg_mode="coverage"
 
     def __post_init__(self):
         if self.agg_layout not in ENGINE_LAYOUTS:
@@ -200,6 +215,32 @@ class UnifiedEngine:
         if self.narrow_mode not in NARROW_MODES:
             raise ValueError(f"narrow_mode={self.narrow_mode!r}, expected "
                              f"one of {NARROW_MODES}")
+        if self.wire not in quant.WIRE_FORMATS:
+            raise ValueError(f"wire={self.wire!r}, expected one of "
+                             f"{quant.WIRE_FORMATS}")
+        quant.validate_tile(self.wire_tile)
+        if self.wire != "f32":
+            if self.method != "fedadp":
+                raise ValueError(
+                    f"wire={self.wire!r} compresses the fedadp round "
+                    f"payloads; method={self.method!r} does not ship "
+                    "plane rows through the wire layer")
+            if self.agg_layout == "plane":
+                raise ValueError(
+                    "wire compression aggregates on the streaming path "
+                    "(the fused dequantize-accumulate kernel); "
+                    "agg_layout='plane' contradicts it — use 'auto' or "
+                    "'stream'")
+        if self.wire_sparse:
+            if self.wire == "f32":
+                raise ValueError("wire_sparse needs a compressed wire "
+                                 "(wire='bf16' or 'int8')")
+            if self.agg_mode != "coverage":
+                raise ValueError(
+                    "wire_sparse ships only covered coordinates, which "
+                    'is exact only under agg_mode="coverage" (uncovered '
+                    "coordinates never enter the masked average); "
+                    f"agg_mode={self.agg_mode!r} averages them")
         self.global_cfg = self.family.union(list(self.client_cfgs))
         self.weights = client_weights(self.n_samples)
         self._depth_only = self.family.depth_only(list(self.client_cfgs))
@@ -271,6 +312,11 @@ class UnifiedEngine:
                               k_chunk=self.k_chunk)
         self._edge_fns: Dict = {}
         self._agg_stats: Dict = {}
+        # per-client error-feedback residual plane (K, P) f32 — lazily
+        # allocated on the first compressed round; checkpointed by the
+        # Federation so resumed runs bit-match (DESIGN.md §10)
+        self._wire_res: Optional[jnp.ndarray] = None
+        self._wire_stats: Dict = {}
         self.clusters = _cluster_ids(self.client_cfgs)
         if self.method == "flexifed":
             full = tuple(range(len(self.client_cfgs)))
@@ -635,6 +681,40 @@ class UnifiedEngine:
         the O(P·k_chunk) envelope test read this."""
         return dict(self._agg_stats)
 
+    def wire_stats(self) -> dict:
+        """Byte accounting of the LAST compressed round (empty when
+        ``wire="f32"``): payload ``bytes_per_round`` (values + int8
+        scale grids, covered coordinates only under ``wire_sparse``),
+        the dense-f32 baseline, and the reduction factor."""
+        return dict(self._wire_stats)
+
+    def wire_residuals(self) -> Optional[jnp.ndarray]:
+        """The per-client error-feedback residual plane ``(K, P)`` f32 —
+        ``None`` until a compressed round has run (or when
+        ``wire="f32"``). What the Federation checkpoints."""
+        return self._wire_res
+
+    def load_wire_residuals(self, arr):
+        """Restore a checkpointed residual plane (resume path)."""
+        arr = jnp.asarray(arr, jnp.float32)
+        want = (len(self.client_cfgs), self.plane_spec.size)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"wire residual plane has shape "
+                             f"{tuple(arr.shape)}, engine expects {want}")
+        self._wire_res = arr
+
+    def _wire_cov_count(self, k: int, seed) -> int:
+        """Covered-coordinate count of client k's aggregation-coverage
+        row (the sparse wire's payload length) — cached per (uid, seed)
+        so steady-state rounds do no device syncs."""
+        key = (("covcount", "uid", int(self._uid[k]))
+               if (self._depth_only or self.coverage == "strict")
+               else ("covcount", k, seed))
+        return self._cache.get(
+            key, lambda: int(np.asarray(
+                jnp.sum(self._client_cov_row(k, 0 if seed is None
+                                             else seed)))))
+
     def _aggregate_packed(self, sp: jnp.ndarray, w, gp=None, cov_p=None,
                           mult_p=None) -> jnp.ndarray:
         """FedADP Eq. 1-2 over the (sub-)plane in ONE fused jitted pass
@@ -882,7 +962,10 @@ class UnifiedEngine:
                   else list(sel))
             layout = resolve_agg_layout(self.agg_layout, k=len(ks),
                                         p=spec.size, k_chunk=self.k_chunk)
-            if layout == "stream":
+            # a compressed wire ALWAYS streams: the fused dequantize-
+            # accumulate kernel is the only consumer of int8 chunks, and
+            # bf16 chunks ride the same casting accumulate
+            if layout == "stream" or self.wire != "f32":
                 return self._run_fedadp_stream(state, stacked_batches, sel,
                                                round_idx)
             w = subset_weights(self.n_samples, sel)
@@ -968,9 +1051,19 @@ class UnifiedEngine:
         kc = default_k_chunk(len(ks), self.k_chunk)
         coverage = self.agg_mode == "coverage"
         fold = (not coverage) and self.filler_mode == "global"
-        acc = kops.PlaneAccumulator(spec.size,
-                                    use_kernel=self._use_kernel(),
-                                    k_hint=kc)
+        wire = self.wire
+        if wire != "f32" and (self._wire_res is None or round_idx == 0):
+            # round 0 = a FRESH run: residuals start at zero. The engine
+            # (and its residual plane) outlives a Federation.run, so a
+            # second run on the same backend must not inherit the first
+            # one's error feedback; a resume (round_idx > 0) keeps what
+            # load_wire_residuals restored.
+            self._wire_res = jnp.zeros((len(self.client_cfgs), spec.size),
+                                       jnp.float32)
+        acc = kops.PlaneAccumulator(
+            spec.size, use_kernel=self._use_kernel(), k_hint=kc,
+            q_tile=self.wire_tile if wire == "int8" else None)
+        payload_bytes = 0
         for lo, hi in plane.chunk_bounds(len(ks), kc):
             cks = ks[lo:hi]
             m_rows = self._mask_rows(cks)
@@ -991,6 +1084,7 @@ class UnifiedEngine:
                  for b in stacked_batches],
                 m_rows, seg_mats)
             wk = jnp.asarray(w[lo:hi], jnp.float32)
+            cov_rows = mult_rows = None
             if coverage or fold:
                 cov_rows = (self._cov_rows(cks) if self._depth_only
                             else jnp.stack([self._client_cov_row(k, s)
@@ -999,6 +1093,42 @@ class UnifiedEngine:
                 mult_rows = (None if self._depth_only
                              else jnp.stack([self._client_mult_row(k, s)
                                              for k, s in zip(cks, seeds)]))
+            if wire != "f32":
+                # error-feedback encode the chunk for the wire: the
+                # residual rows gather/scatter by client index, the
+                # payload aggregates through the fused dequantize-
+                # accumulate kernel (int8) or the casting accumulate
+                # (bf16) — the f32 cohort never materializes
+                idx = jnp.asarray(cks)
+                vals, scales, new_res = _wire_encode(
+                    trained, self._wire_res[idx],
+                    cov_rows if self.wire_sparse else None,
+                    fmt=wire, tile=self.wire_tile)
+                self._wire_res = self._wire_res.at[idx].set(new_res)
+                counts = ([self._wire_cov_count(
+                               k, None if seeds is None else s)
+                           for k, s in zip(cks, seeds or cks)]
+                          if self.wire_sparse else None)
+                for j, k in enumerate(cks):
+                    payload_bytes += quant.payload_nbytes(
+                        wire, spec.size, tile=self.wire_tile,
+                        covered=None if counts is None else counts[j])
+                if wire == "int8":
+                    if coverage:
+                        acc.update_q(vals, scales, wk, masks=cov_rows,
+                                     mult=mult_rows)
+                    elif fold:
+                        acc.update_q(vals, scales, wk, masks=cov_rows,
+                                     base=gp)
+                    else:
+                        acc.update_q(vals, scales, wk)
+                elif coverage:
+                    acc.update(vals, wk, masks=cov_rows, mult=mult_rows)
+                elif fold:
+                    acc.update(_fold_rows(vals, cov_rows, gp), wk)
+                else:
+                    acc.update(vals, wk)
+            elif coverage:
                 acc.update(trained, wk, masks=cov_rows, mult=mult_rows)
             elif fold:
                 acc.update(_fold_rows(trained, cov_rows, gp), wk)
@@ -1008,4 +1138,12 @@ class UnifiedEngine:
                          fallback=gp if coverage else None)
         self._agg_stats = {"layout": "stream", "k_chunk": kc,
                            **acc.stats()}
+        if wire != "f32":
+            f32_bytes = len(ks) * spec.size * 4
+            self._wire_stats = {
+                "wire": wire, "tile": self.wire_tile,
+                "sparse": self.wire_sparse, "rows": len(ks),
+                "bytes_per_round": int(payload_bytes),
+                "f32_bytes": int(f32_bytes),
+                "reduction": f32_bytes / max(payload_bytes, 1)}
         return plane.unpack(out, spec)

@@ -43,7 +43,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint import load_plane, load_pytree, save_plane, save_pytree
 
 PARTICIPATION_MODES = ("sample", "cycle")
 
@@ -93,6 +93,16 @@ class Participation:
 # ------------------------------------------------------------ checkpoints
 def checkpoint_path(directory: str, round_idx: int) -> str:
     return os.path.join(directory, f"round_{round_idx:04d}.npz")
+
+
+def wire_checkpoint_path(path: str) -> str:
+    """The sibling file holding the per-client error-feedback residual
+    plane of a compressed run (``core.quant``): ``round_XXXX.wire.npz``
+    next to ``round_XXXX.npz``.  Saved through ``checkpoint.save_plane``
+    (bit-exact raw views), so a resumed compressed run reproduces the
+    uninterrupted one bit-for-bit."""
+    root, ext = os.path.splitext(path)
+    return root + ".wire" + ext
 
 
 def save_round_checkpoint(path: str, state, *, round_idx: int,
@@ -170,12 +180,23 @@ class Federation:
             state, extra = load_round_checkpoint(resume_from, like=state)
             start, hist = extra["round"], list(extra["history"])
             restore_sampler_rngs(self.backend.samplers, extra)
+            # a compressed run's error-feedback residuals ride a sibling
+            # plane file — restore them so the resumed run bit-matches
+            wp = wire_checkpoint_path(resume_from)
+            lw = getattr(self.backend, "load_wire_residuals", None)
+            if os.path.exists(wp) and callable(lw):
+                arr, _, _ = load_plane(wp)
+                lw(arr)
         t0 = time.time()
         for r in range(start, self.rounds):
             selected = self.participation.select(r, self.strategy.n_clients)
             state = self.backend.run_round(state, r, selected)
             record: Dict[str, Any] = {"round": r + 1, "selected": selected,
                                       "wall_s": time.time() - t0}
+            ws = getattr(self.backend, "wire_stats", None)
+            wire_stats = ws() if callable(ws) else None
+            if wire_stats:
+                record["wire_bytes"] = wire_stats["bytes_per_round"]
             if (r + 1) % self.eval_every == 0 and self.eval_batch is not None:
                 acc = self.backend.evaluate(state, r + 1, self.eval_batch)
                 hist.append(acc)
@@ -184,12 +205,20 @@ class Federation:
                 cb(record)
             if (self.checkpoint_dir and self.checkpoint_every
                     and (r + 1) % self.checkpoint_every == 0):
+                path = checkpoint_path(self.checkpoint_dir, r + 1)
                 save_round_checkpoint(
-                    checkpoint_path(self.checkpoint_dir, r + 1), state,
+                    path, state,
                     round_idx=r + 1, history=hist,
                     samplers=self.backend.samplers,
                     meta={"strategy": self.strategy.name,
                           "backend": self.backend.name})
+                res_fn = getattr(self.backend, "wire_residuals", None)
+                res = res_fn() if callable(res_fn) else None
+                if res is not None:
+                    save_plane(wire_checkpoint_path(path), res,
+                               self.backend.plane_spec,
+                               extra={"round": r + 1,
+                                      "kind": "wire_residuals"})
         self.state = state
         return self._result(state, hist, t0)
 

@@ -61,7 +61,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core import AGG_MODES, COVERAGE_POLICIES
+from repro.core import AGG_MODES, COVERAGE_POLICIES, WIRE_FORMATS
+from repro.core.quant import validate_tile
 from repro.data.federated import ClientSampler
 from repro.fl.backends import (LoopBackend, UnifiedBackend,
                                unified_ineligible_reason)
@@ -103,6 +104,15 @@ class FLRunConfig:
     k_chunk: Optional[int] = None        # streaming chunk rows; pinning
                                          # it implies layout "stream"
                                          # under "auto"
+    wire: str = "f32"                    # client->server payload encoding
+                                         # (core.quant): "f32" (none) |
+                                         # "bf16" | "int8"+error feedback;
+                                         # non-f32 needs method="fedadp"
+                                         # on the unified engine and
+                                         # rides the streaming layout
+    wire_tile: int = 256                 # int8 scale tile (lane multiple)
+    wire_sparse: bool = False            # ship covered coordinates only;
+                                         # needs agg_mode="coverage"
 
     def __post_init__(self):
         # fail at construction, not after `rounds` of work mid-run
@@ -149,6 +159,35 @@ class FLRunConfig:
                 or not isinstance(self.k_chunk, int) or self.k_chunk < 1):
             raise ValueError(f"k_chunk={self.k_chunk!r} must be a "
                              "positive int (or None for auto)")
+        if self.wire not in WIRE_FORMATS:
+            raise ValueError(f"wire={self.wire!r}, expected one of "
+                             f"{WIRE_FORMATS}")
+        validate_tile(self.wire_tile)
+        if self.wire != "f32":
+            if self.method != "fedadp":
+                raise ValueError(
+                    f"wire={self.wire!r} compresses fedadp round "
+                    f"payloads; method={self.method!r} has no wire layer")
+            if self.engine == "loop":
+                raise ValueError(
+                    "wire compression needs the unified engine (the "
+                    "fused dequantize-accumulate streaming kernel); "
+                    "engine='loop' cannot honor it")
+            if self.agg_layout == "plane":
+                raise ValueError(
+                    "wire compression aggregates on the streaming "
+                    "layout; agg_layout='plane' contradicts it — use "
+                    "'auto' or 'stream'")
+        if self.wire_sparse:
+            if self.wire == "f32":
+                raise ValueError("wire_sparse needs a compressed wire "
+                                 "(wire='bf16' or 'int8')")
+            if self.agg_mode != "coverage":
+                raise ValueError(
+                    'wire_sparse is exact only under agg_mode="coverage"'
+                    " (only covered coordinates enter the average); "
+                    f"agg_mode={self.agg_mode!r} averages uncovered "
+                    "coordinates too")
 
     @property
     def resolved_embed_seed(self) -> int:
@@ -186,6 +225,12 @@ class Simulator:
             strategy, self.family, self.client_cfgs, self.samplers)
         if reason is None:
             return "unified"
+        if self.cfg.wire != "f32":
+            # the loop backend has no wire layer — a silent fallback would
+            # run uncompressed while reporting wire=... in the config
+            raise ValueError(
+                f"wire={self.cfg.wire!r} needs the unified engine, but "
+                f"this run is unified-ineligible: {reason}")
         if not self._fallback_logged:
             # once per Simulator: the auto fallback used to be silent and
             # undiagnosable
@@ -200,7 +245,9 @@ class Simulator:
             narrow_mode=self.cfg.narrow_mode, filler=self.cfg.filler,
             coverage=self.cfg.coverage, agg_mode=self.cfg.agg_mode,
             base_seed=self.cfg.resolved_embed_seed,
-            agg_layout=self.cfg.agg_layout, k_chunk=self.cfg.k_chunk)
+            agg_layout=self.cfg.agg_layout, k_chunk=self.cfg.k_chunk,
+            wire=self.cfg.wire, wire_tile=self.cfg.wire_tile,
+            wire_sparse=self.cfg.wire_sparse)
 
     def _backend(self, kind: str):
         cfg = self.cfg
@@ -208,7 +255,7 @@ class Simulator:
         # seed sweep on the loop engine keeps its warm grad fns
         bkey = (kind, cfg.local_epochs, cfg.lr, cfg.momentum) + (
             (cfg.use_kernel, cfg.resolved_embed_seed, cfg.agg_layout,
-             cfg.k_chunk)
+             cfg.k_chunk, cfg.wire, cfg.wire_tile, cfg.wire_sparse)
             if kind == "unified" else ())
         if bkey not in self._backends:
             if kind == "unified":
@@ -217,7 +264,9 @@ class Simulator:
                     local_epochs=cfg.local_epochs, lr=cfg.lr,
                     momentum=cfg.momentum, use_kernel=cfg.use_kernel,
                     mesh=self.mesh, seed=cfg.resolved_embed_seed,
-                    agg_layout=cfg.agg_layout, k_chunk=cfg.k_chunk)
+                    agg_layout=cfg.agg_layout, k_chunk=cfg.k_chunk,
+                    wire=cfg.wire, wire_tile=cfg.wire_tile,
+                    wire_sparse=cfg.wire_sparse)
             else:
                 self._backends[bkey] = LoopBackend(
                     self.family, self.client_cfgs, self.samplers,

@@ -101,7 +101,8 @@ class FedADPStrategy:
                  narrow_mode: str = "paper", filler: str = "zero",
                  coverage: str = "loose", agg_mode: str = "filler",
                  base_seed: int = 0, agg_layout: str = "auto",
-                 k_chunk=None):
+                 k_chunk=None, wire: str = "f32",
+                 wire_tile: int = 256, wire_sparse: bool = False):
         if filler not in FILLERS:
             raise ValueError(f"filler={filler!r}, expected one of {FILLERS}")
         self.algo = FedADP(family, client_cfgs, n_samples,
@@ -117,6 +118,9 @@ class FedADPStrategy:
                                          # To-Wider mappings as the loop
         self.agg_layout = agg_layout     # ...and aggregate with the same
         self.k_chunk = k_chunk           # layout / streaming chunk
+        self.wire = wire                 # client->server payload encoding
+        self.wire_tile = wire_tile       # (core.quant; the unified engine
+        self.wire_sparse = wire_sparse   # validates the combination)
         self.family = family
         self.client_cfgs = list(self.algo.client_cfgs)
         self.n_samples = list(n_samples)
@@ -217,14 +221,16 @@ def make_strategy(method: str, family, client_cfgs, n_samples, *,
                   narrow_mode: str = "paper", filler: str = "zero",
                   coverage: str = "loose", agg_mode: str = "filler",
                   base_seed: int = 0, agg_layout: str = "auto",
-                  k_chunk=None) -> Strategy:
+                  k_chunk=None, wire: str = "f32", wire_tile: int = 256,
+                  wire_sparse: bool = False) -> Strategy:
     """Strategy factory keyed on the method names ``FLRunConfig`` uses."""
     if method == "fedadp":
         return FedADPStrategy(family, client_cfgs, n_samples,
                               narrow_mode=narrow_mode, filler=filler,
                               coverage=coverage, agg_mode=agg_mode,
                               base_seed=base_seed, agg_layout=agg_layout,
-                              k_chunk=k_chunk)
+                              k_chunk=k_chunk, wire=wire,
+                              wire_tile=wire_tile, wire_sparse=wire_sparse)
     if method == "standalone":
         return StandaloneStrategy(family, client_cfgs, n_samples)
     if method == "clustered":

@@ -160,6 +160,54 @@ def _accum_kernel(*refs, has_mask: bool, has_mult: bool):
                   + jnp.sum(m, axis=0, keepdims=True)).astype(cov_o.dtype)
 
 
+def _accum_q_kernel(*refs, has_mask: bool, has_mult: bool, fold: bool,
+                    tile: int):
+    # The fused dequantize-accumulate pass (DESIGN.md §10): identical
+    # accumulation semantics to ``_accum_kernel``, but x arrives as an
+    # int8 block with symmetric per-tile scales and dequantizes IN VMEM
+    # — the f32 chunk never exists in HBM.  The scales operand stays
+    # whole-array resident ((K, N/tile) f32 — a few KB even for multi-
+    # MiB planes; its index map is grid-invariant) and each grid step
+    # dynamic-slices its block's tiles.  ``fold`` is filler_mode=
+    # "global" fused in: x·m + base·(1−m) before an UNMASKED
+    # accumulate, one extra (1, T) stream.
+    it = iter(refs)
+    num_in, den_in, cov_in = next(it), next(it), next(it)
+    xq_ref = next(it)
+    s_ref = next(it)
+    w = next(it)[...].astype(jnp.float32)           # (K, 1)
+    m_ref = next(it) if (has_mask or fold) else None
+    mu_ref = next(it) if has_mult else None
+    base_ref = next(it) if fold else None
+    num_o, den_o, cov_o = next(it), next(it), next(it)
+    K, block = xq_ref.shape
+    nb = block // tile
+    i = pl.program_id(0)
+    s = jax.lax.dynamic_slice(s_ref[...], (0, i * nb), (K, nb))
+    x = xq_ref[...].astype(jnp.float32).reshape(K, nb, tile)
+    x = (x * s[:, :, None]).reshape(K, block)
+    if fold:
+        mf = m_ref[...].astype(jnp.float32)
+        x = x * mf + base_ref[...].astype(jnp.float32) * (1.0 - mf)
+        m = jnp.ones_like(x)
+    elif has_mask:
+        m = m_ref[...].astype(jnp.float32)
+    else:
+        m = jnp.ones_like(x)
+    wm = w * m
+    if has_mult:
+        mu = mu_ref[...].astype(jnp.float32)
+        # mu <= 0 (zero padding) treated as 1 — harmless, m is 0 there
+        wm = wm / jnp.where(mu > 0, mu, 1.0)
+    num_o[...] = (num_in[...].astype(jnp.float32)
+                  + jnp.sum(wm * x, axis=0, keepdims=True)
+                  ).astype(num_o.dtype)
+    den_o[...] = (den_in[...].astype(jnp.float32)
+                  + jnp.sum(wm, axis=0, keepdims=True)).astype(den_o.dtype)
+    cov_o[...] = (cov_in[...].astype(jnp.float32)
+                  + jnp.sum(m, axis=0, keepdims=True)).astype(cov_o.dtype)
+
+
 def _finish_kernel(*refs, renorm: bool, has_fb: bool):
     # The one divide pass closing a streamed accumulation: num/den/cov
     # [, fb]: (1, T) blocks -> out (1, T). Same per-coordinate semantics
@@ -217,6 +265,72 @@ def plane_accum_2d(num, den, cov, x, w, m=None, mu=None, *,
     return pl.pallas_call(
         functools.partial(_accum_kernel, has_mask=m is not None,
                           has_mult=mu is not None),
+        grid=(N // block,),
+        in_specs=specs,
+        out_specs=(acc, acc, acc),
+        out_shape=(sds, sds, sds),
+        input_output_aliases={0: 0, 1: 1, 2: 2},
+        interpret=interpret,
+    )(*ins)
+
+
+def plane_accum_q_2d(num, den, cov, xq, s, w, m=None, mu=None, base=None,
+                     *, tile: int = 256, block: int = 4096,
+                     interpret: Optional[bool] = None):
+    """One fused dequantize-accumulate step: num/den/cov ``(1, N)`` f32
+    running buffers (aliased in place — callers donate them under jit),
+    xq ``(K_chunk, N)`` int8, s ``(K_chunk, N/tile)`` f32 per-tile
+    scales, w ``(K_chunk,)``; optional m/mu ``(K_chunk, N)`` coverage/
+    multiplicity rows and ``base`` ``(1, N)`` (filler_mode="global"
+    fold: x·m + base·(1−m), then an unmasked accumulate).  N must be a
+    multiple of ``block`` and ``block`` of ``tile`` (itself a lane
+    multiple).  Same accumulation math as ``plane_accum_2d`` on
+    ``dequantize(xq, s)`` — the int8 chunk dequantizes in VMEM, so the
+    f32 cohort is never materialized (``core.quant`` + DESIGN.md §10).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    K, N = xq.shape
+    assert num.shape == den.shape == cov.shape == (1, N), \
+        (num.shape, den.shape, cov.shape, xq.shape)
+    assert xq.dtype == jnp.int8, xq.dtype
+    if mu is not None:
+        assert m is not None, "mult needs masks"
+    if base is not None:
+        assert m is not None and mu is None, \
+            "fold needs masks and is exclusive with mult"
+    block = min(block, N)
+    assert tile % LANE == 0 and block % tile == 0 and N % block == 0, \
+        (N, block, tile)
+    assert s.shape == (K, N // tile), (s.shape, (K, N // tile))
+    acc = pl.BlockSpec((1, block), lambda i: (0, i))
+    row = pl.BlockSpec((K, block), lambda i: (0, i))
+    ins = [num, den, cov, xq,
+           s, w.reshape(K, 1)]
+    specs = [acc, acc, acc, row,
+             # scales ride whole-array resident: (K, N/tile) f32 is tiny
+             # and the grid-invariant index map keeps the block shape a
+             # full-row (lane-exempt) view
+             pl.BlockSpec((K, N // tile), lambda i: (0, 0)),
+             pl.BlockSpec((K, 1), lambda i: (0, 0))]
+    fold = base is not None
+    if m is not None:
+        assert m.shape == (K, N), (m.shape, xq.shape)
+        ins.append(m)
+        specs.append(row)
+    if mu is not None:
+        assert mu.shape == (K, N), (mu.shape, xq.shape)
+        ins.append(mu)
+        specs.append(row)
+    if fold:
+        assert base.shape == (1, N), (base.shape, xq.shape)
+        ins.append(base)
+        specs.append(acc)
+    sds = jax.ShapeDtypeStruct((1, N), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_accum_q_kernel,
+                          has_mask=(m is not None) and not fold,
+                          has_mult=mu is not None, fold=fold, tile=tile),
         grid=(N // block,),
         in_specs=specs,
         out_specs=(acc, acc, acc),

@@ -10,8 +10,9 @@ import jax.numpy as jnp
 
 from repro.kernels.fedavg import ref
 from repro.kernels.fedavg.fedavg import (LANE, on_tpu, plane_accum_2d,
-                                         plane_agg_2d, plane_finish_2d,
-                                         select_block, weighted_sum_2d,
+                                         plane_accum_q_2d, plane_agg_2d,
+                                         plane_finish_2d, select_block,
+                                         weighted_sum_2d,
                                          weighted_sum_masked_2d,
                                          weighted_sum_masked_mult_2d)
 
@@ -160,6 +161,21 @@ def _accum_step(num, den, cov, x, w, m, mu, *, block: int,
     return ref.plane_accum_ref(num, den, cov, x, w, m, mu)
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
+                   static_argnames=("tile", "block", "interpret",
+                                    "use_kernel"))
+def _accum_q_step(num, den, cov, xq, s, w, m, mu, base, *, tile: int,
+                  block: int, interpret: Optional[bool], use_kernel: bool):
+    """One donated fused dequantize-accumulate step on PADDED ``(1, N)``
+    buffers — the Pallas kernel (aliased in-place) on TPU, the jnp
+    oracle (fused by this jit, buffers still donated) elsewhere."""
+    if use_kernel:
+        return plane_accum_q_2d(num, den, cov, xq, s, w, m, mu, base,
+                                tile=tile, block=block, interpret=interpret)
+    return ref.plane_accum_q_ref(num, den, cov, xq, s, w, m, mu, base,
+                                 tile=tile)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "renorm", "block",
                                              "interpret", "use_kernel"))
 def _accum_finish(num, den, cov, fb, *, n: int, renorm: bool, block: int,
@@ -216,6 +232,66 @@ def plane_accum(num, den, cov, chunk, w, *, masks=None, mult=None,
     return tuple(t[0, :n] for t in trip)
 
 
+def plane_accum_q(num, den, cov, chunk, scales, w, *, masks=None,
+                  mult=None, base=None, tile: int = 256,
+                  block: Optional[int] = None,
+                  interpret: Optional[bool] = None,
+                  use_kernel: Optional[bool] = None):
+    """Functional fused dequantize-accumulate on UNPADDED ``(n,)``
+    buffers: ``(num, den, cov) + int8 (K_chunk, n) chunk with per-tile
+    scales (K_chunk, ceil(n/tile)) -> updated (num, den, cov)``.
+
+    The compressed-wire twin of :func:`plane_accum` (``core.quant``
+    encodes, this accumulates — the f32 chunk never materializes):
+    ``masks``/``mult`` are the coverage variants, ``base`` ``(n,)`` is
+    the filler_mode="global" fold (x·m + base·(1−m), then an unmasked
+    accumulate).  ``use_kernel=None`` auto-selects the Pallas kernel on
+    TPU, the jnp oracle elsewhere; the two agree to 1e-6 after
+    dequantization.  The analysis gate traces THIS surface
+    (``analysis/kernels_check.py``)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if mult is not None:
+        assert masks is not None, "mult needs masks (coverage aggregation)"
+    if base is not None:
+        assert masks is not None and mult is None, \
+            "fold needs masks and is exclusive with mult"
+    K, n = chunk.shape
+    assert num.shape == den.shape == cov.shape == (n,), \
+        (num.shape, den.shape, cov.shape, chunk.shape)
+    assert tile % LANE == 0, tile
+    nt = -(-n // tile)
+    assert scales.shape == (K, nt), (scales.shape, (K, nt))
+    if not use_kernel:
+        return ref.plane_accum_q_ref(num, den, cov, chunk, scales, w,
+                                     masks, mult,
+                                     None if base is None
+                                     else base.reshape(1, -1), tile=tile)
+    if block is None:
+        rows = 1 + (masks is not None) + (mult is not None)
+        block = select_block(n, K, row_streams=rows,
+                             col_streams=6 + (base is not None))
+    # tile-round the block so the grid tiles the scale grid evenly, then
+    # zero-pad everything to a block multiple (padded tiles: scale 0,
+    # payload 0 — they contribute nothing and slice away)
+    blk = -(-min(block, max(n, tile)) // tile) * tile
+    pad = (-n) % blk
+    N = n + pad
+    trip = plane_accum_q_2d(
+        _pad_cols(num, pad).reshape(1, -1),
+        _pad_cols(den, pad).reshape(1, -1),
+        _pad_cols(cov, pad).reshape(1, -1),
+        _pad_cols(chunk, pad),
+        _pad_cols(jnp.asarray(scales, jnp.float32), N // tile - nt),
+        w,
+        _pad_cols(masks, pad) if masks is not None else None,
+        _pad_cols(mult, pad) if mult is not None else None,
+        (_pad_cols(base, pad).reshape(1, -1)
+         if base is not None else None),
+        tile=tile, block=blk, interpret=interpret)
+    return tuple(t[0, :n] for t in trip)
+
+
 def plane_finish(num, den, cov, *, fallback=None, renorm: bool = True,
                  block: Optional[int] = None,
                  interpret: Optional[bool] = None,
@@ -269,17 +345,26 @@ class PlaneAccumulator:
 
     def __init__(self, n: int, *, block: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None, k_hint: int = 16):
+                 use_kernel: Optional[bool] = None, k_hint: int = 16,
+                 q_tile: Optional[int] = None):
         self.n = int(n)
         self.use_kernel = on_tpu() if use_kernel is None else bool(use_kernel)
         self.interpret = interpret
+        # the fused dequantize path (``update_q``) needs the padded width
+        # to tile the scale grid evenly — set ``q_tile`` (a lane multiple,
+        # ``core.quant``'s tile) to round the block up to a tile multiple
+        self.q_tile = None
+        if q_tile is not None:
+            assert q_tile >= LANE and q_tile % LANE == 0, q_tile
+            self.q_tile = int(q_tile)
         if block is None:
             # the VMEM-budgeted tile only matters on the kernel path;
             # the jnp oracle just wants minimal column padding
             block = (select_block(self.n, k_hint, row_streams=3,
                                   col_streams=6)
                      if self.use_kernel else LANE)
-        self.block = -(-min(block, max(self.n, LANE)) // LANE) * LANE
+        unit = self.q_tile or LANE
+        self.block = -(-min(block, max(self.n, unit)) // unit) * unit
         self._pad = (-self.n) % self.block
         shape = (1, self.n + self._pad)
         self._num = jnp.zeros(shape, jnp.float32)
@@ -288,17 +373,29 @@ class PlaneAccumulator:
         self.rows = 0
         self.chunks = 0
         self.peak_rows = 0
-        self._streams = 1
+        self._chunk_bytes = 0
+
+    def _note(self, kc: int, nbytes: int):
+        self.rows += int(kc)
+        self.chunks += 1
+        self.peak_rows = max(self.peak_rows, int(kc))
+        self._chunk_bytes = max(self._chunk_bytes, int(nbytes))
 
     def update(self, chunk, w, *, masks=None, mult=None):
         """Accumulate one ``(K_chunk, n)`` row chunk with weights ``w``
         (``(K_chunk,)`` — already renormalized over the FULL cohort by
-        the caller; chunking must not change the weights)."""
+        the caller; chunking must not change the weights).  The chunk's
+        float dtype is preserved into the kernel (bf16 wire chunks
+        stream at 2 bytes/coordinate — the kernels cast to f32 in VMEM);
+        everything else is taken as f32."""
         if mult is not None:
             assert masks is not None, "mult needs masks"
         kc, n = chunk.shape
         assert n == self.n, (n, self.n)
-        x = _pad_cols(jnp.asarray(chunk, jnp.float32), self._pad)
+        x = jnp.asarray(chunk)
+        if x.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32):
+            x = x.astype(jnp.float32)
+        x = _pad_cols(x, self._pad)
         m = (_pad_cols(jnp.asarray(masks, jnp.float32), self._pad)
              if masks is not None else None)
         mu = (_pad_cols(jnp.asarray(mult, jnp.float32), self._pad)
@@ -308,11 +405,51 @@ class PlaneAccumulator:
             jnp.asarray(w, jnp.float32), m, mu,
             block=self.block, interpret=self.interpret,
             use_kernel=self.use_kernel)
-        self.rows += int(kc)
-        self.chunks += 1
-        self.peak_rows = max(self.peak_rows, int(kc))
-        self._streams = max(self._streams,
-                            1 + (m is not None) + (mu is not None))
+        n_pad = self.n + self._pad
+        self._note(kc, kc * n_pad * (x.dtype.itemsize
+                                     + 4 * (m is not None)
+                                     + 4 * (mu is not None)))
+        return self
+
+    def update_q(self, chunk, scales, w, *, masks=None, mult=None,
+                 base=None):
+        """Accumulate one int8 ``(K_chunk, n)`` chunk with per-tile
+        ``scales`` (``(K_chunk, ceil(n/q_tile))``) through the FUSED
+        dequantize-accumulate kernel — the f32 chunk never exists;
+        aggregation traffic is 1 byte/coordinate plus the scale grid.
+        ``base`` ``(n,)`` is the filler_mode="global" fold.  Needs
+        ``q_tile`` set at construction (the padded width must tile the
+        scale grid evenly)."""
+        assert self.q_tile is not None, \
+            "update_q needs q_tile set at construction"
+        if mult is not None:
+            assert masks is not None, "mult needs masks"
+        if base is not None:
+            assert masks is not None and mult is None, \
+                "fold needs masks and is exclusive with mult"
+        kc, n = chunk.shape
+        assert n == self.n, (n, self.n)
+        tile = self.q_tile
+        n_pad = self.n + self._pad
+        nt = -(-n // tile)
+        assert scales.shape == (kc, nt), (scales.shape, (kc, nt))
+        xq = _pad_cols(jnp.asarray(chunk, jnp.int8), self._pad)
+        s = _pad_cols(jnp.asarray(scales, jnp.float32), n_pad // tile - nt)
+        m = (_pad_cols(jnp.asarray(masks, jnp.float32), self._pad)
+             if masks is not None else None)
+        mu = (_pad_cols(jnp.asarray(mult, jnp.float32), self._pad)
+              if mult is not None else None)
+        b = (_pad_cols(jnp.asarray(base, jnp.float32), self._pad
+                       ).reshape(1, -1) if base is not None else None)
+        self._num, self._den, self._cov = _accum_q_step(
+            self._num, self._den, self._cov, xq, s,
+            jnp.asarray(w, jnp.float32), m, mu, b,
+            tile=tile, block=self.block, interpret=self.interpret,
+            use_kernel=self.use_kernel)
+        self._note(kc, kc * (n_pad + 4 * (n_pad // tile)
+                             + 4 * n_pad * (m is not None)
+                             + 4 * n_pad * (mu is not None))
+                   + 4 * n_pad * (b is not None))
         return self
 
     def merge(self, other: "PlaneAccumulator"):
@@ -327,7 +464,7 @@ class PlaneAccumulator:
         self.rows += other.rows
         self.chunks += other.chunks
         self.peak_rows = max(self.peak_rows, other.peak_rows)
-        self._streams = max(self._streams, other._streams)
+        self._chunk_bytes = max(self._chunk_bytes, other._chunk_bytes)
         return self
 
     def partials(self):
@@ -350,12 +487,13 @@ class PlaneAccumulator:
     def stats(self) -> dict:
         """Donated-buffer accounting: the accumulation's memory envelope
         is ``buffer_bytes`` (3 padded f32 buffers) + the largest chunk's
-        streamed operands — O(P·K_chunk), independent of total rows."""
+        streamed operands (actual itemsizes — an int8 wire chunk counts
+        1 byte/coordinate plus its scale grid) — O(P·K_chunk),
+        independent of total rows."""
         n_pad = self.n + self._pad
         buffers = 3 * n_pad * 4
-        chunk_bytes = self.peak_rows * n_pad * 4 * self._streams
         return {"n": self.n, "padded": n_pad, "block": self.block,
                 "rows": self.rows, "chunks": self.chunks,
                 "peak_chunk_rows": self.peak_rows,
-                "buffer_bytes": buffers, "chunk_bytes": chunk_bytes,
-                "peak_bytes": buffers + chunk_bytes}
+                "buffer_bytes": buffers, "chunk_bytes": self._chunk_bytes,
+                "peak_bytes": buffers + self._chunk_bytes}

@@ -53,6 +53,37 @@ def plane_accum_ref(num, den, cov, x, w, m=None, mu=None):
             cov + jnp.sum(mf, axis=0, keepdims=keep))
 
 
+def dequantize_ref(xq, s, *, tile: int = 256):
+    """int8 ``(K, N)`` payload + per-tile scales ``(K, ceil(N/tile))``
+    -> f32 ``(K, N)``.  Mirrors ``core.quant.dequantize`` (q·scale per
+    dense tile; the trailing partial tile reads the same scale)."""
+    K, n = xq.shape
+    pad = (-n) % tile
+    x = xq.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    x = x.reshape(K, -1, tile) * s.astype(jnp.float32)[:, :, None]
+    return x.reshape(K, -1)[:, :n]
+
+
+def plane_accum_q_ref(num, den, cov, xq, s, w, m=None, mu=None, base=None,
+                      *, tile: int = 256):
+    """Fused dequantize-accumulate oracle (``fedavg.plane_accum_q_2d``):
+    dequantize the int8 chunk, optionally fold the uncovered
+    coordinates onto ``base`` (filler_mode="global": x·m + base·(1−m),
+    then an UNMASKED accumulate), and run the plain streaming
+    accumulate math."""
+    x = dequantize_ref(xq, s, tile=tile)
+    if base is not None:
+        assert m is not None and mu is None, \
+            "fold needs masks and is exclusive with mult"
+        mf = m.astype(jnp.float32)
+        bf = base.astype(jnp.float32).reshape(1, -1)
+        x = x * mf + bf * (1.0 - mf)
+        m = None
+    return plane_accum_ref(num, den, cov, x, w, m, mu)
+
+
 def plane_finish_ref(num, den, cov, fallback=None, *, renorm: bool = True):
     """The one divide pass closing a streamed accumulation (oracle for
     ``fedavg.plane_finish_2d``): renorm divides num by den where den > 0;

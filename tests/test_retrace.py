@@ -130,3 +130,38 @@ def test_chunked_streaming_rounds_compile_nothing_after_round_one():
     # chunking must not mint per-chunk step entries: every chunk is the
     # same size, so ONE subset-size bucket serves all of them
     assert set(backend.engine.step_stats()["subset_sizes"]) == {1}
+
+
+def test_compressed_wire_rounds_compile_nothing_after_round_one():
+    """ISSUE 9: the int8 wire path adds an encode jit (core.quant via
+    ``engine._wire_encode``), a residual gather/scatter, and the fused
+    dequantize-accumulate step. All of it must compile in round 1 only:
+    the encode jit is keyed on static (fmt, tile), the residual ops are
+    shape-stable, and the payload byte accounting is cached — so rounds
+    >= 2 on the compressed path compile NOTHING and sync nothing new."""
+    cfgs, samplers, test = _setup()
+    backend = UnifiedBackend(FAMILY, cfgs, samplers, local_epochs=1,
+                             lr=0.05, momentum=0.9, k_chunk=1,
+                             wire="int8")
+    strategy = FedADPStrategy(FAMILY, cfgs,
+                              [s.n_samples for s in samplers])
+    det = RetraceDetector()
+    rounds_seen = []
+
+    def after_round(rec):
+        rounds_seen.append(rec["round"])
+        if len(rounds_seen) == 1:
+            det.checkpoint()
+
+    fed = Federation(strategy, backend, rounds=3, eval_batch=test,
+                     eval_every=1, callbacks=[after_round])
+    with det:
+        res = fed.run(jax.random.PRNGKey(0))
+
+    assert len(res["history"]) == 3
+    assert backend.wire_stats()["wire"] == "int8"
+    assert backend.wire_stats()["bytes_per_round"] > 0
+    assert det.compiles > 0, "round 1 must have compiled the step"
+    assert det.since_checkpoint == 0, (
+        f"{det.since_checkpoint} compile(s) AFTER round 1 on the "
+        f"compressed wire path: {det.events[det._mark:]}")
