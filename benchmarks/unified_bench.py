@@ -38,6 +38,16 @@ layout their round actually ran (``engine.agg_stats()`` — "plane",
 "stream" or "edge"; ``tree`` for the loop) plus the same peak-bytes
 column.
 
+A ``tffn`` training sweep (ISSUE 10) times TRANSFORMER unified rounds —
+the width-heterogeneous reduced-glm4 cohort — across the attention
+backend (``blockwise`` XLA vs ``flash``: Pallas kernels on TPU, the
+vectorised jnp flash elsewhere) and the local-training compute dtype
+(``f32`` vs ``bf16`` mixed precision). Every unified training row now
+carries a ``us_train``/``us_agg`` split (``engine.phase_stats()``
+wall-clocks the donated training steps; the remainder is round start +
+embedding + aggregation) so attention/precision wins — which only touch
+the training phase — are attributable, not diluted into the round total.
+
 A ``wire`` microbench (ISSUE 9) times the COMPRESSED aggregation pass —
 client-side error-feedback encode (``core.quant``) + the fused
 dequantize-accumulate streaming kernel — for every wire format
@@ -106,32 +116,112 @@ def _cohort(K: int, n_per_client: int, batch: int, archs=DEPTH_ARCHS):
     return family, cfgs, samplers, test
 
 
-def _per_round(family, cfgs, samplers, test, engine: str, rounds: int
-               ) -> dict:
-    """{agg_mode: (seconds-per-round, engine agg stats | None)}; one
-    Simulator per engine so grad fns / engine steps stay warm across the
-    agg_mode sweep. The unified stats come from ``engine.agg_stats()``
-    — the layout the round ACTUALLY ran plus its peak aggregation
-    footprint (DESIGN.md §9)."""
-    base = FLRunConfig(method="fedadp", rounds=1, local_epochs=1, lr=0.05,
-                       momentum=0.9, eval_every=10 ** 9, engine=engine)
+def _per_round(family, cfgs, samplers, test, engine: str, rounds: int,
+               base: FLRunConfig = None, agg_modes=AGG_MODES) -> dict:
+    """{agg_mode: (seconds-per-round, engine agg stats | None, train
+    seconds-per-round | None)}; one Simulator per engine so grad fns /
+    engine steps stay warm across the agg_mode sweep. The unified stats
+    come from ``engine.agg_stats()`` — the layout the round ACTUALLY ran
+    plus its peak aggregation footprint (DESIGN.md §9) — and the train
+    split from ``engine.phase_stats()`` (``timing=True`` syncs after the
+    local-training steps; ``us_agg`` = round minus train, i.e. round
+    start + embedding + aggregation)."""
+    if base is None:
+        base = FLRunConfig(method="fedadp", rounds=1, local_epochs=1,
+                           lr=0.05, momentum=0.9, eval_every=10 ** 9,
+                           engine=engine)
     mesh = cohort_mesh(len(cfgs)) if engine == "unified" else None
     sim = Simulator(family, cfgs, samplers(), base, test, mesh=mesh)
     out = {}
-    for agg_mode in AGG_MODES:
+    for agg_mode in agg_modes:
         sim.cfg = dataclasses.replace(base, agg_mode=agg_mode)
         sim.samplers = samplers()
         sim.run()                               # warmup: pays compilation
-        sim.cfg = dataclasses.replace(sim.cfg, rounds=rounds)
-        sim.samplers = samplers()
-        sec = sim.run()["wall_s"] / rounds
-        stats = None
+        be = None
         if engine == "unified":
             be = next(b for k, b in sim._backends.items()
                       if k[0] == "unified")
+            be.engine.timing = True
+            be.engine.phase_stats(reset=True)
+        sim.cfg = dataclasses.replace(sim.cfg, rounds=rounds)
+        sim.samplers = samplers()
+        sec = sim.run()["wall_s"] / rounds
+        stats = train_s = None
+        if be is not None:
             stats = be.engine.agg_stats()
-        out[agg_mode] = (sec, stats)
+            train_s = be.engine.phase_stats(reset=True)["train"] / rounds
+        out[agg_mode] = (sec, stats, train_s)
     return out
+
+
+# transformer training rounds: the flash-attention backend and the bf16
+# compute policy (ISSUE 10) on the tffn cohort — reduced glm4-9b with
+# full-width and half-FFN variants, the width-heterogeneous transformer
+# analogue of the VGG -wider sweep
+TFFN_ATTN = ("blockwise", "flash")
+TFFN_DTYPES = ("f32", "bf16")
+
+
+def _tffn_cohort(K: int, S: int = 64, batch: int = 8,
+                 n_per_client: int = 16):
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.core import TransformerFamily, tfamily
+
+    base = reduced(get_config("glm4-9b"), n_units=2, d_model=64)
+    cfgs = [tfamily.make_variant(base, ffn_scale=0.5) if k % 2
+            else tfamily.make_variant(base) for k in range(K)]
+    family = TransformerFamily()
+    n = n_per_client * K
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, base.vocab_size, size=(n, S + 1)).astype(np.int32)
+    data = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    test = {"tokens": toks[:16, :-1], "labels": toks[:16, 1:]}
+    parts = iid_partition(n, K, seed=0)
+
+    def samplers():
+        return [ClientSampler(data, p, round_fraction=0.5, batch_size=batch,
+                              seed=i) for i, p in enumerate(parts)]
+
+    return family, cfgs, samplers, test
+
+
+def _tffn_bench(csv: List[str], records: List[dict], Ks, rounds: int):
+    """Unified training rounds on the tffn cohort, attention backend x
+    compute dtype. ``us_train``/``us_agg`` split every row: the flash
+    path only touches the local-training step, so the split shows WHERE
+    the win lands. Off-TPU the "flash" backend runs the vectorised jnp
+    flash (online-softmax, O(block) memory), on TPU the Pallas kernels
+    — either way the same one-entry dispatch the model layer uses."""
+    for K in Ks:
+        family, cfgs, samplers, test = _tffn_cohort(K)
+        train_us = {}
+        for attn in TFFN_ATTN:
+            for dtype in TFFN_DTYPES:
+                base = FLRunConfig(method="fedadp", rounds=1,
+                                   local_epochs=1, lr=0.05, momentum=0.9,
+                                   eval_every=10 ** 9, engine="unified",
+                                   attn_backend=attn, compute_dtype=dtype)
+                sec, stats, train_s = _per_round(
+                    family, cfgs, samplers, test, "unified", rounds,
+                    base=base, agg_modes=("filler",))["filler"]
+                train_us[(attn, dtype)] = train_s * 1e6
+                csv.append(f"unified/tffn/K{K}/{attn}/{dtype},"
+                           f"{sec * 1e6:.0f},us_train={train_s * 1e6:.0f} "
+                           f"rounds={rounds}")
+                records.append({"cohort": "tffn", "K": K,
+                                "engine": "unified", "agg_mode": "filler",
+                                "attn": attn, "compute_dtype": dtype,
+                                "agg_layout": (stats or {}).get("layout"),
+                                "us_per_round": round(sec * 1e6),
+                                "us_train": round(train_s * 1e6),
+                                "us_agg": round((sec - train_s) * 1e6),
+                                "rounds": rounds})
+        for dtype in TFFN_DTYPES:
+            csv.append(
+                f"unified/tffn/K{K}/flash_speedup/{dtype},"
+                f"{train_us[('blockwise', dtype)] / max(train_us[('flash', dtype)], 1e-9):.2f},x")
 
 
 AGG_LAYOUTS = ("leaf", "plane", "stream")
@@ -395,14 +485,19 @@ def main(csv: List[str], Ks=None):
     if smoke:
         train_Ks, (n_per_client, batch, rounds) = (2,), (32, 16, 1)
         agg_Ks, agg_reps = (2, 64), 5     # K=64: one CI streaming row
+        tffn_Ks, tffn_rounds = (8,), 2    # the CI flash-vs-blockwise cell
+                                          # (2 timed rounds halve noise on
+                                          # the us_train <= assertion)
     elif full:
         train_Ks, (n_per_client, batch, rounds) = (4, 8, 16), (256, 64, 5)
         agg_Ks, agg_reps = (4, 8, 16, 64, 128), 50
+        tffn_Ks, tffn_rounds = (4, 8, 16), 5
     else:
         train_Ks, (n_per_client, batch, rounds) = (4, 8, 16), (64, 32, 3)
         agg_Ks, agg_reps = (4, 8, 16, 64, 128), 30
-    if Ks:                               # --K overrides BOTH sweeps
-        train_Ks = agg_Ks = tuple(Ks)
+        tffn_Ks, tffn_rounds = (4, 8), 3
+    if Ks:                               # --K overrides ALL sweeps
+        train_Ks = agg_Ks = tffn_Ks = tuple(Ks)
     records = []
     for cohort, archs in COHORTS.items():
         prefix = "unified" if cohort == "depth" else f"unified/{cohort}"
@@ -413,23 +508,28 @@ def main(csv: List[str], Ks=None):
             for engine in ("loop", "unified"):
                 per[engine] = _per_round(family, cfgs, samplers, test,
                                          engine, rounds)
-                for agg_mode, (sec, stats) in per[engine].items():
+                for agg_mode, (sec, stats, train_s) in per[engine].items():
                     stats = stats or {}
+                    split = ("" if train_s is None
+                             else f"us_train={train_s * 1e6:.0f} ")
                     csv.append(f"{prefix}/K{K}/{engine}/{agg_mode},"
-                               f"{sec * 1e6:.0f},rounds={rounds}")
-                    records.append({"cohort": cohort, "K": K,
-                                    "engine": engine, "agg_mode": agg_mode,
-                                    "agg_layout": stats.get("layout",
-                                                            "tree"),
-                                    "us_per_round": round(sec * 1e6),
-                                    "rounds": rounds,
-                                    "k_chunk": stats.get("k_chunk"),
-                                    "peak_agg_bytes":
-                                        stats.get("peak_bytes")})
+                               f"{sec * 1e6:.0f},{split}rounds={rounds}")
+                    row = {"cohort": cohort, "K": K,
+                           "engine": engine, "agg_mode": agg_mode,
+                           "agg_layout": stats.get("layout", "tree"),
+                           "us_per_round": round(sec * 1e6),
+                           "rounds": rounds,
+                           "k_chunk": stats.get("k_chunk"),
+                           "peak_agg_bytes": stats.get("peak_bytes")}
+                    if train_s is not None:
+                        row["us_train"] = round(train_s * 1e6)
+                        row["us_agg"] = round((sec - train_s) * 1e6)
+                    records.append(row)
             for agg_mode in AGG_MODES:
                 csv.append(
                     f"{prefix}/K{K}/speedup/{agg_mode},"
                     f"{per['loop'][agg_mode][0] / max(per['unified'][agg_mode][0], 1e-9):.2f},x")
+    _tffn_bench(csv, records, tffn_Ks, tffn_rounds)
     _agg_microbench(csv, records, agg_Ks, agg_reps)
     _wire_microbench(csv, records, agg_Ks, agg_reps)
     path = os.environ.get("FEDADP_BENCH_JSON", "BENCH_unified.json")

@@ -480,6 +480,66 @@ def check_quant(case: Case) -> List[Finding]:
     return out
 
 
+def check_flash(case: Case) -> List[Finding]:
+    """The two attention backends behind ``models/attention.py:attend``
+    agree under abstract evaluation for every client config's attention
+    geometry: the flash kernel path and ``blockwise_attention`` produce
+    the same output shape/dtype for causal, sliding-window and cross
+    calls, and the flash custom_vjp yields q/k/v cotangents matching the
+    primal shapes. VGG cohorts have no attention — skipped."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import blockwise_attention
+    out: List[Finding] = []
+    if not isinstance(case.family, TransformerFamily):
+        return out
+    for ci, cfg in enumerate(case.client_cfgs):
+        where = f"{case.name}/client{ci}"
+        kv = cfg.n_kv_heads if cfg.n_kv_heads and \
+            cfg.n_heads % cfg.n_kv_heads == 0 else 1
+        g = cfg.n_heads // kv
+        hd = cfg.resolved_head_dim
+        B, Sq, Sk = 1, 48, 48
+        q = jax.ShapeDtypeStruct((B, Sq, kv, g, hd), jnp.float32)
+        k = jax.ShapeDtypeStruct((B, Sk, kv, hd), jnp.float32)
+        v = jax.ShapeDtypeStruct((B, Sk, kv, hd), jnp.float32)
+        qp = jax.ShapeDtypeStruct((Sq,), jnp.int32)
+        kp = jax.ShapeDtypeStruct((Sk,), jnp.int32)
+        for tag, causal, window in (("causal", True, 0),
+                                    ("window", True, min(cfg.window, Sq)),
+                                    ("cross", False, 0)):
+            fo = jax.eval_shape(
+                lambda q, k, v, qp, kp, c=causal, w=window: flash_attention(
+                    q, k, v, qp, kp, causal=c, window=w,
+                    use_kernel=True, interpret=True),
+                q, k, v, qp, kp)
+            bo = jax.eval_shape(
+                lambda q, k, v, qp, kp, c=causal, w=window:
+                    blockwise_attention(q, k, v, qp, kp, causal=c,
+                                        window=w),
+                q, k, v, qp, kp)
+            if tuple(fo.shape) != tuple(bo.shape) or fo.dtype != bo.dtype:
+                out.append(Finding(
+                    "contracts", "flash-parity", where, 0,
+                    f"attention[{tag}]: flash {fo.shape}/{fo.dtype} != "
+                    f"blockwise {bo.shape}/{bo.dtype}"))
+        grads = jax.eval_shape(
+            lambda q, k, v: jax.grad(
+                lambda q, k, v: flash_attention(
+                    q, k, v, jnp.arange(Sq), jnp.arange(Sk), causal=True,
+                    use_kernel=True, interpret=True
+                ).astype(jnp.float32).sum(),
+                argnums=(0, 1, 2))(q, k, v),
+            q, k, v)
+        for name, got, want in zip("qkv", grads, (q, k, v)):
+            if tuple(got.shape) != tuple(want.shape) or \
+                    got.dtype != want.dtype:
+                out.append(Finding(
+                    "contracts", "flash-vjp", where, 0,
+                    f"flash d{name}: {got.shape}/{got.dtype} != primal "
+                    f"{want.shape}/{want.dtype}"))
+    return out
+
+
 def check_representable(case: Case) -> List[Finding]:
     """The enumerated cohorts are the unified engine's domain — each
     must be segment-representable (the eligibility gate)."""
@@ -491,7 +551,8 @@ def check_representable(case: Case) -> List[Finding]:
 
 
 CHECKS = (check_representable, check_updown, check_segment_spec,
-          check_coverage, check_multiplicity, check_plane, check_quant)
+          check_coverage, check_multiplicity, check_plane, check_quant,
+          check_flash)
 
 
 def check_case(case: Case) -> List[Finding]:

@@ -98,11 +98,15 @@ def _check_pallas_eqn(name: str, eqn, *, backend: str = "tpu"
                 "kernels", "lane-alignment", where, 0,
                 f"tiled last axis block {blk[-1]} is not a multiple of "
                 f"the {LANE}-wide lane"))
-        if tiles not in (1, n_tiles):
+        if tiles and n_tiles % tiles:
+            # an operand may be tiled on a SUBSET of grid axes (the flash
+            # kernels broadcast k/v blocks over the q-block axis and vice
+            # versa), so each tile must be visited a whole number of
+            # times: tile count divides the grid size
             out.append(Finding(
                 "kernels", "grid-coverage", where, 0,
-                f"operand tiles {tiles} match neither 1 (broadcast) nor "
-                f"the grid size {n_tiles} — tiles dropped or duplicated"))
+                f"operand tiles {tiles} do not divide the grid size "
+                f"{n_tiles} — tiles dropped or duplicated"))
         vmem += math.prod(blk) * bm.array_shape_dtype.dtype.itemsize
     budget = VMEM_BUDGET_BYTES[backend]
     est = vmem * DOUBLE_BUFFER
@@ -214,6 +218,42 @@ def cases():
                    use_kernel=True, interpret=True),
                (a(n), a(n), a(n), _sds(Kc, n, dtype=jnp.int8),
                 _sds(Kc, nt(n)), _sds(Kc), _sds(Kc, n), a(n)), (n,))
+    # flash-attention surface (DESIGN.md §11): the training forward plus
+    # the custom_vjp backward (dQ and dK/dV recomputation kernels, traced
+    # through jax.grad so the bwd pallas_calls appear in the jaxpr).
+    # Shapes: lane-aligned causal GQA, a sliding-window band, a lane-odd
+    # head dim (hd=72 -> whole-axis last blocks), and a sub-lane short
+    # sequence (bq=8 rows).
+    from repro.kernels.flash_attention import ops as fops
+
+    def _flash_avals(B, Sq, Sk, KV, G, hd):
+        return (_sds(B, Sq, KV, G, hd), _sds(B, Sk, KV, hd),
+                _sds(B, Sk, KV, hd), _sds(Sq, dtype=jnp.int32),
+                _sds(Sk, dtype=jnp.int32))
+
+    flash_shapes = (
+        ("causal_gqa", (2, 256, 256, 2, 4, 128), True, 0),
+        ("window", (1, 256, 256, 1, 8, 64), True, 64),
+        ("cross_laneodd", (2, 128, 192, 2, 1, 72), False, 0),
+        ("sublane", (1, 8, 8, 2, 2, 64), True, 0),
+    )
+    for tag, (B, Sq, Sk, KV, G, hd), causal, window in flash_shapes:
+        def fwd_fn(q, k, v, qp, kp, *, c=causal, w=window):
+            return fops.flash_attention(q, k, v, qp, kp, causal=c,
+                                        window=w, use_kernel=True,
+                                        interpret=True)
+
+        def bwd_fn(q, k, v, qp, kp, *, c=causal, w=window):
+            def loss(q, k, v):
+                return fops.flash_attention(
+                    q, k, v, qp, kp, causal=c, window=w, use_kernel=True,
+                    interpret=True).sum()
+            return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+        yield (f"flash_fwd/{tag}", fwd_fn, _flash_avals(B, Sq, Sk, KV, G, hd),
+               (B, Sq, KV * G, hd))
+        yield (f"flash_bwd/{tag}", bwd_fn, _flash_avals(B, Sq, Sk, KV, G, hd),
+               (B, Sq, KV, G, hd))
     # leaf-shaped wrappers: lane-odd tensor + sub-lane tensor
     for shape in ((33, 7), (5,), (256, 130)):
         n = math.prod(shape)

@@ -11,6 +11,7 @@ NetChange, and (c) init/evaluate members. Two concrete families:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -146,16 +147,25 @@ class TransformerFamily:
     def down(self, params, from_cfg, to_cfg, *, seed=0, mode="paper"):
         return tfamily.down(params, from_cfg, to_cfg, seed=seed, mode=mode)
 
-    def loss_and_grad(self, cfg):
+    def loss_and_grad(self, cfg, *, ctx=None):
         from repro.launch.steps import lm_loss
+        from repro.sharding.ctx import CPU_CTX
+        ctx = CPU_CTX if ctx is None else ctx
 
         def f(params, batch):
             (loss, aux), g = jax.value_and_grad(lm_loss, has_aux=True)(
-                params, cfg, batch)
+                params, cfg, batch, ctx=ctx)
             return (loss, aux), g
         return f
 
     def evaluate(self, params, cfg, batch):
-        from repro.launch.steps import lm_loss
-        loss, _ = lm_loss(params, cfg, batch)
-        return float(loss)
+        return float(_lm_eval_loss(params, cfg, batch))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _lm_eval_loss(params, cfg, batch):
+    """Jitted eval loss: an eager ``lm_loss`` call re-traces the unit
+    scan (and pays an XLA compile) on EVERY evaluation; keying one jit
+    on the static config makes round >= 2 evals compile-free."""
+    from repro.launch.steps import lm_loss
+    return lm_loss(params, cfg, batch)[0]

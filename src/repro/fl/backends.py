@@ -127,7 +127,8 @@ class UnifiedBackend:
                  momentum: float = 0.0, use_kernel: Optional[bool] = None,
                  mesh=None, seed: int = 0, agg_layout: str = "auto",
                  k_chunk: Optional[int] = None, wire: str = "f32",
-                 wire_tile: int = 256, wire_sparse: bool = False):
+                 wire_tile: int = 256, wire_sparse: bool = False,
+                 compute_dtype: str = "f32", attn_backend: str = "auto"):
         self.family = family
         self.client_cfgs = list(client_cfgs)
         self.samplers = samplers
@@ -137,6 +138,8 @@ class UnifiedBackend:
         self.agg_layout, self.k_chunk = agg_layout, k_chunk
         self.wire, self.wire_tile = wire, wire_tile
         self.wire_sparse = wire_sparse
+        self.compute_dtype = compute_dtype
+        self.attn_backend = attn_backend
         self.strategy: Optional[Strategy] = None
         self.engine: Optional[UnifiedEngine] = None
         self._engine_key = None
@@ -180,12 +183,20 @@ class UnifiedBackend:
         wire_tile = getattr(strategy, "wire_tile", None) or self.wire_tile
         wire_sparse = (getattr(strategy, "wire_sparse", False)
                        or self.wire_sparse)
+        # the local-training compute policy rides the same precedence:
+        # a strategy carrying non-default knobs wins over the backend
+        compute_dtype = getattr(strategy, "compute_dtype", None)
+        if compute_dtype in (None, "f32"):
+            compute_dtype = self.compute_dtype
+        attn_backend = getattr(strategy, "attn_backend", None)
+        if attn_backend in (None, "auto"):
+            attn_backend = self.attn_backend
         key = (strategy.name, getattr(strategy, "filler", "zero"),
                getattr(strategy, "agg_mode", "filler"),
                getattr(strategy, "coverage", "loose"),
                getattr(strategy, "narrow_mode", "paper"), embed_seed,
                tuple(n_samples), agg_layout, k_chunk, wire, wire_tile,
-               wire_sparse)
+               wire_sparse, compute_dtype, attn_backend)
         if self.engine is None or self._engine_key != key:
             self._engine_key = key
             self.engine = UnifiedEngine(
@@ -198,7 +209,8 @@ class UnifiedBackend:
                 use_kernel=self.use_kernel, mesh=self.mesh,
                 embed_seed=embed_seed, agg_layout=agg_layout,
                 k_chunk=k_chunk, wire=wire, wire_tile=wire_tile,
-                wire_sparse=wire_sparse)
+                wire_sparse=wire_sparse, compute_dtype=compute_dtype,
+                attn_backend=attn_backend)
         return self
 
     @property

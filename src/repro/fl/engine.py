@@ -78,6 +78,7 @@ ONE bounded ``netchange.KeyedCache`` shared-sizing with the loop's
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
@@ -103,6 +104,8 @@ from repro.optim import sgd
 from repro.sharding.ctx import CohortCtx
 
 ENGINE_LAYOUTS = ("auto", "plane", "stream")
+COMPUTE_DTYPES = ("f32", "bf16")
+ATTN_BACKENDS = ("auto", "flash", "blockwise")
 
 
 def client_embedding(family, client_cfgs: Sequence, global_cfg, *,
@@ -196,6 +199,22 @@ class UnifiedEngine:
     wire_tile: int = quant.DEFAULT_TILE  # int8 scale tile (lane multiple)
     wire_sparse: bool = False            # ship covered coords only —
                                          # needs agg_mode="coverage"
+    compute_dtype: str = "f32"           # "f32" | "bf16": local-training
+                                         # compute policy — the (K, P)
+                                         # plane stays f32 master weights,
+                                         # params are cast once at unpack
+                                         # inside the jitted step and
+                                         # grads fold back into f32
+                                         # optimizer state
+    attn_backend: str = "auto"           # "auto" | "flash" | "blockwise":
+                                         # attention backend of the local
+                                         # training step (ShardCtx knob;
+                                         # transformer families only when
+                                         # forced off "auto")
+    timing: bool = False                 # wall-clock the training phase
+                                         # into phase_stats() (adds a
+                                         # sync point per train call —
+                                         # benches only, off by default)
 
     def __post_init__(self):
         if self.agg_layout not in ENGINE_LAYOUTS:
@@ -241,6 +260,13 @@ class UnifiedEngine:
                     'is exact only under agg_mode="coverage" (uncovered '
                     "coordinates never enter the masked average); "
                     f"agg_mode={self.agg_mode!r} averages them")
+        if self.compute_dtype not in COMPUTE_DTYPES:
+            raise ValueError(f"compute_dtype={self.compute_dtype!r}, "
+                             f"expected one of {COMPUTE_DTYPES}")
+        if self.attn_backend not in ATTN_BACKENDS:
+            raise ValueError(f"attn_backend={self.attn_backend!r}, "
+                             f"expected one of {ATTN_BACKENDS}")
+        self._phase_s = {"train": 0.0}
         self.global_cfg = self.family.union(list(self.client_cfgs))
         self.weights = client_weights(self.n_samples)
         self._depth_only = self.family.depth_only(list(self.client_cfgs))
@@ -475,6 +501,24 @@ class UnifiedEngine:
             self._steps[k_count] = self._build_step(k_count)
         return self._steps[k_count]
 
+    def _train_cfg(self):
+        """Model config of the local training step: the union config,
+        with its compute dtype flipped under the bf16 policy (the model
+        casts activations to ``cfg.dtype``, so the grad fn must be built
+        on the bf16 config — the plane itself never leaves f32)."""
+        if self.compute_dtype == "bf16":
+            import dataclasses as _dc
+            return _dc.replace(self.global_cfg, dtype="bfloat16")
+        return self.global_cfg
+
+    def _train_ctx(self):
+        """ShardCtx override for a forced attention backend (None when
+        "auto" — the family's default ctx already auto-selects)."""
+        if self.attn_backend == "auto":
+            return None
+        from repro.sharding.ctx import ShardCtx
+        return ShardCtx(attn_backend=self.attn_backend)
+
     def _build_step(self, k_count: int):
         if self.loss_fn is not None:
             lf = self.loss_fn
@@ -482,7 +526,16 @@ class UnifiedEngine:
             def grads_one(p, b):
                 return jax.grad(lf)(p, b)
         else:
-            gf = self.family.loss_and_grad(self.global_cfg)
+            ctx = self._train_ctx()
+            try:
+                gf = (self.family.loss_and_grad(self._train_cfg())
+                      if ctx is None else
+                      self.family.loss_and_grad(self._train_cfg(), ctx=ctx))
+            except TypeError as e:
+                raise ValueError(
+                    f"attn_backend={self.attn_backend!r} needs a family "
+                    "whose loss_and_grad accepts a ShardCtx (transformer "
+                    "families); this one does not") from e
 
             def grads_one(p, b):
                 return gf(p, b)[1]
@@ -490,6 +543,7 @@ class UnifiedEngine:
         opt = self._opt
         seg_axes = self._seg_axes
         spec = self.plane_spec
+        cdt = jnp.bfloat16 if self.compute_dtype == "bf16" else None
 
         def step_core(sp, opt_state, masks_p, seg_mats, batch, step_idx):
             # the plane unpacks to the stacked tree for the model's grad
@@ -500,7 +554,16 @@ class UnifiedEngine:
             # the filler constant. The two commute (masks are constant
             # along segment axes).
             params = plane.unpack_stacked(sp, spec)
+            if cdt is not None:
+                # bf16 compute policy: cast ONCE at unpack — the f32 plane
+                # stays the master copy, the whole fwd/bwd runs in bf16,
+                # and the grads rejoin the f32 optimizer state below
+                params = jax.tree_util.tree_map(
+                    lambda x: x.astype(cdt), params)
             grads = jax.vmap(grads_one)(params, batch)
+            if cdt is not None:
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), grads)
             grads = sg.project_stacked(grads, seg_axes, seg_mats)
             gp = plane.pack_stacked(grads, spec) * masks_p
             new_sp, new_state = opt.update(gp, opt_state, sp, step_idx)
@@ -625,12 +688,27 @@ class UnifiedEngine:
         """One local-training round on the packed plane: fresh optimizer
         state (matching the per-client loop, which re-inits SGD momentum
         every round), one donated jitted step per stacked batch."""
+        t0 = time.perf_counter() if self.timing else 0.0
         step = self._step_for(int(sp.shape[0]))
         opt_state = self._opt.init(sp)
         for i, batch in enumerate(stacked_batches):
             sp, opt_state = step(sp, opt_state, masks_p, seg_mats, batch,
                                  jnp.asarray(i, jnp.int32))
+        if self.timing:
+            jax.block_until_ready(sp)
+            self._phase_s["train"] += time.perf_counter() - t0
         return sp
+
+    def phase_stats(self, reset: bool = False):
+        """Cumulative wall-clock seconds per round phase (``timing=True``
+        only; ``train`` = the donated jitted local-training steps, every
+        layout and chunk included). The bench derives the aggregation
+        share as round minus train."""
+        out = dict(self._phase_s)
+        if reset:
+            for k in self._phase_s:
+                self._phase_s[k] = 0.0
+        return out
 
     def _train_packed_chunked(self, sp: jnp.ndarray,
                               stacked_batches: Sequence,

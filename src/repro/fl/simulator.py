@@ -113,6 +113,16 @@ class FLRunConfig:
     wire_tile: int = 256                 # int8 scale tile (lane multiple)
     wire_sparse: bool = False            # ship covered coordinates only;
                                          # needs agg_mode="coverage"
+    compute_dtype: str = "f32"           # local-training compute: "f32" |
+                                         # "bf16" (mixed precision — the
+                                         # packed plane and optimizer
+                                         # state stay f32 master copies;
+                                         # unified engine only)
+    attn_backend: str = "auto"           # attention backend of the local
+                                         # step: "auto" (flash Pallas on
+                                         # TPU, blockwise XLA elsewhere) |
+                                         # "flash" | "blockwise" (forced
+                                         # values: unified engine only)
 
     def __post_init__(self):
         # fail at construction, not after `rounds` of work mid-run
@@ -188,6 +198,21 @@ class FLRunConfig:
                     " (only covered coordinates enter the average); "
                     f"agg_mode={self.agg_mode!r} averages uncovered "
                     "coordinates too")
+        if self.compute_dtype not in ("f32", "bf16"):
+            raise ValueError(f"compute_dtype={self.compute_dtype!r}, "
+                             "expected 'f32' or 'bf16'")
+        if self.compute_dtype != "f32" and self.engine == "loop":
+            raise ValueError(
+                "compute_dtype='bf16' is the unified engine's cast-at-"
+                "unpack policy (f32 master plane, bf16 step); "
+                "engine='loop' cannot honor it")
+        if self.attn_backend not in ("auto", "flash", "blockwise"):
+            raise ValueError(f"attn_backend={self.attn_backend!r}, "
+                             "expected 'auto', 'flash' or 'blockwise'")
+        if self.attn_backend != "auto" and self.engine == "loop":
+            raise ValueError(
+                "a forced attn_backend threads through the unified "
+                "engine's training step; engine='loop' cannot honor it")
 
     @property
     def resolved_embed_seed(self) -> int:
@@ -231,6 +256,16 @@ class Simulator:
             raise ValueError(
                 f"wire={self.cfg.wire!r} needs the unified engine, but "
                 f"this run is unified-ineligible: {reason}")
+        if self.cfg.compute_dtype != "f32":
+            raise ValueError(
+                f"compute_dtype={self.cfg.compute_dtype!r} needs the "
+                f"unified engine, but this run is unified-ineligible: "
+                f"{reason}")
+        if self.cfg.attn_backend != "auto":
+            raise ValueError(
+                f"attn_backend={self.cfg.attn_backend!r} needs the "
+                f"unified engine, but this run is unified-ineligible: "
+                f"{reason}")
         if not self._fallback_logged:
             # once per Simulator: the auto fallback used to be silent and
             # undiagnosable
@@ -247,7 +282,9 @@ class Simulator:
             base_seed=self.cfg.resolved_embed_seed,
             agg_layout=self.cfg.agg_layout, k_chunk=self.cfg.k_chunk,
             wire=self.cfg.wire, wire_tile=self.cfg.wire_tile,
-            wire_sparse=self.cfg.wire_sparse)
+            wire_sparse=self.cfg.wire_sparse,
+            compute_dtype=self.cfg.compute_dtype,
+            attn_backend=self.cfg.attn_backend)
 
     def _backend(self, kind: str):
         cfg = self.cfg
@@ -255,7 +292,8 @@ class Simulator:
         # seed sweep on the loop engine keeps its warm grad fns
         bkey = (kind, cfg.local_epochs, cfg.lr, cfg.momentum) + (
             (cfg.use_kernel, cfg.resolved_embed_seed, cfg.agg_layout,
-             cfg.k_chunk, cfg.wire, cfg.wire_tile, cfg.wire_sparse)
+             cfg.k_chunk, cfg.wire, cfg.wire_tile, cfg.wire_sparse,
+             cfg.compute_dtype, cfg.attn_backend)
             if kind == "unified" else ())
         if bkey not in self._backends:
             if kind == "unified":
@@ -266,7 +304,9 @@ class Simulator:
                     mesh=self.mesh, seed=cfg.resolved_embed_seed,
                     agg_layout=cfg.agg_layout, k_chunk=cfg.k_chunk,
                     wire=cfg.wire, wire_tile=cfg.wire_tile,
-                    wire_sparse=cfg.wire_sparse)
+                    wire_sparse=cfg.wire_sparse,
+                    compute_dtype=cfg.compute_dtype,
+                    attn_backend=cfg.attn_backend)
             else:
                 self._backends[bkey] = LoopBackend(
                     self.family, self.client_cfgs, self.samplers,

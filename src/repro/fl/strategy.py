@@ -102,7 +102,8 @@ class FedADPStrategy:
                  coverage: str = "loose", agg_mode: str = "filler",
                  base_seed: int = 0, agg_layout: str = "auto",
                  k_chunk=None, wire: str = "f32",
-                 wire_tile: int = 256, wire_sparse: bool = False):
+                 wire_tile: int = 256, wire_sparse: bool = False,
+                 compute_dtype: str = "f32", attn_backend: str = "auto"):
         if filler not in FILLERS:
             raise ValueError(f"filler={filler!r}, expected one of {FILLERS}")
         self.algo = FedADP(family, client_cfgs, n_samples,
@@ -121,6 +122,10 @@ class FedADPStrategy:
         self.wire = wire                 # client->server payload encoding
         self.wire_tile = wire_tile       # (core.quant; the unified engine
         self.wire_sparse = wire_sparse   # validates the combination)
+        self.compute_dtype = compute_dtype   # local-training precision
+        self.attn_backend = attn_backend     # and attention backend (the
+                                             # unified engine validates +
+                                             # applies both)
         self.family = family
         self.client_cfgs = list(self.algo.client_cfgs)
         self.n_samples = list(n_samples)
@@ -222,7 +227,8 @@ def make_strategy(method: str, family, client_cfgs, n_samples, *,
                   coverage: str = "loose", agg_mode: str = "filler",
                   base_seed: int = 0, agg_layout: str = "auto",
                   k_chunk=None, wire: str = "f32", wire_tile: int = 256,
-                  wire_sparse: bool = False) -> Strategy:
+                  wire_sparse: bool = False, compute_dtype: str = "f32",
+                  attn_backend: str = "auto") -> Strategy:
     """Strategy factory keyed on the method names ``FLRunConfig`` uses."""
     if method == "fedadp":
         return FedADPStrategy(family, client_cfgs, n_samples,
@@ -230,7 +236,9 @@ def make_strategy(method: str, family, client_cfgs, n_samples, *,
                               coverage=coverage, agg_mode=agg_mode,
                               base_seed=base_seed, agg_layout=agg_layout,
                               k_chunk=k_chunk, wire=wire,
-                              wire_tile=wire_tile, wire_sparse=wire_sparse)
+                              wire_tile=wire_tile, wire_sparse=wire_sparse,
+                              compute_dtype=compute_dtype,
+                              attn_backend=attn_backend)
     if method == "standalone":
         return StandaloneStrategy(family, client_cfgs, n_samples)
     if method == "clustered":

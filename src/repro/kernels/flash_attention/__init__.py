@@ -1,0 +1,12 @@
+"""Training-grade flash attention: tiled Pallas fwd/bwd + custom_vjp.
+
+``ops.flash_attention`` is a drop-in for
+``repro.models.attention.blockwise_attention`` (same signature, same
+masking semantics, bit-compatible outputs within f32 rounding) with a
+hand-written backward pass that recomputes the attention probabilities
+from saved log-sum-exp residuals instead of differentiating through the
+online-softmax scan.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

@@ -1,13 +1,21 @@
 """Jitted wrapper matching the model-side decode_attention signature."""
 from __future__ import annotations
 
+from typing import Optional
 
+from repro.kernels.fedavg.fedavg import on_tpu
 from repro.kernels.swa_attention.decode import swa_decode
 
 
 def decode_attention(q, k_cache, v_cache, key_pos, q_pos, *, window: int = 0,
-                     block_s: int = 512, interpret: bool = True):
-    """q: (B, H, hd); caches: (B, S, KV, hd); key_pos: (S,) -> (B, H, hd)."""
+                     block_s: int = 512, interpret: Optional[bool] = None):
+    """q: (B, H, hd); caches: (B, S, KV, hd); key_pos: (S,) -> (B, H, hd).
+
+    ``interpret=None`` auto-selects per the fedavg contract: compiled on
+    TPU, interpreter elsewhere (CPU Pallas execution is interpret-only).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
     B, H, hd = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -16,5 +24,5 @@ def decode_attention(q, k_cache, v_cache, key_pos, q_pos, *, window: int = 0,
     while S % bs:
         bs //= 2
     out = swa_decode(qr, k_cache, v_cache, key_pos, q_pos, window=window,
-                     block_s=max(bs, 1), interpret=interpret)
+                     block_s=max(bs, 1), interpret=bool(interpret))
     return out.reshape(B, H, hd)

@@ -191,6 +191,33 @@ def blockwise_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
     return out[:, :Sq].astype(q.dtype)
 
 
+def attend(q5, k, v, q_pos, kv_pos, *, causal, window, ctx,
+           banded=False, causal_skip=False):
+    """Backend-selected full-sequence attention (DESIGN.md §11): the one
+    entry every train/prefill call site goes through. ``ctx.attn_backend``
+    picks the implementation — "auto" trains through the fused Pallas
+    flash kernel on TPU and keeps this module's ``blockwise_attention``
+    as the XLA path elsewhere; "flash"/"blockwise" force a backend (the
+    flash jnp fallback off-TPU is the vectorised reference, so forcing
+    it is cheap). ``banded``/``causal_skip`` are blockwise-only scan
+    micro-optimisations; the flash kernel masks natively."""
+    backend = getattr(ctx, "attn_backend", "auto")
+    if backend == "auto":
+        from repro.kernels.fedavg.fedavg import on_tpu
+        backend = "flash" if on_tpu() else "blockwise"
+    if backend == "flash":
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q5, k, v, q_pos, kv_pos, causal=causal,
+                               window=window, block_q=ctx.block_q,
+                               block_kv=ctx.block_kv)
+    if backend != "blockwise":
+        raise ValueError(f"unknown attn_backend {backend!r}")
+    return blockwise_attention(q5, k, v, q_pos, kv_pos, causal=causal,
+                               window=window, block_q=ctx.block_q,
+                               block_kv=ctx.block_kv, banded=banded,
+                               causal_skip=causal_skip)
+
+
 def decode_attention(q, k_cache, v_cache, key_pos, q_pos, *, window=0):
     """One-token attention vs a cache. q: (B,H,hd); caches (B,Sc,KV,hd);
     key_pos: (Sc,) absolute positions of cache slots (-1 = unwritten)."""
@@ -263,10 +290,9 @@ def attn_apply_seq(p, cfg, x, positions, *, kind="global", ctx: ShardCtx = CPU_C
     window = cfg.window if kind == "local" else 0
     q5 = q.reshape(B, S, KV, H // KV, hd)
     q5a, ka, va = apply_head_layout_seq(q5, k, v, ctx)
-    out = blockwise_attention(
-        q5a, ka, va, positions, positions, causal=True, window=window,
-        block_q=ctx.block_q, block_kv=ctx.block_kv,
-        banded=ctx.banded_local, causal_skip=ctx.causal_skip)
+    out = attend(q5a, ka, va, positions, positions, causal=True,
+                 window=window, ctx=ctx, banded=ctx.banded_local,
+                 causal_skip=ctx.causal_skip)
     y = tp_row_matmul(out.reshape(B, S, -1), p["wo"], ctx)
     cache = None
     if return_cache:
@@ -361,9 +387,8 @@ def cross_attn_apply(p, cfg, x, kv, *, ctx: ShardCtx = CPU_CTX):
         kpos = jnp.zeros((T,), jnp.int32)
         q5, k5, v5 = apply_head_layout_seq(q[:, :, :, None], kv["k"],
                                            kv["v"], ctx)
-        out = blockwise_attention(q5, k5, v5, qpos, kpos,
-                                  causal=False, window=0, banded=False,
-                                  block_q=ctx.block_q, block_kv=ctx.block_kv)
+        out = attend(q5, k5, v5, qpos, kpos, causal=False, window=0,
+                     ctx=ctx)
     return tp_row_matmul(out.reshape(B, S, -1), p["wo"], ctx)
 
 
@@ -423,9 +448,8 @@ def mla_apply_seq(p, cfg, x, positions, *, ctx: ShardCtx = CPU_CTX,
     q5 = q[:, :, :, None]                                       # (B,S,H,1,qk)
     q5 = q5.reshape(B, S, H, 1, q.shape[-1])
     q5, k, vp = apply_head_layout_seq(q5, k, vp, ctx)           # KV=H here
-    out = blockwise_attention(q5, k, vp, positions, positions, causal=True,
-                              window=0, banded=False, block_q=ctx.block_q,
-                              block_kv=ctx.block_kv, causal_skip=ctx.causal_skip)
+    out = attend(q5, k, vp, positions, positions, causal=True, window=0,
+                 ctx=ctx, causal_skip=ctx.causal_skip)
     out = out[..., : m.v_head_dim]
     y = tp_row_matmul(out.reshape(B, S, -1), p["wo"], ctx)
     cache = None

@@ -208,9 +208,8 @@ def _enc_block_apply(p, cfg, x, positions, *, ctx):
     KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     q5 = q.reshape(B, S, KV, cfg.n_heads // KV, hd)
     q5, k, v = A.apply_head_layout_seq(q5, k, v, ctx)
-    out = A.blockwise_attention(q5, k, v, positions, positions, causal=False,
-                                window=0, banded=False,
-                                block_q=ctx.block_q, block_kv=ctx.block_kv)
+    out = A.attend(q5, k, v, positions, positions, causal=False, window=0,
+                   ctx=ctx)
     x = x + out.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"]
     h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
     return x + mlp_apply(p["mlp"], h2, cfg.mlp_kind, ctx)

@@ -19,6 +19,9 @@ class ShardCtx:
     data_axes: Tuple[str, ...] = ()     # batch axes, e.g. ("pod", "data")
     model_axis: Optional[str] = None    # tensor/expert-parallel axis
     # perf knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    attn_backend: str = "auto"          # "auto" | "flash" | "blockwise":
+                                        # auto = flash Pallas kernel on TPU,
+                                        # blockwise XLA path elsewhere
     banded_local: bool = True           # banded blockwise attn for local layers
     causal_skip: bool = False           # skip fully-masked kv blocks (causal)
     mla_absorb: bool = False            # absorbed MLA decode (w_kv_b folded)

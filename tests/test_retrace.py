@@ -132,6 +132,53 @@ def test_chunked_streaming_rounds_compile_nothing_after_round_one():
     assert set(backend.engine.step_stats()["subset_sizes"]) == {1}
 
 
+def test_flash_bf16_rounds_compile_nothing_after_round_one():
+    """ISSUE 10: the flash-attention training path (``attn_backend=
+    "flash"``) plus mixed precision (``compute_dtype="bf16"``) ride the
+    same per-size jitted step — the custom_vjp kernels, the bf16
+    param/grad casts, and the bf16-dtype model config are all bound at
+    trace time, so rounds >= 2 compile NOTHING new."""
+    from repro.configs import get_config, reduced
+    from repro.core import TransformerFamily, tfamily
+
+    base = reduced(get_config("glm4-9b"), n_units=2, d_model=64)
+    cfgs = [tfamily.make_variant(base, ffn_scale=0.5),
+            tfamily.make_variant(base)]
+    family = TransformerFamily()
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, base.vocab_size, size=(32, 17)).astype(np.int32)
+    data = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    samplers = [ClientSampler(data, p, round_fraction=0.5, batch_size=8,
+                              seed=i)
+                for i, p in enumerate((np.arange(0, 16),
+                                       np.arange(16, 32)))]
+    test = {"tokens": toks[:8, :-1], "labels": toks[:8, 1:]}
+
+    backend = UnifiedBackend(family, cfgs, samplers, local_epochs=1,
+                             lr=0.05, momentum=0.9, compute_dtype="bf16",
+                             attn_backend="flash")
+    strategy = FedADPStrategy(family, cfgs,
+                              [s.n_samples for s in samplers])
+    det = RetraceDetector()
+    rounds_seen = []
+
+    def after_round(rec):
+        rounds_seen.append(rec["round"])
+        if len(rounds_seen) == 1:
+            det.checkpoint()
+
+    fed = Federation(strategy, backend, rounds=3, eval_batch=test,
+                     eval_every=1, callbacks=[after_round])
+    with det:
+        res = fed.run(jax.random.PRNGKey(0))
+
+    assert len(res["history"]) == 3
+    assert det.compiles > 0, "round 1 must have compiled the step"
+    assert det.since_checkpoint == 0, (
+        f"{det.since_checkpoint} compile(s) AFTER round 1 on the "
+        f"flash+bf16 path: {det.events[det._mark:]}")
+
+
 def test_compressed_wire_rounds_compile_nothing_after_round_one():
     """ISSUE 9: the int8 wire path adds an encode jit (core.quant via
     ``engine._wire_encode``), a residual gather/scatter, and the fused
